@@ -1,0 +1,30 @@
+"""Table 5 analog: group size g ablation (error + effective bits)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import attention_output_error, emit, rope_structured_keys
+from repro.core.quantizers import (QuantConfig, decode_keys, encode_keys)
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    b, h, t, d = 2, 4, 2048, 128
+    k = rope_structured_keys(key, b, h, t, d)
+    q = jax.random.normal(jax.random.PRNGKey(1), (b, h, 8, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, h, t, d))
+    for g in (32, 64, 128, 256):
+        for method in ("polar", "kivi"):
+            cfg = QuantConfig(method=method, rho_bits=4, theta_bits=4,
+                              key_bits=4, group_size=g)
+            kt = decode_keys(encode_keys(k, cfg))
+            rec = float(jnp.linalg.norm(k - kt) / jnp.linalg.norm(k))
+            att = attention_output_error(q, k, kt, v)
+            emit(f"group_size/{method}/g{g}", 0.0,
+                 f"bits={cfg.key_bits_per_element:.2f};rec_rel={rec:.4f};"
+                 f"attn_rel={att:.4f}")
+
+
+if __name__ == "__main__":
+    run()

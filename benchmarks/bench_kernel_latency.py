@@ -1,0 +1,77 @@
+"""Table 4 / Figure 3 analog: query-key decode kernel latency.
+
+The paper times Triton kernels on GPU across (batch, context). On this
+CPU container we time the *jit-compiled jnp paths* (fp16-style dense QK,
+dequant-then-matmul, and the LUT path) as a relative-structure check, and
+report the analytic TPU bytes-moved model that the real kernel's roofline
+win comes from (memory-bound decode: bytes ~ latency).
+
+Columns: wall-clock us/call (CPU, relative only) + derived per-token HBM
+bytes for a v5e (absolute, the quantity that sets TPU decode latency).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, rope_structured_keys, time_fn
+from repro.core.quantizers import QuantConfig, encode_polar_keys
+from repro.core import lut as lut_mod
+from repro.core.quantizers import decode_polar_keys
+
+# Llama-3.1-8B attention geometry (paper §4.2): 32 q heads, 8 kv heads, d=128
+QH, HKV, D = 32, 8, 128
+
+
+def hbm_bytes_per_layer(t: int, b: int, method: str, g: int = 128) -> int:
+    """Bytes read from HBM per decode step for the K-score pass (per layer)."""
+    pairs = D // 2
+    if method == "fp16":
+        per_tok = D * 2
+    elif method == "kivi4":
+        per_tok = D // 2 + 4 * D * 2 // g      # 4-bit codes + fp16 z/s per group
+    elif method == "polar44":
+        per_tok = pairs + 4 * pairs * 2 * 2 // g  # packed u8/pair + 4 fp16 stats
+    elif method == "polar33":
+        per_tok = (pairs * 6 + 7) // 8 + 4 * pairs * 2 * 2 // g
+    else:
+        raise ValueError(method)
+    return b * HKV * t * per_tok
+
+
+def run() -> None:
+    g = 128
+    for b, t in [(1, 4096), (8, 4096), (8, 8192), (1, 32768)]:
+        key = jax.random.PRNGKey(0)
+        k = rope_structured_keys(key, b, HKV, t, D)
+        q = jax.random.normal(jax.random.PRNGKey(1), (b, HKV, QH // HKV, D))
+        cfg = QuantConfig(method="polar", group_size=g)
+        pk = encode_polar_keys(k, cfg)
+        pk_exp = jax.tree_util.tree_map(lambda a: a[:, :, None], pk)
+
+        fp_qk = jax.jit(lambda q, k: jnp.einsum("bhqd,bhtd->bhqt", q, k))
+        lut_qk = jax.jit(functools.partial(lut_mod.lut_qk_scores))
+        deq_qk = jax.jit(lambda q, pk: jnp.einsum(
+            "bhqd,bhtd->bhqt", q, decode_polar_keys(pk)))
+
+        us_fp = time_fn(fp_qk, q, k, iters=10)
+        us_lut = time_fn(lut_qk, q, pk_exp, iters=10)
+        us_deq = time_fn(deq_qk, q, pk, iters=10)
+
+        for name, us in [("fp16", us_fp), ("polar44_lut", us_lut),
+                         ("polar44_dequant", us_deq)]:
+            mth = {"fp16": "fp16"}.get(name, "polar44")
+            hbm = hbm_bytes_per_layer(t, b, mth, g)
+            emit(f"qk_latency/b{b}_t{t}/{name}", us,
+                 f"tpu_hbm_bytes={hbm};v5e_mem_us={hbm / 819e9 * 1e6:.2f}")
+        # paper Table 4 headline: byte ratio fp16 / polar
+        ratio = hbm_bytes_per_layer(t, b, "fp16") / hbm_bytes_per_layer(
+            t, b, "polar44", g)
+        emit(f"qk_latency/b{b}_t{t}/bytes_ratio_fp16_over_polar44", 0.0,
+             f"ratio={ratio:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Table 7/9 analog: key-vs-value quantization sensitivity."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, rope_structured_keys
+from repro.core.quantizers import (QuantConfig, decode_keys, decode_values,
+                                   encode_keys, encode_values)
+
+
+def _attn(q, k, v, scale):
+    s = jnp.einsum("bhqd,bhtd->bhqt", q * scale, k)
+    return jnp.einsum("bhqt,bhtd->bhqd", jax.nn.softmax(s, -1), v)
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    b, h, t, d = 2, 4, 2048, 128
+    k = rope_structured_keys(key, b, h, t, d)
+    q = jax.random.normal(jax.random.PRNGKey(1), (b, h, 8, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, h, t, d))
+    scale = d ** -0.5
+    o_ref = _attn(q, k, v, scale)
+
+    kt4 = decode_keys(encode_keys(k, QuantConfig(method="polar", rho_bits=4,
+                                                 theta_bits=4, group_size=128)))
+    kt2 = decode_keys(encode_keys(k, QuantConfig(method="polar", rho_bits=2,
+                                                 theta_bits=2, group_size=128)))
+    vt4 = decode_values(encode_values(v, 4))
+    vt2 = decode_values(encode_values(v, 2))
+
+    cases = {
+        "K16_V16": (k, v), "K16_V4": (k, vt4), "K16_V2": (k, vt2),
+        "K4_V16": (kt4, v), "K4_V4": (kt4, vt4), "K4_V2": (kt4, vt2),
+        "K2_V16": (kt2, v),
+    }
+    for name, (kk, vv) in cases.items():
+        err = float(jnp.linalg.norm(_attn(q, kk, vv, scale) - o_ref)
+                    / jnp.linalg.norm(o_ref))
+        emit(f"kv_sensitivity/{name}", 0.0, f"attn_rel={err:.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,103 @@
+"""Table 1/2/3 analog: quantization quality per method at 3/4-bit.
+
+The paper evaluates LongBench/GSM8K accuracy; offline (no datasets/models)
+we measure the mechanism itself on RoPE-structured keys:
+  * key reconstruction error,
+  * attention-output error (the quantity that drives downstream drops),
+  * next-token top-1 agreement on a briefly-trained tiny LM (logit proxy
+    for the accuracy tables).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import attention_output_error, emit, rope_structured_keys
+from repro.core.quantizers import (QuantConfig, decode_keys, encode_keys)
+
+METHODS_4BIT = [
+    ("int4", QuantConfig(method="int", key_bits=4)),
+    ("zipcache4", QuantConfig(method="zipcache", key_bits=4, group_size=128)),
+    ("kivi4", QuantConfig(method="kivi", key_bits=4, group_size=128)),
+    ("polar44", QuantConfig(method="polar", rho_bits=4, theta_bits=4,
+                            group_size=128)),
+]
+METHODS_3BIT = [
+    ("int3", QuantConfig(method="int", key_bits=3)),
+    ("zipcache3", QuantConfig(method="zipcache", key_bits=3, group_size=128)),
+    ("kivi2", QuantConfig(method="kivi", key_bits=2, group_size=32)),
+    ("polar33", QuantConfig(method="polar", rho_bits=3, theta_bits=3,
+                            group_size=128)),
+]
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    b, h, t, d = 2, 4, 2048, 128
+    k = rope_structured_keys(key, b, h, t, d)
+    q = jax.random.normal(jax.random.PRNGKey(1), (b, h, 8, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, h, t, d))
+
+    for methods, tag in [(METHODS_4BIT, "4bit"), (METHODS_3BIT, "3bit")]:
+        for name, cfg in methods:
+            kt = decode_keys(encode_keys(k, cfg))
+            rec = float(jnp.linalg.norm(k - kt) / jnp.linalg.norm(k))
+            att = attention_output_error(q, k, kt, v)
+            emit(f"quant_error/{tag}/{name}", 0.0,
+                 f"bits={cfg.key_bits_per_element:.2f};rec_rel={rec:.4f};"
+                 f"attn_rel={att:.4f}")
+
+
+def run_reasoning_proxy() -> None:
+    """Table 2/3 proxy: top-1 agreement + logit KL on a trained tiny LM,
+    across generation length (error accumulation, Table 3's concern)."""
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.data import SyntheticLMDataset
+    from repro.models import get_model
+    from repro.train.train_step import (StepConfig, init_train_state,
+                                        make_train_step)
+
+    cfg = reduce_for_smoke(get_config("tinyllama-1.1b"))
+    m = get_model(cfg)
+    ds = SyntheticLMDataset(cfg, global_batch=8, seq_len=64, seed=0)
+    step = make_train_step(m, None, StepConfig(peak_lr=2e-3, warmup_steps=5,
+                                               total_steps=80))
+    state = init_train_state(m, jax.random.PRNGKey(0))
+    for _ in range(80):
+        batch = {kk: jnp.asarray(vv) for kk, vv in ds.next_batch().items()}
+        state, _ = step(state, batch)
+    params = state.params
+
+    def decode_run(method, horizon=16):
+        qcfg = dataclasses.replace(cfg.quant, method=method)
+        mm = get_model(dataclasses.replace(cfg, quant=qcfg))
+        toks = jnp.asarray(ds.local_batch_np(999)["tokens"])[:, :33]
+        st = mm.init_decode_state(toks.shape[0], 96)
+        lg, st = mm.prefill(params, {"tokens": toks[:, :32]}, st)
+        outs = [lg]
+        tok = jnp.argmax(lg, -1)
+        dec = jax.jit(mm.decode)
+        for _ in range(horizon):
+            lg, st = dec(params, st, tok)
+            tok = jnp.argmax(lg, -1)
+            outs.append(lg)
+        return jnp.stack(outs)
+
+    fp = decode_run("none")
+    for method in ("polar", "kivi", "int"):
+        qx = decode_run(method)
+        for lo, hi, tag in [(0, 8, "early"), (8, 17, "late")]:
+            agree = float((jnp.argmax(fp[lo:hi], -1) ==
+                           jnp.argmax(qx[lo:hi], -1)).mean())
+            p = jax.nn.log_softmax(fp[lo:hi].astype(jnp.float32))
+            qlp = jax.nn.log_softmax(qx[lo:hi].astype(jnp.float32))
+            kl = float(jnp.mean(jnp.sum(jnp.exp(p) * (p - qlp), -1)))
+            emit(f"reasoning_proxy/{method}/{tag}", 0.0,
+                 f"top1_agree={agree:.3f};kl={kl:.4f}")
+
+
+if __name__ == "__main__":
+    run()
+    run_reasoning_proxy()

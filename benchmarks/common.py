@@ -1,0 +1,54 @@
+"""Shared benchmark utilities: data generators, timing, CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rope_structured_keys(key, b, h, t, d, outlier_channels=4,
+                         rope_base=10000.0, outlier_scale=10.0):
+    """Keys with the paper's structure: consistent-magnitude pre-RoPE
+    outlier channels in low-frequency rotary pairs, rotated by RoPE."""
+    from repro.models.layers import apply_rope
+    k1, k2, k3 = jax.random.split(key, 3)
+    half = d // 2
+    lo = 3 * half // 4
+    idx = lo + jax.random.choice(k2, half - lo, (outlier_channels,),
+                                 replace=False)
+    mean = jnp.zeros((d,))
+    signs = jax.random.rademacher(k3, (outlier_channels,), jnp.float32)
+    mean = mean.at[idx].set(outlier_scale * signs)
+    pre = jax.random.normal(k1, (b, h, t, d)) + mean
+    pos = jnp.arange(t, dtype=jnp.int32)
+    return apply_rope(pre, pos, rope_base)
+
+
+def attention_output_error(q, k, k_tilde, v, scale=None):
+    """Relative error of softmax(qk)v under key substitution (fp32)."""
+    d = q.shape[-1]
+    scale = d ** -0.5 if scale is None else scale
+    s = jnp.einsum("bhqd,bhtd->bhqt", q * scale, k)
+    st = jnp.einsum("bhqd,bhtd->bhqt", q * scale, k_tilde)
+    o = jnp.einsum("bhqt,bhtd->bhqd", jax.nn.softmax(s, -1), v)
+    ot = jnp.einsum("bhqt,bhtd->bhqd", jax.nn.softmax(st, -1), v)
+    return float(jnp.linalg.norm(o - ot) / jnp.linalg.norm(o))
+
+
+def time_fn(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall-clock microseconds per call (jit'd fn)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")

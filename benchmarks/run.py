@@ -1,0 +1,51 @@
+"""Benchmark entrypoint: one harness per paper table (DESIGN.md §6).
+
+Emits ``name,us_per_call,derived`` CSV rows. Run as:
+    PYTHONPATH=src python -m benchmarks.run [--only <substr>]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="substring filter")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_bitwidth, bench_eviction_compat,
+                            bench_group_size, bench_kernel_latency,
+                            bench_kv_sensitivity, bench_quant_error,
+                            bench_throughput, roofline)
+
+    suites = [
+        ("quant_error(T1)", bench_quant_error.run),
+        ("reasoning_proxy(T2/T3)", bench_quant_error.run_reasoning_proxy),
+        ("kernel_latency(T4/F3)", bench_kernel_latency.run),
+        ("throughput(T4)", bench_throughput.run),
+        ("group_size(T5)", bench_group_size.run),
+        ("bitwidth(T6)", bench_bitwidth.run),
+        ("kv_sensitivity(T7/T9)", bench_kv_sensitivity.run),
+        ("eviction(T8)", bench_eviction_compat.run),
+        ("roofline(dryrun)", roofline.run),
+    ]
+    failures = 0
+    for name, fn in suites:
+        if args.only and args.only not in name:
+            continue
+        print(f"== {name} ==")
+        t0 = time.monotonic()
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+        print(f"== {name} done in {time.monotonic() - t0:.1f}s ==")
+    if failures:
+        raise SystemExit(f"{failures} benchmark suites failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Cross-boundary gradient compression demo (int8 + error feedback).
+
+Simulates the cross-pod (DCN) reduction on an 8-device CPU mesh: per-pod
+partial gradients are int8-compressed before the all-reduce (4x fewer wire
+bytes than fp32), with the quantization error carried forward so SGD
+convergence is preserved (EF-SGD).
+
+    PYTHONPATH=src python examples/grad_compression.py
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.distributed.collectives import ef_allreduce_mean  # noqa: E402
+
+
+def main():
+    mesh = jax.make_mesh((8,), ("dp",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    dim = 512
+    key = jax.random.PRNGKey(0)
+    w_true = jax.random.normal(key, (dim,))
+
+    def per_worker_grads(w, key):
+        """8 workers, each with its own minibatch of a quadratic loss."""
+        xs = jax.random.normal(key, (8, 64, dim))
+        err = xs @ w - xs @ w_true
+        return jnp.einsum("wbd,wb->wd", xs, err) / 64.0
+
+    for compressed in (False, True):
+        w = jnp.zeros((dim,))
+        ef = {"g": jnp.zeros((8, dim), jnp.float32)}
+        k = key
+        wire_bytes = 0
+        for step in range(150):
+            k, sub = jax.random.split(k)
+            g = per_worker_grads(w, sub)
+            if compressed:
+                mean, ef = ef_allreduce_mean({"g": g}, ef, mesh, "dp")
+                g_mean = mean["g"]
+                wire_bytes += g.shape[0] * dim * 1  # int8 payload
+            else:
+                g_mean = jnp.mean(g, 0)
+                wire_bytes += g.shape[0] * dim * 4  # fp32 payload
+            w = w - 0.05 * g_mean
+        final = float(jnp.linalg.norm(w - w_true) / jnp.linalg.norm(w_true))
+        print(f"{'int8+EF' if compressed else 'fp32   '}: final rel err "
+              f"{final:.5f}, wire {wire_bytes / 2**20:.1f} MiB")
+
+
+if __name__ == "__main__":
+    main()

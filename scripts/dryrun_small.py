@@ -1,0 +1,43 @@
+"""Small-mesh shakeout of the dry-run across all archs (dev helper)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+import time
+
+import jax
+
+from repro.launch import dryrun_lib as lib
+from repro.train.train_step import StepConfig
+from repro.configs.base import ShapeConfig
+from repro.configs import ARCH_IDS
+
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+shapes = {
+    "train_4k": ShapeConfig("train_4k", 256, 8, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 1024, 8, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 1024, 8, "decode"),
+    "long_500k": ShapeConfig("long_500k", 8192, 1, "decode"),
+}
+archs = sys.argv[1:] or ARCH_IDS
+fails = 0
+for arch in archs:
+    for sname, so in shapes.items():
+        t0 = time.monotonic()
+        try:
+            rec = lib.run_cell(arch, sname, mesh, "/tmp/dry_small", "test",
+                               StepConfig(), shape_override=so)
+            if rec["status"] == "skip":
+                print(f"{arch:22s} {sname:12s} SKIP", flush=True)
+            else:
+                print(f"{arch:22s} {sname:12s} ok {rec['compile_s']:.1f}s "
+                      f"peak={rec['memory']['peak_per_device']/2**30:.2f}GiB "
+                      f"flops={rec['cost'].get('flops', 0):.3g} "
+                      f"coll={rec['collectives'].get('total_bytes', 0):.3g}",
+                      flush=True)
+        except Exception as e:  # noqa
+            fails += 1
+            import traceback
+            traceback.print_exc()
+            print(f"{arch:22s} {sname:12s} FAIL {repr(e)[:200]}", flush=True)
+print("FAILURES:", fails)

@@ -1,0 +1,98 @@
+"""§Perf hillclimb driver: A/B lowerings for the three chosen cells.
+
+Each variant is lowered+compiled on the production 16x16 mesh and costed
+with the loop-aware HLO model; results land in artifacts/perf/ for
+EXPERIMENTS.md §Perf. Run:
+
+    PYTHONPATH=src python scripts/hillclimb.py [cell...]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.launch import dryrun_lib as lib  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.train.train_step import StepConfig  # noqa: E402
+
+OUT = "artifacts/perf"
+
+# (cell, variant, kwargs) — baselines first; each later variant is the
+# hypothesis -> change of one §Perf iteration.
+CELLS = {
+    # Most representative of the paper's technique: quantized-KV decode.
+    "yi_decode": [
+        ("yi-9b", "decode_32k", "v0_paper_gather_lut",
+         dict(quant_override={"lut_impl": "gather"})),
+        ("yi-9b", "decode_32k", "v1_select_lut",
+         dict(quant_override={"lut_impl": "select"})),
+        ("yi-9b", "decode_32k", "v2_select_v2bit",
+         dict(quant_override={"lut_impl": "select", "value_bits": 2})),
+        ("yi-9b", "decode_32k", "ref_fp16_cache",
+         dict(quant_override={"method": "none"})),
+        ("yi-9b", "decode_32k", "ref_kivi4_cache",
+         dict(quant_override={"method": "kivi"})),
+    ],
+    # Most collective-bound cell (largest all-reduce/all-gather volume).
+    "dbrx_train": [
+        ("dbrx-132b", "train_4k", "v0_mb4_fp32",
+         dict(step_cfg=StepConfig(microbatches=4))),
+        ("dbrx-132b", "train_4k", "v1_mb8",
+         dict(step_cfg=StepConfig(microbatches=8))),
+        ("dbrx-132b", "train_4k", "v2_mb8_bf16params",
+         dict(step_cfg=StepConfig(microbatches=8, param_dtype="bfloat16"))),
+        ("dbrx-132b", "train_4k", "v3_mb8_bf16_noseqshard",
+         dict(step_cfg=StepConfig(microbatches=8, param_dtype="bfloat16",
+                                  seq_shard=False))),
+    ],
+    # Worst roofline fraction: attention-free SSM had no model parallelism.
+    "mamba_train": [
+        ("mamba2-2.7b", "train_4k", "v0_no_ssm_shard",
+         dict(step_cfg=StepConfig(microbatches=4),
+              rules_override={"ssm_heads": None, "ssm_conv": None,
+                              "ssm_inner": None})),
+        ("mamba2-2.7b", "train_4k", "v1_ssm_head_shard",
+         dict(step_cfg=StepConfig(microbatches=4))),
+        ("mamba2-2.7b", "train_4k", "v2_chunk128",
+         dict(step_cfg=StepConfig(microbatches=4),
+              cfg_override={"ssm_chunk": 128})),
+        ("mamba2-2.7b", "train_4k", "v3_chunk512",
+         dict(step_cfg=StepConfig(microbatches=4),
+              cfg_override={"ssm_chunk": 512})),
+    ],
+}
+
+
+def main():
+    assert jax.device_count() == 512
+    mesh = make_production_mesh(multi_pod=False)
+    wanted = sys.argv[1:] or list(CELLS)
+    for cell in wanted:
+        for arch, shape, variant, kw in CELLS[cell]:
+            step_cfg = kw.pop("step_cfg", StepConfig(microbatches=4))
+            t0 = time.monotonic()
+            try:
+                rec = lib.run_cell(arch, shape, mesh, OUT, cell,
+                                   step_cfg, variant=variant, **kw)
+            except Exception as e:  # noqa: BLE001
+                print(f"[hillclimb] {cell}/{variant}: FAIL {repr(e)[:200]}",
+                      flush=True)
+                continue
+            c = rec["cost"]
+            terms = lib.roofline_terms(rec, 256)
+            print(f"[hillclimb] {cell}/{variant}: "
+                  f"flops={c['flops']:.3g} bytes={c['bytes accessed']:.3g} "
+                  f"coll={rec['collectives']['total_bytes']:.3g} | "
+                  f"compute={terms['compute_s']:.3g}s "
+                  f"mem={terms['memory_s']:.3g}s "
+                  f"coll={terms['collective_s']:.3g}s "
+                  f"peak={rec['memory']['peak_per_device'] / 2**30:.2f}GiB "
+                  f"({time.monotonic() - t0:.0f}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Generate the EXPERIMENTS.md data tables from dry-run/perf artifacts."""
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import ARCH_IDS, SHAPES  # noqa: E402
+from benchmarks.roofline import analyze, model_flops  # noqa: E402
+
+
+def dryrun_table(mesh_tag: str, devices: int) -> str:
+    rows = analyze(mesh_tag, devices)
+    out = [f"| arch | shape | compile | peak/dev | fits 16G | HLO flops/dev | "
+           f"HBM bytes/dev | coll bytes/dev |",
+           "|---|---|---|---|---|---|---|---|"]
+    for arch in ARCH_IDS:
+        for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            path = f"artifacts/dryrun/{mesh_tag}/{arch}/{shape}.json"
+            if not os.path.exists(path):
+                continue
+            d = json.load(open(path))
+            if d["status"] == "skip":
+                out.append(f"| {arch} | {shape} | SKIP | — | — | — | — | — |")
+                continue
+            m = d["memory"]
+            out.append(
+                f"| {arch} | {shape} | {d['compile_s']:.1f}s "
+                f"| {m['peak_per_device']/2**30:.2f}GiB "
+                f"| {'yes' if m['fits_16g_hbm'] else '**NO**'} "
+                f"| {d['cost']['flops']:.3g} "
+                f"| {d['cost']['bytes accessed']:.3g} "
+                f"| {d['collectives']['total_bytes']:.3g} |")
+    return "\n".join(out)
+
+
+def roofline_table(mesh_tag: str, devices: int) -> str:
+    rows = analyze(mesh_tag, devices)
+    out = ["| arch | shape | compute_s | memory_s | collective_s | dominant | "
+           "useful ratio | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | SKIP | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} "
+            f"| {r['memory_s']:.2e} | {r['collective_s']:.2e} "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def perf_table(cell: str) -> str:
+    d = f"artifacts/perf/{cell}"
+    out = ["| variant | compute_s | memory_s | collective_s | peak/dev | fits |",
+           "|---|---|---|---|---|---|"]
+    rows = []
+    for arch in os.listdir(d):
+        for f in sorted(os.listdir(os.path.join(d, arch))):
+            rec = json.load(open(os.path.join(d, arch, f)))
+            from repro.launch.dryrun_lib import roofline_terms
+            t = roofline_terms(rec, 256)
+            rows.append((rec.get("variant", f),
+                         t["compute_s"], t["memory_s"], t["collective_s"],
+                         rec["memory"]["peak_per_device"] / 2 ** 30,
+                         rec["memory"]["fits_16g_hbm"]))
+    for v, c, m, co, p, fit in sorted(rows):
+        out.append(f"| {v} | {c:.3g} | {m:.3g} | {co:.3g} | {p:.2f}GiB "
+                   f"| {'yes' if fit else 'no'} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("## single-pod 16x16\n")
+        print(dryrun_table("single_16x16", 256))
+        print("\n## multi-pod 2x16x16\n")
+        print(dryrun_table("multi_2x16x16", 512))
+    if which in ("all", "roofline"):
+        print("\n## roofline single-pod\n")
+        print(roofline_table("single_16x16", 256))
+    if which in ("all", "perf"):
+        for cell in ("yi_decode", "dbrx_train", "mamba_train"):
+            print(f"\n## {cell}\n")
+            print(perf_table(cell))

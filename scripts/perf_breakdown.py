@@ -1,0 +1,48 @@
+"""Per-op traffic/collective breakdown of one dry-run cell (§Perf tooling).
+
+    PYTHONPATH=src python scripts/perf_breakdown.py <arch> <shape> \
+        [--key hbm_bytes|collective_bytes|flops] [--mb 4] [...]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.launch import dryrun_lib as lib  # noqa: E402
+from repro.launch import hlo_cost  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.train.train_step import StepConfig  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--key", default="hbm_bytes")
+    ap.add_argument("--mb", type=int, default=4)
+    ap.add_argument("--depth", type=int, default=4)
+    ap.add_argument("--seq-shard", type=int, default=1)
+    ap.add_argument("--param-dtype", default="float32")
+    ap.add_argument("--quant", default="{}", help="json quant override")
+    ap.add_argument("--cfg", default="{}", help="json cfg override")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh()
+    step_cfg = StepConfig(microbatches=args.mb, seq_shard=bool(args.seq_shard),
+                          param_dtype=args.param_dtype)
+    lowered = lib.lower_cell(args.arch, args.shape, mesh, step_cfg,
+                             quant_override=json.loads(args.quant) or None,
+                             cfg_override=json.loads(args.cfg) or None)
+    txt = lowered.compile().as_text()
+    rows = hlo_cost.breakdown(txt, key=args.key, depth=args.depth, top=25)
+    total = sum(v for _, v in rows) or 1.0
+    print(f"# {args.arch} x {args.shape} — top {args.key} contributors")
+    for name, val in rows:
+        print(f"{val:12.3e}  {val / total * 100:5.1f}%  {name}")
+
+
+if __name__ == "__main__":
+    main()

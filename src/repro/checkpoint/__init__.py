@@ -1,0 +1,4 @@
+"""Mesh-agnostic sharded checkpointing with atomic manifests."""
+from repro.checkpoint.checkpointing import (  # noqa: F401
+    save_checkpoint, restore_checkpoint, latest_step, CheckpointManager,
+)

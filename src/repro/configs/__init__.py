@@ -1,0 +1,18 @@
+"""Architecture registry: one module per assigned architecture."""
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, ShapeConfig, SHAPES, get_config, list_configs,
+    reduce_for_smoke,
+)
+
+# Importing each module registers its CONFIG.
+from repro.configs import (  # noqa: F401
+    seamless_m4t_medium, dbrx_132b, qwen2_moe_a2p7b, granite_8b,
+    tinyllama_1p1b, qwen1p5_4b, yi_9b, paligemma_3b, mamba2_2p7b,
+    recurrentgemma_9b, llama3_8b,
+)
+
+ARCH_IDS = [
+    "seamless-m4t-medium", "dbrx-132b", "qwen2-moe-a2.7b", "granite-8b",
+    "tinyllama-1.1b", "qwen1.5-4b", "yi-9b", "paligemma-3b", "mamba2-2.7b",
+    "recurrentgemma-9b",
+]

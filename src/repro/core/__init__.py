@@ -1,0 +1,11 @@
+"""PolarQuant core: polar transform, quantizers, quantized KV cache, LUT decode."""
+from repro.core.quantizers import (  # noqa: F401
+    QuantConfig, PolarKeys, ChannelKeys, TokenKeys, ZipKeys, QuantizedValues,
+    encode_keys, decode_keys, encode_polar_keys, decode_polar_keys,
+    encode_values, decode_values,
+)
+from repro.core.kv_cache import (  # noqa: F401
+    KVCache, init_cache, append, prefill, decode_attention,
+)
+from repro.core.attention import flash_attention, reference_attention  # noqa: F401
+from repro.core.lut import lut_qk_scores, dequant_qk_scores, build_angle_table  # noqa: F401

@@ -1,0 +1,198 @@
+"""Chunked online-softmax (flash) attention with a custom VJP.
+
+Pure-JAX flash attention used by every model for training and prefill:
+O(T) memory (only ``(out, lse)`` saved for backward; scores recomputed per
+chunk in the backward scan). Supports GQA natively, and the mask modes the
+model zoo needs:
+
+* ``causal``       — autoregressive LM
+* ``full``         — encoder / cross-attention
+* ``prefix``       — prefix-LM (PaliGemma): bidirectional over the first
+                     ``prefix_len`` positions, causal after
+* ``local``        — sliding-window causal (RecurrentGemma local attention)
+
+`q`: (B, H, Tq, d); `k`, `v`: (B, Hkv, Tk, d); H % Hkv == 0.
+Scores computed in fp32; output cast back to q.dtype.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import ctx
+
+Array = jax.Array
+NEG_INF = -1e30
+
+# Sharding boundary discipline: the fwd output and the bwd cotangents are
+# pinned to head-sharding so a sequence-sharded residual stream reshards
+# ONCE per layer at the attention boundary — without this, the seq<->head
+# conflict propagates INTO the k-chunk scan and XLA inserts a full
+# rematerialization copy per chunk iteration (measured at 47% of dbrx
+# train_4k collective bytes; see EXPERIMENTS.md §Perf).
+_HEADS = ("batch", "heads", None, None)
+_KV_HEADS = ("batch", "kv_heads", None, None)
+
+
+def _mask_bias(mode: str, window: int, q_idx: Array, k_idx: Array,
+               prefix_len: Optional[Array], kv_len: int) -> Array:
+    """Boolean validity -> additive bias. q_idx: (Tq,), k_idx: (ck,).
+
+    Returns (B?, Tq, ck) bias; prefix mode adds a batch dim via prefix_len.
+    """
+    qi = q_idx[:, None]
+    ki = k_idx[None, :]
+    valid = ki < kv_len  # padding chunks
+    if mode == "causal":
+        valid = valid & (qi >= ki)
+    elif mode == "local":
+        valid = valid & (qi >= ki) & (qi - ki < window)
+    elif mode == "prefix":
+        causal = qi >= ki
+        if prefix_len is None:
+            raise ValueError("prefix mask requires prefix_len")
+        bidir = ki < prefix_len[:, None, None]  # (B,1,1)
+        valid = valid & (causal | bidir)
+    elif mode == "full":
+        pass
+    else:
+        raise ValueError(f"unknown mask mode {mode!r}")
+    return jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _chunk_kv(x: Array, chunk: int) -> tuple[Array, int]:
+    """(B,H,Tk,d) -> (nc, B, H, ck, d), padding Tk up to a chunk multiple."""
+    b, h, t, d = x.shape
+    nc = -(-t // chunk)
+    pad = nc * chunk - t
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    return x.reshape(b, h, nc, chunk, d).transpose(2, 0, 1, 3, 4), t
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _flash(mode: str, window: int, scale: float, chunk: int,
+           q: Array, k: Array, v: Array, prefix_len: Optional[Array]) -> Array:
+    out, _ = _flash_fwd_impl(mode, window, scale, chunk, q, k, v, prefix_len)
+    return out
+
+
+def _flash_fwd_impl(mode, window, scale, chunk, q, k, v, prefix_len):
+    b, h, tq, d = q.shape
+    hkv = k.shape[1]
+    qpk = h // hkv
+    q5 = (q.astype(jnp.float32) * scale).reshape(b, hkv, qpk, tq, d)
+    kc, tk = _chunk_kv(k.astype(jnp.float32), chunk)
+    vc, _ = _chunk_kv(v.astype(jnp.float32), chunk)
+    q_idx = jnp.arange(tq, dtype=jnp.int32)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        j, kj, vj = inp
+        k_idx = j * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        bias = _mask_bias(mode, window, q_idx, k_idx, prefix_len, tk)
+        if bias.ndim == 3:  # (B,Tq,ck) -> (B,1,1,Tq,ck)
+            bias = bias[:, None, None]
+        s = jnp.einsum("bhqtd,bhcd->bhqtc", q5, kj) + bias      # (B,Hkv,Qh,Tq,ck)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bhqtc,bhcd->bhqtd", p, vj)
+        return (m_new, l, acc), None
+
+    nc = kc.shape[0]
+    init = (jnp.full((b, hkv, qpk, tq), NEG_INF, jnp.float32),
+            jnp.zeros((b, hkv, qpk, tq), jnp.float32),
+            jnp.zeros((b, hkv, qpk, tq, d), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        body, init, (jnp.arange(nc, dtype=jnp.int32), kc, vc))
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / l_safe[..., None]).reshape(b, h, tq, d).astype(q.dtype)
+    lse = m + jnp.log(l_safe)
+    return out, lse
+
+
+def _flash_fwd(mode, window, scale, chunk, q, k, v, prefix_len):
+    out, lse = _flash_fwd_impl(mode, window, scale, chunk, q, k, v, prefix_len)
+    return out, (q, k, v, prefix_len, out, lse)
+
+
+def _flash_bwd(mode, window, scale, chunk, res, dout):
+    q, k, v, prefix_len, out, lse = res
+    dout = ctx.shard(dout, _HEADS)
+    b, h, tq, d = q.shape
+    hkv = k.shape[1]
+    qpk = h // hkv
+    q5 = q.astype(jnp.float32).reshape(b, hkv, qpk, tq, d)
+    do5 = dout.astype(jnp.float32).reshape(b, hkv, qpk, tq, d)
+    o5 = out.astype(jnp.float32).reshape(b, hkv, qpk, tq, d)
+    delta = jnp.sum(do5 * o5, axis=-1)                           # (B,Hkv,Qh,Tq)
+    kc, tk = _chunk_kv(k.astype(jnp.float32), chunk)
+    vc, _ = _chunk_kv(v.astype(jnp.float32), chunk)
+    q_idx = jnp.arange(tq, dtype=jnp.int32)
+
+    def body(dq, inp):
+        j, kj, vj = inp
+        k_idx = j * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        bias = _mask_bias(mode, window, q_idx, k_idx, prefix_len, tk)
+        if bias.ndim == 3:
+            bias = bias[:, None, None]
+        s = jnp.einsum("bhqtd,bhcd->bhqtc", q5 * scale, kj) + bias
+        p = jnp.exp(s - lse[..., None])                          # (B,Hkv,Qh,Tq,ck)
+        dv_j = jnp.einsum("bhqtc,bhqtd->bhcd", p, do5)
+        dp = jnp.einsum("bhqtd,bhcd->bhqtc", do5, vj)
+        ds = p * (dp - delta[..., None]) * scale
+        dq = dq + jnp.einsum("bhqtc,bhcd->bhqtd", ds, kj)
+        dk_j = jnp.einsum("bhqtc,bhqtd->bhcd", ds, q5)
+        return dq, (dk_j, dv_j)
+
+    nc = kc.shape[0]
+    dq5 = jnp.zeros((b, hkv, qpk, tq, d), jnp.float32)
+    dq5, (dkc, dvc) = jax.lax.scan(
+        body, dq5, (jnp.arange(nc, dtype=jnp.int32), kc, vc))
+    dk = dkc.transpose(1, 2, 0, 3, 4).reshape(b, hkv, nc * chunk, d)[:, :, :tk]
+    dv = dvc.transpose(1, 2, 0, 3, 4).reshape(b, hkv, nc * chunk, d)[:, :, :tk]
+    dq = ctx.shard(dq5.reshape(b, h, tq, d).astype(q.dtype), _HEADS)
+    dk = ctx.shard(dk.astype(k.dtype), _KV_HEADS)
+    dv = ctx.shard(dv.astype(v.dtype), _KV_HEADS)
+    return dq, dk, dv, None
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(
+    q: Array, k: Array, v: Array, *, mode: str = "causal", window: int = 0,
+    scale: float | None = None, chunk: int = 512,
+    prefix_len: Optional[Array] = None,
+) -> Array:
+    """Memory-efficient attention. See module docstring for shapes/modes."""
+    d = q.shape[-1]
+    scale = d ** -0.5 if scale is None else scale
+    chunk = min(chunk, k.shape[2]) if k.shape[2] > 0 else chunk
+    out = _flash(mode, window, scale, chunk, q, k, v, prefix_len)
+    return ctx.shard(out, _HEADS)
+
+
+def reference_attention(
+    q: Array, k: Array, v: Array, *, mode: str = "causal", window: int = 0,
+    scale: float | None = None, prefix_len: Optional[Array] = None,
+) -> Array:
+    """O(T^2)-memory oracle used by tests."""
+    b, h, tq, d = q.shape
+    hkv = k.shape[1]
+    qpk = h // hkv
+    scale = d ** -0.5 if scale is None else scale
+    q5 = (q.astype(jnp.float32) * scale).reshape(b, hkv, qpk, tq, d)
+    s = jnp.einsum("bhqtd,bhcd->bhqtc", q5, k.astype(jnp.float32))
+    bias = _mask_bias(mode, window, jnp.arange(tq), jnp.arange(k.shape[2]),
+                      prefix_len, k.shape[2])
+    if bias.ndim == 3:
+        bias = bias[:, None, None]
+    p = jax.nn.softmax(s + bias, axis=-1)
+    out = jnp.einsum("bhqtc,bhcd->bhqtd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, tq, d).astype(q.dtype)

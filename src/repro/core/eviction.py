@@ -1,0 +1,50 @@
+"""SnapKV-style token eviction (paper §5.2 / Table 8 compatibility).
+
+Selects the prompt tokens that receive the most attention from an
+observation window at the end of the prompt, keeps those plus the window,
+and drops the rest — composable with any cache quantization policy (the
+kept keys are quantized as usual).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def snapkv_scores(q_obs: Array, k: Array, scale: float | None = None,
+                  kernel: int = 5) -> Array:
+    """Accumulated attention from the observation queries to every key.
+
+    q_obs: (B, H, W, d) last-window queries; k: (B, Hkv, T, d).
+    Returns (B, Hkv, T) pooled importance scores (max-pooled over a small
+    window along T, as SnapKV does, to keep local context clusters)."""
+    b, h, w, d = q_obs.shape
+    hkv = k.shape[1]
+    scale = d ** -0.5 if scale is None else scale
+    q5 = (q_obs * scale).reshape(b, hkv, h // hkv, w, d).astype(jnp.float32)
+    s = jnp.einsum("bhqwd,bhtd->bhqwt", q5, k.astype(jnp.float32))
+    # causal-ish: observation window attends to all prompt tokens
+    p = jax.nn.softmax(s, axis=-1)
+    imp = p.sum(axis=(2, 3))                       # (B, Hkv, T)
+    # local max-pool along T
+    pooled = imp
+    for off in range(1, kernel // 2 + 1):
+        pooled = jnp.maximum(pooled, jnp.roll(imp, off, axis=-1))
+        pooled = jnp.maximum(pooled, jnp.roll(imp, -off, axis=-1))
+    return pooled
+
+
+def snapkv_select(q_obs: Array, k: Array, budget: int,
+                  obs_window: int) -> Array:
+    """Boolean keep-mask (B, Hkv, T): top-(budget - obs_window) scored
+    prompt tokens plus the observation window itself."""
+    b, hkv, t, _ = k.shape
+    scores = snapkv_scores(q_obs, k)
+    scores = scores.at[:, :, t - obs_window :].set(jnp.inf)  # always keep
+    k_keep = min(budget, t)
+    _, idx = jax.lax.top_k(scores, k_keep)
+    mask = jnp.zeros((b, hkv, t), bool)
+    return mask.at[jnp.arange(b)[:, None, None],
+                   jnp.arange(hkv)[None, :, None], idx].set(True)

@@ -1,0 +1,423 @@
+"""Quantized KV cache with group-wise key quantization and fp residual buffer.
+
+Layout (all shapes static; ``length`` is the only traced scalar):
+
+* grouped key methods (polar / kivi / zipcache):
+    - ``key_codes``   polar: (B, Hkv, G, g, d/2) uint8 (packed rho<<t|theta)
+                      kivi/zipcache: (B, Hkv, G, g, d) uint8
+    - ``key_scales``  dict of per-group stat arrays (method-specific)
+    - ``key_residual``(B, Hkv, g, d) fp — tokens of the not-yet-full group
+* token-wise key methods (int) and fp ("none"):
+    - ``key_codes`` (B, Hkv, T, d) uint8 / ``key_fp`` (B, Hkv, T, d)
+* values: token-wise quantized (``value_bits>0``) or fp, token-major
+  (B, Hkv, T, d) — independent of key grouping.
+
+Absolute-position bookkeeping: ``flushed = (length // g) * g`` tokens live in
+quantized groups; positions ``[flushed, length)`` live in the residual. The
+decode-attention score assembly exploits ``pos - flushed == pos % g`` inside
+the residual window, so residual scores scatter into the absolute score
+vector with a tile+reshape — no dynamic slicing (see ``assemble_scores``).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import pytree_dataclass, static_field
+from repro.core import quantizers as qz
+from repro.core import lut as lut_mod
+from repro.core.quantizers import QuantConfig
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+@pytree_dataclass
+class KVCache:
+    key_codes: Any          # Array or None
+    key_scales: Any         # dict[str, Array] or None
+    key_residual: Any       # Array or None
+    key_fp: Any             # Array or None
+    value_codes: Any        # Array or None
+    value_scale: Any
+    value_zero: Any
+    value_fp: Any           # Array or None
+    length: Array           # () int32
+    cfg: QuantConfig = static_field(default=QuantConfig())
+    max_len: int = static_field(default=0)
+
+    @property
+    def batch(self) -> int:
+        return self._kv_leaf().shape[0]
+
+    @property
+    def num_kv_heads(self) -> int:
+        return self._kv_leaf().shape[1]
+
+    @property
+    def head_dim(self) -> int:
+        v = self.value_codes if self.value_codes is not None else self.value_fp
+        return v.shape[-1]
+
+    def _kv_leaf(self) -> Array:
+        for leaf in (self.key_codes, self.key_fp):
+            if leaf is not None:
+                return leaf
+        raise ValueError("empty cache")
+
+    @property
+    def grouped(self) -> bool:
+        return self.cfg.method in ("polar", "kivi", "zipcache")
+
+
+def _grouped_key_buffers(cfg: QuantConfig, b: int, h: int, d: int, gcount: int,
+                         sdt) -> tuple[Array, dict[str, Array]]:
+    g = cfg.group_size
+    if cfg.method == "polar":
+        p = d // 2
+        codes = jnp.zeros((b, h, gcount, g, p), jnp.uint8)
+        stat = lambda: jnp.zeros((b, h, gcount, 1, p), sdt)
+        scales = {"rho_scale": stat(), "rho_zero": stat(),
+                  "theta_scale": stat(), "theta_zero": stat()}
+    elif cfg.method == "kivi":
+        codes = jnp.zeros((b, h, gcount, g, d), jnp.uint8)
+        stat = lambda: jnp.zeros((b, h, gcount, 1, d), sdt)
+        scales = {"scale": stat(), "zero": stat()}
+    elif cfg.method == "zipcache":
+        codes = jnp.zeros((b, h, gcount, g, d), jnp.uint8)
+        scales = {"token_scale": jnp.zeros((b, h, gcount, g, 1), sdt),
+                  "token_zero": jnp.zeros((b, h, gcount, g, 1), sdt),
+                  "channel_norm": jnp.zeros((b, h, gcount, 1, d), sdt)}
+    else:
+        raise ValueError(cfg.method)
+    return codes, scales
+
+
+def init_cache(cfg: QuantConfig, batch: int, num_kv_heads: int, head_dim: int,
+               max_len: int, dtype=jnp.bfloat16) -> KVCache:
+    """Allocate an empty cache of capacity ``max_len`` tokens."""
+    b, h, d = batch, num_kv_heads, head_dim
+    g = cfg.group_size
+    sdt = jnp.dtype(cfg.scale_dtype)
+    rdt = jnp.dtype(cfg.residual_dtype)
+    key_codes = key_scales = key_residual = key_fp = None
+    if cfg.method in ("polar", "kivi", "zipcache"):
+        if max_len % g:
+            raise ValueError(f"max_len {max_len} must be a multiple of group {g}")
+        key_codes, key_scales = _grouped_key_buffers(cfg, b, h, d, max_len // g, sdt)
+        key_residual = jnp.zeros((b, h, g, d), rdt)
+    elif cfg.method == "int":
+        key_codes = jnp.zeros((b, h, max_len, d), jnp.uint8)
+        key_scales = {"scale": jnp.zeros((b, h, max_len, 1), sdt),
+                      "zero": jnp.zeros((b, h, max_len, 1), sdt)}
+    elif cfg.method == "none":
+        key_fp = jnp.zeros((b, h, max_len, d), dtype)
+    else:
+        raise ValueError(cfg.method)
+
+    value_codes = value_scale = value_zero = value_fp = None
+    if cfg.value_bits > 0:
+        value_codes = jnp.zeros((b, h, max_len, d), jnp.uint8)
+        value_scale = jnp.zeros((b, h, max_len, 1), sdt)
+        value_zero = jnp.zeros((b, h, max_len, 1), sdt)
+    else:
+        value_fp = jnp.zeros((b, h, max_len, d), dtype)
+
+    return KVCache(key_codes=key_codes, key_scales=key_scales,
+                   key_residual=key_residual, key_fp=key_fp,
+                   value_codes=value_codes, value_scale=value_scale,
+                   value_zero=value_zero, value_fp=value_fp,
+                   length=jnp.zeros((), jnp.int32), cfg=cfg, max_len=max_len)
+
+
+# ---------------------------------------------------------------------------
+# Encoding helpers shared by append/prefill
+# ---------------------------------------------------------------------------
+
+
+def _encode_group(k_tokens: Array, cfg: QuantConfig) -> tuple[Array, dict[str, Array]]:
+    """Quantize (..., T, d) with T a multiple of g -> (codes, scales), where
+    codes: (..., G, g, ·) and scales: (..., G, 1|g, ·)."""
+    qk = qz.encode_keys(k_tokens, cfg)
+    if cfg.method == "polar":
+        return qk.codes, {"rho_scale": qk.rho_scale, "rho_zero": qk.rho_zero,
+                          "theta_scale": qk.theta_scale, "theta_zero": qk.theta_zero}
+    if cfg.method == "kivi":
+        return qk.codes, {"scale": qk.scale, "zero": qk.zero}
+    if cfg.method == "zipcache":
+        return qk.codes, {"token_scale": qk.token_scale, "token_zero": qk.token_zero,
+                          "channel_norm": qk.channel_norm}
+    raise ValueError(cfg.method)
+
+
+def _dus(buf: Array, update: Array, axis: int, index: Array) -> Array:
+    idx = [jnp.zeros((), jnp.int32)] * buf.ndim
+    idx[axis] = index.astype(jnp.int32)
+    return jax.lax.dynamic_update_slice(buf, update.astype(buf.dtype), idx)
+
+
+# ---------------------------------------------------------------------------
+# Append (decode step: one token)
+# ---------------------------------------------------------------------------
+
+
+def append(cache: KVCache, k_new: Array, v_new: Array) -> KVCache:
+    """Append one token. ``k_new``/``v_new``: (B, Hkv, 1, d) post-RoPE.
+
+    Token-major slots are written modulo capacity, so the same code path
+    serves unbounded (linear) caches and ring (local-window) caches.
+    """
+    cfg = cache.cfg
+    pos = cache.length
+    tok_slot = pos % cache.max_len
+    updates: dict[str, Any] = {}
+
+    # --- values (token-major) ---
+    if cfg.value_bits > 0:
+        qv = qz.encode_values(v_new, cfg.value_bits, cfg.scale_dtype)
+        updates["value_codes"] = _dus(cache.value_codes, qv.codes, 2, tok_slot)
+        updates["value_scale"] = _dus(cache.value_scale, qv.scale, 2, tok_slot)
+        updates["value_zero"] = _dus(cache.value_zero, qv.zero, 2, tok_slot)
+    else:
+        updates["value_fp"] = _dus(cache.value_fp, v_new, 2, tok_slot)
+
+    # --- keys ---
+    if cfg.method == "none":
+        updates["key_fp"] = _dus(cache.key_fp, k_new, 2, tok_slot)
+    elif cfg.method == "int":
+        qk = qz.encode_int_keys(k_new, cfg)
+        updates["key_codes"] = _dus(cache.key_codes, qk.codes, 2, tok_slot)
+        updates["key_scales"] = {
+            "scale": _dus(cache.key_scales["scale"], qk.scale, 2, tok_slot),
+            "zero": _dus(cache.key_scales["zero"], qk.zero, 2, tok_slot)}
+    else:
+        g = cfg.group_size
+        slot = pos % g
+        residual = _dus(cache.key_residual, k_new, 2, slot)
+
+        def flush(args):
+            codes_buf, scales_buf, res = args
+            # res (B,H,g,d) -> codes (B,H,1,g,*) / scales (B,H,1,1|g,*)
+            codes, scales = _encode_group(res, cfg)
+            gidx = (pos // g) % codes_buf.shape[2]
+            codes_buf = _dus(codes_buf, codes, 2, gidx)
+            scales_buf = {k: _dus(scales_buf[k], scales[k], 2, gidx)
+                          for k in scales_buf}
+            return codes_buf, scales_buf
+
+        def no_flush(args):
+            codes_buf, scales_buf, _ = args
+            return codes_buf, scales_buf
+
+        codes_buf, scales_buf = jax.lax.cond(
+            slot == g - 1, flush, no_flush,
+            (cache.key_codes, cache.key_scales, residual))
+        updates["key_codes"] = codes_buf
+        updates["key_scales"] = scales_buf
+        updates["key_residual"] = residual
+
+    import dataclasses
+    return dataclasses.replace(cache, length=pos + 1, **updates)
+
+
+# ---------------------------------------------------------------------------
+# Prefill (bulk insert of T tokens into an empty cache)
+# ---------------------------------------------------------------------------
+
+
+def _ring_segments(t: int, cap: int) -> list[tuple[int, int, int]]:
+    """Static (src_lo, src_hi, dst_lo) copy segments mapping positions
+    [max(0, t-cap), t) onto slots pos % cap. At most two segments."""
+    start = max(0, t - cap)
+    if start == 0:
+        return [(0, t, 0)]
+    p0 = -(-start // cap) * cap  # first position mapping to slot 0
+    segs = []
+    if p0 > start:
+        segs.append((start, min(p0, t), start % cap))
+    if t > p0:
+        segs.append((p0, t, 0))
+    return segs
+
+
+def prefill(cache: KVCache, k: Array, v: Array) -> KVCache:
+    """Fill an empty cache with ``T`` tokens at once. k/v: (B, Hkv, T, d).
+
+    T may exceed capacity for ring (local-window) caches: only the last
+    ``max_len`` tokens are stored token-major at slots ``pos % max_len``;
+    key groups (absolute-aligned) keep the last ``max_len/g`` groups — the
+    few grouped keys older than the window are masked out at attention time
+    (see ``position_masks``).
+    """
+    cfg = cache.cfg
+    b, h, t, d = k.shape
+    cap = cache.max_len
+    g = cfg.group_size if cache.grouped else 1
+    off = max(0, t - cap)          # tokens before `off` fall out of the ring
+    segs = _ring_segments(t, cap)
+    updates: dict[str, Any] = {}
+
+    def write_tok(buf, src):
+        for lo, hi, dst in segs:
+            buf = buf.at[:, :, dst : dst + (hi - lo)].set(
+                src[:, :, lo - off : hi - off].astype(buf.dtype))
+        return buf
+
+    if cfg.value_bits > 0:
+        qv = qz.encode_values(v[:, :, off:], cfg.value_bits, cfg.scale_dtype)
+        updates["value_codes"] = write_tok(cache.value_codes, qv.codes)
+        updates["value_scale"] = write_tok(cache.value_scale, qv.scale)
+        updates["value_zero"] = write_tok(cache.value_zero, qv.zero)
+    else:
+        updates["value_fp"] = write_tok(cache.value_fp, v[:, :, off:])
+
+    if cfg.method == "none":
+        updates["key_fp"] = write_tok(cache.key_fp, k[:, :, off:])
+    elif cfg.method == "int":
+        qk = qz.encode_int_keys(k[:, :, off:], cfg)
+        updates["key_codes"] = write_tok(cache.key_codes, qk.codes)
+        updates["key_scales"] = {
+            "scale": write_tok(cache.key_scales["scale"], qk.scale),
+            "zero": write_tok(cache.key_scales["zero"], qk.zero)}
+    else:
+        nfull = t // g
+        goff = max(0, nfull - cap // g)   # group ring offset (group units)
+        rem = t - nfull * g
+        scales_buf = dict(cache.key_scales)
+        codes_buf = cache.key_codes
+        # Round through the residual dtype so bulk prefill and token-by-token
+        # append produce bit-identical codes (streaming parity invariant).
+        k_rdt = k[:, :, goff * g :].astype(jnp.dtype(cfg.residual_dtype))
+        if nfull > goff:
+            codes, scales = _encode_group(k_rdt[:, :, : (nfull - goff) * g], cfg)
+            for lo, hi, dst in _ring_segments(nfull, cap // g):
+                n = hi - lo
+                codes_buf = codes_buf.at[:, :, dst : dst + n].set(
+                    codes[:, :, lo - goff : hi - goff])
+                scales_buf = {key: scales_buf[key].at[:, :, dst : dst + n].set(
+                    scales[key][:, :, lo - goff : hi - goff].astype(
+                        scales_buf[key].dtype)) for key in scales_buf}
+        residual = cache.key_residual
+        if rem:
+            residual = residual.at[:, :, :rem].set(
+                k_rdt[:, :, (nfull - goff) * g :])
+        updates["key_codes"] = codes_buf
+        updates["key_scales"] = scales_buf
+        updates["key_residual"] = residual
+
+    import dataclasses
+    return dataclasses.replace(
+        cache, length=jnp.asarray(t, jnp.int32), **updates)
+
+
+# ---------------------------------------------------------------------------
+# Score computation over the cache
+# ---------------------------------------------------------------------------
+
+
+def _grouped_container(cache: KVCache):
+    """Rebuild the method-specific quantized-keys container from cache buffers."""
+    cfg = cache.cfg
+    if cfg.method == "polar":
+        return qz.PolarKeys(codes=cache.key_codes, rho_bits=cfg.rho_bits,
+                            theta_bits=cfg.theta_bits, pairing=cfg.pairing,
+                            **cache.key_scales)
+    if cfg.method == "kivi":
+        return qz.ChannelKeys(codes=cache.key_codes, bits=cfg.key_bits,
+                              **cache.key_scales)
+    if cfg.method == "zipcache":
+        return qz.ZipKeys(codes=cache.key_codes, bits=cfg.key_bits,
+                          **cache.key_scales)
+    raise ValueError(cfg.method)
+
+
+def grouped_scores(cache: KVCache, q: Array, use_lut: bool = True) -> Array:
+    """Scores of q against all quantized groups. q: (B, Hkv, Qh, d) ->
+    (B, Hkv, Qh, max_len)."""
+    cfg = cache.cfg
+    if cfg.method == "polar" and use_lut:
+        pk = _grouped_container(cache)
+        pk_exp = jax.tree_util.tree_map(lambda a: a[:, :, None], pk)
+        return lut_mod.lut_qk_scores(q, pk_exp, impl=cfg.lut_impl)
+    if cfg.method in ("polar", "kivi", "zipcache"):
+        k_tilde = qz.decode_keys(_grouped_container(cache))  # (B,H,T,d)
+    elif cfg.method == "int":
+        k_tilde = qz.decode_token_keys(
+            qz.TokenKeys(codes=cache.key_codes, bits=cfg.key_bits,
+                         **cache.key_scales))
+    else:
+        k_tilde = cache.key_fp.astype(jnp.float32)
+    return jnp.einsum("bhqd,bhtd->bhqt", q.astype(jnp.float32), k_tilde)
+
+
+def position_masks(t_cap: int, g: int, length: Array, window: int):
+    """Validity masks over buffer slots, for linear AND ring caches.
+
+    Ring semantics (capacity == window): slot ``i`` of the token-major value
+    buffer holds absolute position ``i + floor((length-1-i)/t_cap)*t_cap``;
+    key-group slots wrap by ``flushed`` instead. A slot's key expires from
+    the window exactly when its value slot is overwritten (capacity ==
+    window), so grouped-validity and residual-membership never overlap.
+    Linear caches are the degenerate case (positions == slot index).
+
+    Returns (valid_grouped, in_residual, flushed): (t_cap,) bools + scalar.
+    """
+    i = jnp.arange(t_cap, dtype=jnp.int32)
+    flushed = (length // g) * g
+    abs_k = i + ((flushed - 1 - i) // t_cap) * t_cap
+    abs_v = i + ((length - 1 - i) // t_cap) * t_cap
+    valid_g = (abs_k >= 0) & (abs_k < flushed)
+    if window > 0:
+        valid_g = valid_g & (abs_k >= length - window)
+    in_res = (abs_v >= flushed) & (abs_v < length)
+    return valid_g, in_res, flushed
+
+
+def decode_attention(cache: KVCache, q: Array, scale: float | None = None,
+                     use_lut: bool = True, window: int = 0) -> Array:
+    """Single-step attention of query q (B, Hq, d) over the cache.
+
+    Returns (B, Hq, d) in q.dtype. Handles GQA by folding query heads onto
+    their KV head. Scores over quantized groups use the LUT path (polar);
+    residual tokens are attended at full precision. ``window > 0`` applies
+    ring-buffer local-attention semantics (capacity must equal window).
+    """
+    cfg = cache.cfg
+    b, hq, d = q.shape
+    hkv = cache.num_kv_heads
+    qpk = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    q4 = (q.astype(jnp.float32) * scale).reshape(b, hkv, qpk, d)
+    t_cap = cache.max_len
+    length = cache.length
+
+    if cache.grouped:
+        g = cfg.group_size
+        valid_g, in_res, _ = position_masks(t_cap, g, length, window)
+        s_grouped = grouped_scores(cache, q4, use_lut)             # (B,Hkv,Qh,T)
+        res = cache.key_residual.astype(jnp.float32)               # (B,Hkv,g,d)
+        s_res = jnp.einsum("bhqd,bhgd->bhqg", q4, res)             # (B,Hkv,Qh,g)
+        s_res_tiled = jnp.tile(s_res, (1, 1, 1, t_cap // g))       # slot % g trick
+        scores = jnp.where(in_res, s_res_tiled,
+                           jnp.where(valid_g, s_grouped, NEG_INF))
+    else:
+        valid_g, in_res, _ = position_masks(t_cap, 1, length, window)
+        scores = grouped_scores(cache, q4, use_lut)
+        scores = jnp.where(valid_g | in_res, scores, NEG_INF)
+
+    probs = jax.nn.softmax(scores, axis=-1)                        # fp32
+    if cfg.value_bits > 0:
+        v_tilde = qz.decode_values(qz.QuantizedValues(
+            codes=cache.value_codes, scale=cache.value_scale,
+            zero=cache.value_zero, bits=cfg.value_bits))
+    else:
+        v_tilde = cache.value_fp.astype(jnp.float32)
+    out = jnp.einsum("bhqt,bhtd->bhqd", probs, v_tilde)
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def cache_logical_bits(cache: KVCache) -> float:
+    """Logical bits/key-element of this cache's policy (paper's accounting)."""
+    return cache.cfg.key_bits_per_element

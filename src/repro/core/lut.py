@@ -1,0 +1,92 @@
+"""LUT-based query-key scores for PolarQuant decode (paper §3.3 + Appendix A).
+
+Core identity: for a quantized key group, the dequantized key sub-vector at
+channel pair ``j`` is ``(rho~ * cos(th~ - pi), rho~ * sin(th~ - pi))`` where
+``th~`` comes from a finite set of ``2^t`` per-(group, channel) states and
+``rho~`` is *affine* in its code. Hence
+
+    q . K~_n  =  sum_j  rho~_n[j] * A[j, theta_code_n[j]]
+    A[j, a]   =  q_x[j] * cos(th~(a)[j] - pi) + q_y[j] * sin(th~(a)[j] - pi)
+
+``A`` is a (d/2, 2^t) table built once per (query, group) — O(d * 2^t) work
+amortized over the g tokens of the group. The radius never needs a table
+(one fused multiply-add per element). This module is the pure-jnp reference;
+``repro/kernels/polar_decode.py`` is the Pallas TPU kernel with the same
+semantics (gather realized as a compare/select tree — see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import polar
+from repro.core.quantizers import PolarKeys, decode_polar_keys
+
+Array = jax.Array
+
+
+def build_angle_table(
+    q: Array, theta_scale: Array, theta_zero: Array, theta_bits: int,
+    pairing: str = "half",
+) -> Array:
+    """Per-(group, channel-pair, angle-state) partial dot products.
+
+    Args:
+      q: query ``(..., d)`` (post-RoPE), broadcastable against the group dims.
+      theta_scale/theta_zero: ``(..., G, 1, P)`` group stats.
+      theta_bits: t.
+
+    Returns:
+      ``A`` of shape ``(..., G, P, 2**t)`` in fp32.
+    """
+    qx, qy = polar.split_pairs(q.astype(jnp.float32), pairing)  # (..., P)
+    states = jnp.arange(1 << theta_bits, dtype=jnp.float32)      # (S,)
+    ts = theta_scale.astype(jnp.float32)[..., 0, :, None]        # (..., G, P, 1)
+    tz = theta_zero.astype(jnp.float32)[..., 0, :, None]
+    theta_tilde = (states + 0.5) * ts + tz                       # (..., G, P, S)
+    cos_t = jnp.cos(theta_tilde - jnp.pi)
+    sin_t = jnp.sin(theta_tilde - jnp.pi)
+    return qx[..., None, :, None] * cos_t + qy[..., None, :, None] * sin_t
+
+
+def lut_qk_scores(q: Array, pk: PolarKeys, impl: str = "select") -> Array:
+    """q . K~ for every cached token via the angle LUT.
+
+    Args:
+      q: ``(..., d)`` single query vector per leading index.
+      pk: PolarKeys with arrays ``(..., G, g, P)``.
+      impl: ``"select"`` evaluates the LUT as a compare/select tree over the
+        2^t angle states (mirrors the Pallas kernel; fuses without
+        materializing a (..., g, P, 2^t) gather operand — ~2^t x less HBM
+        traffic at the HLO level). ``"gather"`` is the naive
+        take_along_axis formulation (kept for A/B, see EXPERIMENTS §Perf).
+
+    Returns:
+      scores ``(..., T)`` fp32, T = G*g.
+    """
+    a_table = build_angle_table(q, pk.theta_scale, pk.theta_zero,
+                                pk.theta_bits, pk.pairing)        # (..., G, P, S)
+    tcodes = pk.theta_codes().astype(jnp.int32)                   # (..., G, g, P)
+    lead = jnp.broadcast_shapes(a_table.shape[:-3], tcodes.shape[:-3])
+    gcount, g, p = tcodes.shape[-3:]
+    s = a_table.shape[-1]
+    if impl == "select":
+        gathered = jnp.zeros((*lead, gcount, g, p), jnp.float32)
+        for a in range(s):
+            gathered = gathered + jnp.where(
+                tcodes == a, a_table[..., :, None, :, a], 0.0)
+    else:
+        a_exp = jnp.broadcast_to(a_table[..., :, None, :, :],
+                                 (*lead, gcount, g, p, s))
+        tc = jnp.broadcast_to(tcodes[..., None], (*lead, gcount, g, p, 1))
+        gathered = jnp.take_along_axis(a_exp, tc, axis=-1)[..., 0]
+    rho = (pk.rho_codes().astype(jnp.float32) + 0.5) * \
+        pk.rho_scale.astype(jnp.float32) + pk.rho_zero.astype(jnp.float32)
+    scores = jnp.sum(rho * gathered, axis=-1)                     # (..., G, g)
+    return scores.reshape(*lead, gcount * g)
+
+
+def dequant_qk_scores(q: Array, pk: PolarKeys) -> Array:
+    """Oracle: dequantize-then-matmul (paper's 'conventional approach')."""
+    k_tilde = decode_polar_keys(pk)                               # (..., T, d)
+    return jnp.einsum("...d,...td->...t", q.astype(jnp.float32), k_tilde)

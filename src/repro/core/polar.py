@@ -1,0 +1,100 @@
+"""Polar transformation of RoPE-paired key dimensions (PolarQuant §3.2).
+
+A post-RoPE key vector ``K ∈ R^d`` is viewed as ``d/2`` two-dimensional
+sub-vectors. Each sub-vector is the pair of dimensions rotated together by
+one RoPE 2x2 rotary block. Two pairing conventions exist in the wild:
+
+* ``"half"``  — dims ``(j, j + d/2)`` rotate together (llama ``rotate_half``).
+* ``"adjacent"`` — dims ``(2j, 2j+1)`` rotate together (the matrix form, Eq. 1).
+
+The paper's analysis (footnote 5) notes both are equivalent for the method;
+the pairing here MUST match the RoPE implementation of the model so that
+rotation is magnitude-preserving within a pair. Our models use ``"half"``.
+
+The transform maps a pair ``(x, y)`` to polar coordinates:
+
+    rho   = sqrt(x^2 + y^2)
+    theta = atan2(y, x) + pi          in (0, 2*pi]
+
+and back via ``x = rho*cos(theta - pi)``... — we keep the ``+pi`` shift
+exactly as the paper does and invert it symmetrically, i.e. dequantization
+uses ``cos(theta_tilde)`` / ``sin(theta_tilde)`` on the *shifted* angle with
+the shift folded into the reconstruction (cos(t - pi) = -cos(t)). To stay
+bit-faithful to the paper's appendix code (which uses cos/sin of the shifted
+angle directly and absorbs the sign into the quantization grid), we follow
+the appendix: theta in (0, 2pi] is quantized as-is and reconstruction uses
+cos/sin of theta_tilde *minus pi* — equivalently we store theta' = theta - pi
+= atan2(y, x) in (-pi, pi] internally. Both forms are affine-equivalent; the
+quantization grid is identical because the zero-point absorbs the shift.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def split_pairs(k: Array, pairing: str = "half") -> tuple[Array, Array]:
+    """Split the last dim of ``k`` into the (x, y) components of RoPE pairs.
+
+    Returns two arrays of shape ``(..., d/2)``.
+    """
+    d = k.shape[-1]
+    if d % 2:
+        raise ValueError(f"head_dim must be even, got {d}")
+    if pairing == "half":
+        return k[..., : d // 2], k[..., d // 2 :]
+    elif pairing == "adjacent":
+        return k[..., 0::2], k[..., 1::2]
+    raise ValueError(f"unknown pairing {pairing!r}")
+
+
+def merge_pairs(x: Array, y: Array, pairing: str = "half") -> Array:
+    """Inverse of :func:`split_pairs`."""
+    if pairing == "half":
+        return jnp.concatenate([x, y], axis=-1)
+    elif pairing == "adjacent":
+        stacked = jnp.stack([x, y], axis=-1)  # (..., d/2, 2)
+        return stacked.reshape(*stacked.shape[:-2], -1)
+    raise ValueError(f"unknown pairing {pairing!r}")
+
+
+def to_polar(k: Array, pairing: str = "half") -> tuple[Array, Array]:
+    """Cartesian -> polar. Returns (rho, theta) each of shape (..., d/2).
+
+    theta follows the paper's convention: atan2(y, x) + pi, in (0, 2*pi].
+    Computation in fp32 for numerical stability regardless of input dtype.
+    """
+    x, y = split_pairs(k, pairing)
+    x32 = x.astype(jnp.float32)
+    y32 = y.astype(jnp.float32)
+    # XLA CPU's arctan2 returns NaN for denormal operands — flush them
+    # (< smallest normal, i.e. numerically irrelevant for keys) to zero so
+    # a stray denormal can't poison quantization stats / attention scores.
+    tiny = jnp.float32(1.1754944e-38)
+    x32 = jnp.where(jnp.abs(x32) < tiny, 0.0, x32)
+    y32 = jnp.where(jnp.abs(y32) < tiny, 0.0, y32)
+    rho = jnp.sqrt(x32 * x32 + y32 * y32)
+    theta = jnp.arctan2(y32, x32) + jnp.pi
+    # zero-radius pairs have an undefined angle — pin to the shifted zero
+    theta = jnp.where(rho > 0, theta, jnp.pi)
+    return rho, theta
+
+
+def from_polar(rho: Array, theta: Array, pairing: str = "half",
+               dtype: jnp.dtype | None = None) -> Array:
+    """Polar -> Cartesian, inverting the ``+pi`` shift of :func:`to_polar`."""
+    t = theta.astype(jnp.float32) - jnp.pi
+    r = rho.astype(jnp.float32)
+    x = r * jnp.cos(t)
+    y = r * jnp.sin(t)
+    out = merge_pairs(x, y, pairing)
+    return out.astype(dtype) if dtype is not None else out
+
+
+def pair_cos_sin(theta: Array) -> tuple[Array, Array]:
+    """cos/sin of a paper-convention (shifted) angle: returns cos(theta - pi),
+    sin(theta - pi) — i.e. the direction of the original vector."""
+    t = theta.astype(jnp.float32) - jnp.pi
+    return jnp.cos(t), jnp.sin(t)

@@ -1,0 +1,330 @@
+"""KV-cache quantizers: PolarQuant + the paper's baselines (Int-N, KIVI, ZipCache).
+
+All quantizers operate on tensors shaped ``(..., T, d)`` — arbitrary leading
+batch/head dims, a token axis ``T`` and a head dim ``d``. Group-wise methods
+require ``T % group_size == 0`` (the cache layer owns the fp residual buffer
+for remainder tokens, per the paper's "residual length").
+
+Conventions (see DESIGN.md §8):
+
+* PolarQuant uses a *mid-rise* uniform quantizer: ``s = (max-min)/2^b``,
+  ``code = floor((x-z)/s)``, ``x~ = (code + 1/2) * s + z`` — exactly the
+  appendix PyTorch code. The paper's printed zero-point formula is a typo
+  (it repeats the scale); we use ``z = min`` like every other quantizer in
+  the paper.
+* Int-N / KIVI / ZipCache / value quantization use the *mid-tread* form:
+  ``s = (max-min)/(2^b - 1)``, ``code = round((x-z)/s)``, ``x~ = code*s + z``.
+"""
+from __future__ import annotations
+
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import pytree_dataclass, static_field
+from repro.core import polar
+
+Array = jax.Array
+_EPS = 1e-8
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@pytree_dataclass
+class QuantConfig:
+    """Cache-quantization policy. A pure-static pytree (safe to close over)."""
+
+    method: str = static_field(default="polar")  # none|int|kivi|zipcache|polar
+    rho_bits: int = static_field(default=4)      # polar radius bits (r)
+    theta_bits: int = static_field(default=4)    # polar angle bits (t)
+    key_bits: int = static_field(default=4)      # int/kivi/zipcache key bits
+    value_bits: int = static_field(default=0)    # 0 => values stay fp
+    group_size: int = static_field(default=128)  # tokens per quantization group
+    pairing: str = static_field(default="half")  # RoPE pairing convention
+    scale_dtype: str = static_field(default="float32")
+    theta_stats: str = static_field(default="group")  # group|fixed (beyond-paper)
+    residual_dtype: str = static_field(default="bfloat16")
+    lut_impl: str = static_field(default="select")    # select|gather (§Perf A/B)
+
+    @property
+    def quantizes_keys(self) -> bool:
+        return self.method != "none"
+
+    @property
+    def key_bits_per_element(self) -> float:
+        """Logical key bits/element incl. quantization-parameter overhead."""
+        if self.method == "none":
+            return 16.0
+        if self.method == "polar":
+            payload = (self.rho_bits + self.theta_bits) / 2.0
+            # rho (z,s) + theta (z,s): 4 fp16 params per channel-pair per
+            # group => 4*16 bits / (2 dims * g tokens) = 32/g per element.
+            overhead = 64.0 / (2.0 * self.group_size)
+        elif self.method == "int":
+            payload = float(self.key_bits)
+            overhead = 32.0 / 128.0  # per-token z,s over d=128 (paper §B.1)
+        else:  # kivi / zipcache
+            payload = float(self.key_bits)
+            overhead = 32.0 / self.group_size
+        return payload + overhead
+
+    @property
+    def lut_states(self) -> int:
+        return 1 << (self.rho_bits + self.theta_bits)
+
+
+# ---------------------------------------------------------------------------
+# Generic affine helpers
+# ---------------------------------------------------------------------------
+
+
+def affine_encode(
+    x: Array,
+    bits: int,
+    axis: int | tuple[int, ...],
+    mode: Literal["midrise", "midtread"],
+    scale_dtype: jnp.dtype = jnp.float32,
+) -> tuple[Array, Array, Array]:
+    """Quantize ``x`` along ``axis`` (stats reduced over it, keepdims).
+
+    Returns (codes uint8, scale, zero).
+    """
+    x32 = x.astype(jnp.float32)
+    mn = jnp.min(x32, axis=axis, keepdims=True)
+    mx = jnp.max(x32, axis=axis, keepdims=True)
+    levels = (1 << bits) if mode == "midrise" else (1 << bits) - 1
+    scale = jnp.maximum((mx - mn) / levels, _EPS)
+    if mode == "midrise":
+        q = jnp.floor((x32 - mn) / scale)
+    else:
+        q = jnp.round((x32 - mn) / scale)
+    codes = jnp.clip(q, 0, (1 << bits) - 1).astype(jnp.uint8)
+    return codes, scale.astype(scale_dtype), mn.astype(scale_dtype)
+
+
+def affine_decode(
+    codes: Array, scale: Array, zero: Array, mode: Literal["midrise", "midtread"]
+) -> Array:
+    c = codes.astype(jnp.float32)
+    if mode == "midrise":
+        c = c + 0.5
+    return c * scale.astype(jnp.float32) + zero.astype(jnp.float32)
+
+
+def _group(x: Array, g: int) -> Array:
+    """(..., T, d) -> (..., G, g, d). Requires T % g == 0."""
+    *lead, t, d = x.shape
+    if t % g:
+        raise ValueError(f"token count {t} not divisible by group size {g}")
+    return x.reshape(*lead, t // g, g, d)
+
+
+def _ungroup(x: Array) -> Array:
+    *lead, gcount, g, d = x.shape
+    return x.reshape(*lead, gcount * g, d)
+
+
+# ---------------------------------------------------------------------------
+# PolarQuant keys
+# ---------------------------------------------------------------------------
+
+
+@pytree_dataclass
+class PolarKeys:
+    """Quantized key groups in polar representation.
+
+    ``codes`` packs the pair (rho_code << theta_bits) | theta_code into one
+    uint8 per channel pair — requires rho_bits + theta_bits <= 8 (all paper
+    configs satisfy this), giving (r+t)/2 physical bits per key element.
+    """
+
+    codes: Array        # (..., G, g, P) uint8
+    rho_scale: Array    # (..., G, 1, P)
+    rho_zero: Array     # (..., G, 1, P)
+    theta_scale: Array  # (..., G, 1, P)
+    theta_zero: Array   # (..., G, 1, P)
+    rho_bits: int = static_field(default=4)
+    theta_bits: int = static_field(default=4)
+    pairing: str = static_field(default="half")
+
+    @property
+    def num_tokens(self) -> int:
+        return self.codes.shape[-3] * self.codes.shape[-2]
+
+    @property
+    def head_dim(self) -> int:
+        return 2 * self.codes.shape[-1]
+
+    def rho_codes(self) -> Array:
+        return (self.codes >> self.theta_bits).astype(jnp.uint8)
+
+    def theta_codes(self) -> Array:
+        return (self.codes & ((1 << self.theta_bits) - 1)).astype(jnp.uint8)
+
+
+def encode_polar_keys(k: Array, cfg: QuantConfig) -> PolarKeys:
+    """Quantize post-RoPE keys ``(..., T, d)`` into :class:`PolarKeys`."""
+    if cfg.rho_bits + cfg.theta_bits > 8:
+        raise ValueError("rho_bits + theta_bits must be <= 8 for packed codes")
+    scale_dtype = jnp.dtype(cfg.scale_dtype)
+    rho, theta = polar.to_polar(k, cfg.pairing)  # (..., T, P)
+    rho_g = _group(rho, cfg.group_size)          # (..., G, g, P)
+    theta_g = _group(theta, cfg.group_size)
+    rc, rs, rz = affine_encode(rho_g, cfg.rho_bits, axis=-2, mode="midrise",
+                               scale_dtype=scale_dtype)
+    if cfg.theta_stats == "fixed":
+        # Beyond-paper variant: theta has known support (0, 2pi] — use a
+        # fixed grid, saving the per-group theta stats (and their overhead).
+        ts = jnp.full_like(rs, 2.0 * jnp.pi / (1 << cfg.theta_bits))
+        tz = jnp.zeros_like(rz)
+        q = jnp.floor(theta_g / (2.0 * jnp.pi / (1 << cfg.theta_bits)))
+        tc = jnp.clip(q, 0, (1 << cfg.theta_bits) - 1).astype(jnp.uint8)
+    else:
+        tc, ts, tz = affine_encode(theta_g, cfg.theta_bits, axis=-2,
+                                   mode="midrise", scale_dtype=scale_dtype)
+    codes = ((rc << cfg.theta_bits) | tc).astype(jnp.uint8)
+    return PolarKeys(codes=codes, rho_scale=rs, rho_zero=rz, theta_scale=ts,
+                     theta_zero=tz, rho_bits=cfg.rho_bits,
+                     theta_bits=cfg.theta_bits, pairing=cfg.pairing)
+
+
+def decode_polar_keys(pk: PolarKeys, dtype: jnp.dtype = jnp.float32) -> Array:
+    """Dequantize back to Cartesian keys ``(..., T, d)``."""
+    rho = affine_decode(pk.rho_codes(), pk.rho_scale, pk.rho_zero, "midrise")
+    theta = affine_decode(pk.theta_codes(), pk.theta_scale, pk.theta_zero, "midrise")
+    k = polar.from_polar(rho, theta, pk.pairing)
+    return _ungroup(k).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# KIVI keys (channel-wise over token groups)
+# ---------------------------------------------------------------------------
+
+
+@pytree_dataclass
+class ChannelKeys:
+    codes: Array   # (..., G, g, d) uint8
+    scale: Array   # (..., G, 1, d)
+    zero: Array    # (..., G, 1, d)
+    bits: int = static_field(default=4)
+
+
+def encode_kivi_keys(k: Array, cfg: QuantConfig) -> ChannelKeys:
+    kg = _group(k, cfg.group_size)
+    c, s, z = affine_encode(kg, cfg.key_bits, axis=-2, mode="midtread",
+                            scale_dtype=jnp.dtype(cfg.scale_dtype))
+    return ChannelKeys(codes=c, scale=s, zero=z, bits=cfg.key_bits)
+
+
+def decode_channel_keys(ck: ChannelKeys, dtype: jnp.dtype = jnp.float32) -> Array:
+    return _ungroup(affine_decode(ck.codes, ck.scale, ck.zero, "midtread")).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Int-N keys (token-wise)
+# ---------------------------------------------------------------------------
+
+
+@pytree_dataclass
+class TokenKeys:
+    codes: Array   # (..., T, d) uint8
+    scale: Array   # (..., T, 1)
+    zero: Array    # (..., T, 1)
+    bits: int = static_field(default=4)
+
+
+def encode_int_keys(k: Array, cfg: QuantConfig) -> TokenKeys:
+    c, s, z = affine_encode(k, cfg.key_bits, axis=-1, mode="midtread",
+                            scale_dtype=jnp.dtype(cfg.scale_dtype))
+    return TokenKeys(codes=c, scale=s, zero=z, bits=cfg.key_bits)
+
+
+def decode_token_keys(tk: TokenKeys, dtype: jnp.dtype = jnp.float32) -> Array:
+    return affine_decode(tk.codes, tk.scale, tk.zero, "midtread").astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# ZipCache keys (channel-separable token-wise)
+# ---------------------------------------------------------------------------
+
+
+@pytree_dataclass
+class ZipKeys:
+    codes: Array         # (..., G, g, d) uint8
+    token_scale: Array   # (..., G, g, 1)
+    token_zero: Array    # (..., G, g, 1)
+    channel_norm: Array  # (..., G, 1, d)   sqrt(max |K_channel|) per group
+    bits: int = static_field(default=4)
+
+
+def encode_zipcache_keys(k: Array, cfg: QuantConfig) -> ZipKeys:
+    kg = _group(k, cfg.group_size).astype(jnp.float32)
+    norm = jnp.sqrt(jnp.maximum(jnp.max(jnp.abs(kg), axis=-2, keepdims=True), _EPS))
+    normalized = kg / norm
+    c, s, z = affine_encode(normalized, cfg.key_bits, axis=-1, mode="midtread",
+                            scale_dtype=jnp.dtype(cfg.scale_dtype))
+    return ZipKeys(codes=c, token_scale=s, token_zero=z,
+                   channel_norm=norm.astype(jnp.dtype(cfg.scale_dtype)),
+                   bits=cfg.key_bits)
+
+
+def decode_zipcache_keys(zk: ZipKeys, dtype: jnp.dtype = jnp.float32) -> Array:
+    normalized = affine_decode(zk.codes, zk.token_scale, zk.token_zero, "midtread")
+    return _ungroup(normalized * zk.channel_norm.astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Values (token-wise, KIVI §2) — shared by all methods
+# ---------------------------------------------------------------------------
+
+
+@pytree_dataclass
+class QuantizedValues:
+    codes: Array   # (..., T, d) uint8
+    scale: Array   # (..., T, 1)
+    zero: Array    # (..., T, 1)
+    bits: int = static_field(default=4)
+
+
+def encode_values(v: Array, bits: int, scale_dtype: str = "float32") -> QuantizedValues:
+    c, s, z = affine_encode(v, bits, axis=-1, mode="midtread",
+                            scale_dtype=jnp.dtype(scale_dtype))
+    return QuantizedValues(codes=c, scale=s, zero=z, bits=bits)
+
+
+def decode_values(qv: QuantizedValues, dtype: jnp.dtype = jnp.float32) -> Array:
+    return affine_decode(qv.codes, qv.scale, qv.zero, "midtread").astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+KEY_ENCODERS = {
+    "polar": encode_polar_keys,
+    "kivi": encode_kivi_keys,
+    "int": encode_int_keys,
+    "zipcache": encode_zipcache_keys,
+}
+
+KEY_DECODERS = {
+    PolarKeys: decode_polar_keys,
+    ChannelKeys: decode_channel_keys,
+    TokenKeys: decode_token_keys,
+    ZipKeys: decode_zipcache_keys,
+}
+
+
+def encode_keys(k: Array, cfg: QuantConfig):
+    if cfg.method == "none":
+        return k
+    return KEY_ENCODERS[cfg.method](k, cfg)
+
+
+def decode_keys(qk, dtype: jnp.dtype = jnp.float32) -> Array:
+    if isinstance(qk, jax.Array):
+        return qk.astype(dtype)
+    return KEY_DECODERS[type(qk)](qk, dtype)

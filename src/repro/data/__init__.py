@@ -1,0 +1,2 @@
+"""Data pipeline."""
+from repro.data.pipeline import SyntheticLMDataset, DataState  # noqa: F401

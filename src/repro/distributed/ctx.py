@@ -1,0 +1,55 @@
+"""Logical-axis sharding context.
+
+Models annotate activations with *logical* axis names; the launcher installs
+a rule set mapping logical names to mesh axes (see distributed/sharding.py).
+Outside any context (unit tests, single-device runs) annotations are no-ops,
+so model code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[dict]:
+    return getattr(_state, "rules", None)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh, rules: dict[str, object]):
+    """rules: logical axis name -> mesh axis (str | tuple | None)."""
+    prev = (current_mesh(), current_rules())
+    _state.mesh, _state.rules = mesh, rules
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def resolve(logical: Sequence[Optional[str]]) -> Optional[P]:
+    rules = current_rules()
+    if rules is None:
+        return None
+    return P(*[rules.get(name) if name else None for name in logical])
+
+
+def shard(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """Annotate ``x`` with the sharding implied by logical axis names.
+
+    No-op when no sharding context is installed or ranks mismatch.
+    """
+    spec = resolve(logical)
+    mesh = current_mesh()
+    if spec is None or mesh is None or len(logical) != x.ndim:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,205 @@
+"""Parameter / activation / cache sharding rules (FSDP x TP x pod).
+
+Strategy (DESIGN.md §4):
+
+* **Params** — every weight gets ZeRO-3-style FSDP over the combined
+  (``pod``, ``data``) axes on its largest eligible dim, plus tensor
+  parallelism over ``model`` on the canonical matmul dim (name-pattern
+  table, negative axis indices so scanned (L, ...) stacks match too).
+  Divisibility is checked per-arch; ineligible dims gracefully fall back.
+* **Activations** — logical-axis rules installed via ctx.use_sharding:
+  batch over (pod, data); heads/ff/experts over model when divisible.
+* **Decode caches** — batch over (pod, data); the *sequence/group* axis
+  over model (context-parallel decode: softmax stats + output psum are the
+  only collectives, each tiny compared to sharding channels, which would
+  all-reduce full score tensors).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import data_axes
+
+# name pattern -> axis (negative index) that carries tensor parallelism
+_TP_RULES: list[tuple[str, int]] = [
+    (r".*(wq|wg|wu|w_in|w_gate)$", -1),   # column parallel
+    (r".*(wo|wd|w_out)$", -2),            # row parallel
+    (r".*(wk|wv)$", -1),
+    (r".*(bq)$", -1),
+    (r".*lm_head$", -1),                  # vocab column parallel
+    (r".*conv_w$", -1),                   # depthwise conv channels
+    (r".*(rg_w|ig_w)$", -3),              # RG-LRU block-diagonal blocks
+    (r".*(rg_b|ig_b|lam|conv_b|norm_w)$", -1),
+]
+
+_NO_FSDP = re.compile(r".*(ln1|ln2|ln_x|ln|final_norm|enc_norm|A_log|dt_bias|D)$")
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _divides(dim: int, size: int) -> bool:
+    return size > 0 and dim % size == 0
+
+
+def param_pspec(path: str, shape: tuple[int, ...], mesh: Mesh,
+                cfg: Optional[ModelConfig] = None) -> P:
+    """Resolve one parameter's PartitionSpec."""
+    model_n = mesh.shape.get("model", 1)
+    daxes = data_axes(mesh)
+    fsdp_n = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+    spec: list = [None] * len(shape)
+
+    # --- tensor parallelism ---
+    tp_axis = None
+    for pat, ax in _TP_RULES:
+        if re.match(pat, path):
+            tp_axis = ax
+            break
+    # MoE expert tensors: prefer expert parallelism when E % model == 0
+    if cfg is not None and cfg.family == "moe" and re.search(
+            r"ffn/w[gud]$", path) and len(shape) >= 3:
+        if _divides(shape[-3], model_n):
+            tp_axis = -3
+    if tp_axis is not None and len(shape) >= abs(tp_axis):
+        if _divides(shape[tp_axis], model_n):
+            spec[tp_axis] = "model"
+        else:
+            tp_axis = None
+
+    # --- FSDP on the largest remaining eligible dim ---
+    if not _NO_FSDP.match(path) and daxes:
+        best, best_size = None, 0
+        for i, dim in enumerate(shape):
+            ni = i - len(shape)
+            if spec[ni] is not None:
+                continue
+            if _divides(dim, fsdp_n) and dim > best_size:
+                best, best_size = ni, dim
+        if best is not None:
+            spec[best] = daxes if len(daxes) > 1 else daxes[0]
+    return P(*spec)
+
+
+def param_pspecs(params_shapes: Any, mesh: Mesh,
+                 cfg: Optional[ModelConfig] = None) -> Any:
+    """Tree of PartitionSpecs matching a params (shape) tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_pspec(_path_str(path), leaf.shape, mesh, cfg),
+        params_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Activation logical rules
+# ---------------------------------------------------------------------------
+
+
+def logical_rules(cfg: ModelConfig, mesh: Mesh, global_batch: int) -> dict:
+    model_n = mesh.shape.get("model", 1)
+    daxes = data_axes(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+    batch_axes = (daxes if len(daxes) > 1 else daxes[0]) if daxes else None
+    rules: dict[str, Any] = {
+        "batch": batch_axes if _divides(global_batch, dp) else None,
+        "heads": "model" if _divides(cfg.num_heads, model_n) else None,
+        "kv_heads": "model" if _divides(cfg.num_kv_heads, model_n) else None,
+        "ff": "model" if _divides(cfg.d_ff, model_n) else None,
+        "vocab": "model" if _divides(cfg.vocab_size, model_n) else None,
+        "experts": "model" if _divides(cfg.num_experts, model_n) else None,
+        "expert_ff": None,
+        "seq": "model",   # context-parallel decode / sequence-sharded saves
+    }
+    if rules["experts"] is None and cfg.family == "moe":
+        eff = cfg.moe_d_ff or cfg.d_ff
+        rules["expert_ff"] = "model" if _divides(eff, model_n) else None
+    if cfg.family == "ssm":
+        from repro.models.mamba2 import dims as ssm_dims
+        dm = ssm_dims(cfg)
+        rules["ssm_heads"] = ("model" if _divides(
+            dm.nheads // dm.ngroups, model_n) else None)
+        rules["ssm_conv"] = "model" if _divides(dm.conv_dim, model_n) else None
+        rules["ssm_inner"] = "model" if _divides(dm.d_inner, model_n) else None
+    if cfg.family == "hybrid":
+        w = cfg.lru_width or cfg.d_model
+        rules["rec_width"] = "model" if _divides(w, model_n) else None
+    return rules
+
+
+def batch_pspecs(batch_specs: dict, mesh: Mesh, global_batch: int) -> dict:
+    daxes = data_axes(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+    baxes = (daxes if len(daxes) > 1 else daxes[0]) if daxes else None
+    if not _divides(global_batch, dp):
+        baxes = None
+    return {k: P(baxes, *([None] * (len(v.shape) - 1)))
+            for k, v in batch_specs.items()}
+
+
+# ---------------------------------------------------------------------------
+# Decode-state sharding
+# ---------------------------------------------------------------------------
+
+_SEQ_AXIS_BY_FIELD = {
+    # KVCache buffers (stacked: leading L axis): (batch_axis, seq_axis)
+    "key_codes": (2, 4),       # (L,B,H,G,g,P) -> G over model
+    "key_scales": (2, 4),      # (L,B,H,G,1,P)
+    "value_codes": (2, 4),     # (L,B,H,T,1|d)
+    "value_scale": (2, 4),
+    "value_zero": (2, 4),
+    "value_fp": (2, 4),
+    "key_fp": (2, 4),
+    "key_residual": (2, None),  # (L,B,H,g,d)
+}
+
+
+def decode_state_pspec(path: str, shape: tuple[int, ...], mesh: Mesh,
+                       global_batch: int) -> P:
+    """Generic decode-state resolver: batch axis over (pod,data); the
+    longest remaining axis over model if divisible (sequence for caches,
+    heads/width for recurrent states)."""
+    model_n = mesh.shape.get("model", 1)
+    daxes = data_axes(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+    baxes = (daxes if len(daxes) > 1 else daxes[0]) if daxes else None
+    spec: list = [None] * len(shape)
+    # batch: find the axis whose size == global_batch (after the L axis)
+    b_idx = None
+    for i, dim in enumerate(shape):
+        if i == 0:
+            continue
+        if dim == global_batch:
+            b_idx = i
+            break
+    if b_idx is not None and _divides(global_batch, dp) and baxes is not None:
+        spec[b_idx] = baxes
+    # model axis: largest remaining divisible dim (prefer later axes on tie)
+    best, best_size = None, 0
+    for i, dim in enumerate(shape):
+        if i == 0 or i == b_idx:
+            continue
+        if _divides(dim, model_n) and dim >= best_size and dim > 1:
+            best, best_size = i, dim
+    if best is not None:
+        spec[best] = "model"
+    return P(*spec)
+
+
+def decode_state_pspecs(state_shapes: Any, mesh: Mesh,
+                        global_batch: int) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: decode_state_pspec(
+            _path_str(path), leaf.shape, mesh, global_batch),
+        state_shapes)
+
+
+def to_named(tree_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))

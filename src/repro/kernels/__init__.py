@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for PolarQuant hot spots + jnp oracles.
+
+Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+validated on CPU with interpret=True against ``ref.py``.
+"""
+from repro.kernels.ops import (  # noqa: F401
+    polar_qk_scores, polar_encode, polar_decode_attention_grouped,
+    polar_decode_attention_full, merge_softmax_partials,
+)
+from repro.kernels.flash_prefill import flash_prefill  # noqa: F401

@@ -1,0 +1,135 @@
+"""Public jit'd wrappers around the Pallas kernels with ref fallbacks.
+
+``backend``:
+  * ``"pallas"``    — pl.pallas_call targeting TPU (interpret=False)
+  * ``"interpret"`` — same kernel body executed in Python on CPU (default
+                       here: this container has no TPU)
+  * ``"ref"``       — pure-jnp oracle (fastest on CPU, used inside jitted
+                       serving steps and the dry-run)
+
+`polar_decode_attention_full` is the end-to-end decode-attention entry:
+kernel partials over the grouped cache segment merged exactly with the fp
+residual segment (associative online-softmax merge).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as ref_mod
+from repro.kernels.polar_qk import polar_qk_scores as _qk_pallas
+from repro.kernels.polar_encode import polar_encode as _encode_pallas
+from repro.kernels.polar_attention import (
+    polar_decode_attention_grouped as _attn_pallas,
+)
+
+Array = jax.Array
+NEG_INF = -1e30
+DEFAULT_BACKEND = "ref"
+
+
+def polar_qk_scores(q, codes, rs, rz, ts, tz, *, r_bits=4, t_bits=4,
+                    backend: str = DEFAULT_BACKEND, block_groups: int = 4):
+    if backend == "ref":
+        return ref_mod.ref_polar_qk_scores(q, codes, rs, rz, ts, tz,
+                                           r_bits=r_bits, t_bits=t_bits)
+    return _qk_pallas(q, codes, rs, rz, ts, tz, r_bits=r_bits, t_bits=t_bits,
+                      block_groups=block_groups,
+                      interpret=(backend == "interpret"))
+
+
+def polar_encode(k, *, r_bits=4, t_bits=4, group_size=128,
+                 scale_dtype="float32", backend: str = DEFAULT_BACKEND):
+    if backend == "ref":
+        return ref_mod.ref_polar_encode(k, r_bits=r_bits, t_bits=t_bits,
+                                        group_size=group_size,
+                                        scale_dtype=scale_dtype)
+    return _encode_pallas(k, r_bits=r_bits, t_bits=t_bits,
+                          group_size=group_size, scale_dtype=scale_dtype,
+                          interpret=(backend == "interpret"))
+
+
+def polar_decode_attention_grouped(q, codes, rs, rz, ts, tz, values, vscale,
+                                   vzero, length, *, r_bits=4, t_bits=4,
+                                   backend: str = DEFAULT_BACKEND,
+                                   block_groups: int = 4):
+    if backend == "ref":
+        if vscale is not None:
+            values = (values.astype(jnp.float32) * vscale.astype(jnp.float32)
+                      + vzero.astype(jnp.float32))
+        return ref_mod.ref_polar_decode_attention(
+            q, codes, rs, rz, ts, tz, values, length,
+            r_bits=r_bits, t_bits=t_bits, softmax_scale=1.0)
+    return _attn_pallas(q, codes, rs, rz, ts, tz, values, vscale, vzero,
+                        length, r_bits=r_bits, t_bits=t_bits,
+                        block_groups=block_groups,
+                        interpret=(backend == "interpret"))
+
+
+def merge_softmax_partials(parts: list[tuple[Array, Array, Array]]) -> Array:
+    """Exactly merge flash partials [(acc, m, l), ...] -> normalized output.
+
+    acc: (..., d) = sum exp(s - m) v;  m, l: (...,).
+    """
+    m_tot = functools.reduce(jnp.maximum, [m for _, m, _ in parts])
+    l_tot = 0.0
+    acc_tot = 0.0
+    for acc, m, l in parts:
+        corr = jnp.exp(m - m_tot)
+        l_tot = l_tot + l * corr
+        acc_tot = acc_tot + acc * corr[..., None]
+    l_safe = jnp.where(l_tot == 0.0, 1.0, l_tot)
+    return acc_tot / l_safe[..., None]
+
+
+def polar_decode_attention_full(
+    q: Array, codes, rs, rz, ts, tz, key_residual, values, vscale, vzero,
+    length: Array, *, r_bits=4, t_bits=4, softmax_scale: float | None = None,
+    backend: str = DEFAULT_BACKEND, block_groups: int = 4,
+) -> Array:
+    """Full decode attention: grouped (quantized) segment via kernel +
+    fp residual segment, merged exactly.
+
+    q: (B, Hq, d); key_residual: (B, Hkv, g, d); values: (B, Hkv, T, d) or
+    uint8 codes (+ vscale/vzero (B,Hkv,T,1)); length: () total tokens.
+    Returns (B, Hq, d) in q.dtype.
+    """
+    b, hq, d = q.shape
+    hkv = codes.shape[1]
+    g = codes.shape[3]
+    qpk = hq // hkv
+    scale = d ** -0.5 if softmax_scale is None else softmax_scale
+    q4 = (q.astype(jnp.float32) * scale).reshape(b, hkv, qpk, d)
+    flushed = (length // g) * g
+
+    acc_g, m_g, l_g = polar_decode_attention_grouped(
+        q4, codes, rs, rz, ts, tz, values, vscale, vzero, flushed,
+        r_bits=r_bits, t_bits=t_bits, backend=backend,
+        block_groups=block_groups)
+
+    # --- fp residual segment (positions [flushed, length)) ---
+    res = key_residual.astype(jnp.float32)                       # (B,Hkv,g,d)
+    s_res = jnp.einsum("bhqd,bhgd->bhqg", q4, res)
+    slot = jnp.arange(g, dtype=jnp.int32)
+    n_res = length - flushed
+    mask = slot < n_res
+    s_res = jnp.where(mask, s_res, NEG_INF)
+    m_r = jnp.max(s_res, axis=-1)
+    p_r = jnp.where(mask, jnp.exp(s_res - m_r[..., None]), 0.0)
+    l_r = jnp.sum(p_r, axis=-1)
+    # residual V rows live token-major at [flushed, flushed + g)
+    if vscale is not None:
+        v_res = jax.lax.dynamic_slice_in_dim(values, flushed, g, axis=2)
+        vs_res = jax.lax.dynamic_slice_in_dim(vscale, flushed, g, axis=2)
+        vz_res = jax.lax.dynamic_slice_in_dim(vzero, flushed, g, axis=2)
+        v_res = (v_res.astype(jnp.float32) * vs_res.astype(jnp.float32)
+                 + vz_res.astype(jnp.float32))
+    else:
+        v_res = jax.lax.dynamic_slice_in_dim(values, flushed, g, axis=2)
+        v_res = v_res.astype(jnp.float32)
+    acc_r = jnp.einsum("bhqg,bhgd->bhqd", p_r, v_res)
+
+    out = merge_softmax_partials([(acc_g, m_g, l_g), (acc_r, m_r, l_r)])
+    return out.reshape(b, hq, d).astype(q.dtype)

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (array-based signatures).
+
+Each ``ref_*`` function is the semantic ground truth its kernel must match
+(tests sweep shapes/dtypes and ``assert_allclose`` kernel vs oracle).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lut as lut_mod
+from repro.core import quantizers as qz
+from repro.core.quantizers import PolarKeys, QuantConfig
+
+Array = jax.Array
+NEG_INF = -1e30
+
+
+def _mk_polar_keys(codes, rs, rz, ts, tz, r_bits, t_bits) -> PolarKeys:
+    return PolarKeys(codes=codes, rho_scale=rs, rho_zero=rz, theta_scale=ts,
+                     theta_zero=tz, rho_bits=r_bits, theta_bits=t_bits,
+                     pairing="half")
+
+
+def ref_polar_qk_scores(q, codes, rs, rz, ts, tz, *, r_bits: int,
+                        t_bits: int) -> Array:
+    """LUT q.K scores over quantized groups.
+
+    q: (B, Hkv, Qh, d); codes: (B, Hkv, G, g, P); scales: (B, Hkv, G, 1, P).
+    Returns (B, Hkv, Qh, G*g) fp32.
+    """
+    pk = _mk_polar_keys(codes, rs, rz, ts, tz, r_bits, t_bits)
+    pk_exp = jax.tree_util.tree_map(lambda a: a[:, :, None], pk)
+    return lut_mod.lut_qk_scores(q, pk_exp)
+
+
+def ref_polar_encode(k, *, r_bits: int, t_bits: int, group_size: int,
+                     scale_dtype: str = "float32"):
+    """Group-quantize post-RoPE keys. k: (B, Hkv, T, d), T % g == 0.
+
+    Returns (codes, rho_scale, rho_zero, theta_scale, theta_zero).
+    """
+    cfg = QuantConfig(method="polar", rho_bits=r_bits, theta_bits=t_bits,
+                      group_size=group_size, scale_dtype=scale_dtype)
+    pk = qz.encode_polar_keys(k, cfg)
+    return pk.codes, pk.rho_scale, pk.rho_zero, pk.theta_scale, pk.theta_zero
+
+
+def ref_polar_decode_attention(q, codes, rs, rz, ts, tz, values, length, *,
+                               r_bits: int, t_bits: int,
+                               softmax_scale: float | None = None):
+    """Fused decode attention over the *grouped* part of the cache.
+
+    q: (B, Hkv, Qh, d); values: (B, Hkv, T, d) fp; length: () int32 = number
+    of valid grouped tokens (a multiple of g).
+    Returns (out, m, l): un-normalized flash-style partial results so the
+    caller can merge the fp residual segment —
+        out: (B, Hkv, Qh, d) = sum_t exp(s_t - m) v_t
+        m:   (B, Hkv, Qh)    = running max of masked scores
+        l:   (B, Hkv, Qh)    = sum_t exp(s_t - m)
+    """
+    b, hkv, qh, d = q.shape
+    scale = d ** -0.5 if softmax_scale is None else softmax_scale
+    s = ref_polar_qk_scores(q * scale, codes, rs, rz, ts, tz,
+                            r_bits=r_bits, t_bits=t_bits)
+    t_cap = s.shape[-1]
+    pos = jnp.arange(t_cap, dtype=jnp.int32)
+    s = jnp.where(pos < length, s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(pos < length, p, 0.0)  # kill exp(NEG_INF - NEG_INF) rows
+    l = jnp.sum(p, axis=-1)
+    out = jnp.einsum("bhqt,bhtd->bhqd", p, values.astype(jnp.float32))
+    return out, m, l

@@ -1,0 +1,79 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import (jax locks the device
+# count at first init). Everything below may import jax.
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch import dryrun_lib as lib  # noqa: E402
+from repro.train.train_step import StepConfig  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Multi-pod dry-run: lower+compile every (arch x shape).")
+    ap.add_argument("--arch", default="all",
+                    help=f"one of {ARCH_IDS} or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help=f"one of {sorted(SHAPES)} or 'all'")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"],
+                    help="16x16 single-pod or 2x16x16 multi-pod")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--remat", default="block")
+    args = ap.parse_args(argv)
+
+    assert jax.device_count() == 512, (
+        f"dry-run needs 512 placeholder devices, got {jax.device_count()} — "
+        "run via `python -m repro.launch.dryrun`")
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    mesh_tag = "multi_2x16x16" if args.mesh == "multi" else "single_16x16"
+    step_cfg = StepConfig(microbatches=args.microbatches, remat=args.remat)
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = sorted(SHAPES) if args.shape == "all" else [args.shape]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            t0 = time.monotonic()
+            try:
+                rec = lib.run_cell(arch, shape, mesh, args.out, mesh_tag,
+                                   step_cfg)
+            except Exception as e:  # noqa: BLE001 — report and continue
+                failures.append((arch, shape, repr(e)[:300]))
+                print(f"[dryrun] {arch} x {shape}: FAIL {repr(e)[:200]}")
+                continue
+            if rec["status"] == "skip":
+                print(f"[dryrun] {arch} x {shape}: SKIP ({rec['reason'][:60]})")
+                continue
+            mem = rec["memory"]
+            cost = rec["cost"]
+            coll = rec["collectives"].get("total_bytes", 0)
+            print(f"[dryrun] {arch} x {shape} [{mesh_tag}]: OK "
+                  f"compile={rec['compile_s']:.1f}s "
+                  f"peak/dev={mem['peak_per_device']/2**30:.2f}GiB "
+                  f"fits16G={mem['fits_16g_hbm']} "
+                  f"flops={cost.get('flops', 0):.3g} "
+                  f"bytes={cost.get('bytes accessed', 0):.3g} "
+                  f"coll={coll:.3g}B "
+                  f"({time.monotonic()-t0:.0f}s)")
+
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES:")
+        for a, s, e in failures:
+            print(f"  {a} x {s}: {e}")
+        return 1
+    print("[dryrun] all requested cells passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,420 @@
+"""Static cost analysis of partitioned HLO text with loop-aware counting.
+
+``compiled.cost_analysis()`` visits while-loop bodies ONCE (verified on this
+backend: a 10-step scanned matmul reports 1 matmul of flops), which makes
+it useless for scan-over-layers programs. This module parses
+``compiled.as_text()`` and computes, bottom-up over the call graph:
+
+  * flops            — dot ops: 2 * |result| * |contracting dims|;
+                       elementwise arithmetic: |result|; reduces: |input|
+  * transcendentals  — exp/log/tanh/sin/cos/atan2/rsqrt/...
+  * hbm_bytes        — per materializing op: result + operand buffer bytes
+                       (fusion internals excluded — only fusion boundaries
+                       move HBM data), a standard traffic proxy
+  * collective_bytes — per-kind wire bytes (all-reduce counted 2x)
+
+with while-loop bodies multiplied by trip counts parsed from the loop
+condition (the scan bound constant). Shapes come from each computation's
+SSA symbol table, so per-device (post-SPMD) sizes are used throughout.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "select", "compare", "and", "or", "xor", "not", "clamp",
+    "floor", "ceil", "round-nearest-afz", "round-nearest-even", "sign",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "remainder", "power",
+}
+_TRANSCENDENTAL = {"exponential", "log", "log-plus-one", "exponential-minus-one",
+                   "tanh", "sine", "cosine", "atan2", "rsqrt", "sqrt", "cbrt",
+                   "logistic", "erf"}
+_NO_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all", "partition-id", "replica-id", "iota",
+               "opt-barrier", "custom-call", "get-dimension-size"}
+_COLLECTIVES = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^=]*?\))|(?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\((.*?)\)(.*)$")
+# computation headers start at column 0 (op lines are indented) and params
+# may contain nested parens (tuple types), so match loosely up to `... {`
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->.*\{\s*$")
+
+
+def _type_elems_bytes(type_str: str) -> tuple[int, int]:
+    elems = bytes_ = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES[dt]
+    return elems, bytes_
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    kind: str
+    operands: list[str]
+    attrs: str
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_detail: dict = field(default_factory=dict)
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.transcendentals += other.transcendentals
+        self.hbm_bytes += other.hbm_bytes
+        self.collective_bytes += other.collective_bytes
+        for k, v in other.collective_detail.items():
+            d = self.collective_detail.setdefault(k, {"count": 0, "bytes": 0.0})
+            d["count"] += v["count"]
+            d["bytes"] += v["bytes"]
+        return self
+
+    def scaled(self, f: float) -> "Cost":
+        return Cost(self.flops * f, self.transcendentals * f,
+                    self.hbm_bytes * f, self.collective_bytes * f,
+                    {k: {"count": v["count"] * f, "bytes": v["bytes"] * f}
+                     for k, v in self.collective_detail.items()})
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def parse_computations(text: str) -> dict[str, list[Op]]:
+    comps: dict[str, list[Op]] = {}
+    current: Optional[str] = None
+    for line in text.splitlines():
+        line = _COMMENT_RE.sub("", line)  # `/*index=5*/` inside tuple types
+        if current is None:
+            m = _COMP_RE.match(line)
+            if m:
+                current = m.group(1)
+                comps[current] = []
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            name, type_str, kind, operands, attrs = m.groups()
+            ops = [o.strip().lstrip("%") for o in _split_operands(operands)]
+            comps[current].append(Op(name, type_str, kind, ops, attrs))
+    return comps
+
+
+def _split_operands(s: str) -> list[str]:
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            depth += ch in "([{"
+            depth -= ch in ")]}"
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return [o for o in (x.strip() for x in out) if o]
+
+
+def _attr(attrs: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w\.\-]+)", attrs)
+    return m.group(1) if m else None
+
+
+def _dims(attrs: str, key: str) -> list[int]:
+    m = re.search(key + r"=\{([0-9,]*)\}", attrs)
+    if not m or not m.group(1):
+        return []
+    return [int(x) for x in m.group(1).split(",")]
+
+
+def _trip_count(cond_ops: list[Op]) -> int:
+    """Scan-lowered loop conditions compare the induction var against a
+    constant bound; take the max integer constant in the condition."""
+    best = 1
+    for op in cond_ops:
+        if op.kind == "constant" and op.operands:
+            try:
+                best = max(best, int(op.operands[0]))
+            except ValueError:
+                pass
+    return best
+
+
+class HloCostModel:
+    def __init__(self, text: str):
+        self.comps = parse_computations(text)
+        self.entry = self._find_entry(text)
+        self._memo: dict[str, Cost] = {}
+
+    def _find_entry(self, text: str) -> str:
+        m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.M)
+        return m.group(1) if m else next(iter(self.comps))
+
+    def total(self) -> Cost:
+        return self.comp_cost(self.entry)
+
+    def comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = Cost()  # cycle guard
+        ops = self.comps.get(name, [])
+        shapes = {op.name: op.type_str for op in ops}
+        total = Cost()
+        for op in ops:
+            total += self._op_cost(op, shapes)
+        self._memo[name] = total
+        return total
+
+    def _op_cost(self, op: Op, shapes: dict[str, str]) -> Cost:
+        c = Cost()
+        kind = kind_base = op.kind
+        if kind_base.endswith("-start"):
+            kind_base = kind_base[: -len("-start")]
+        elems, rbytes = _type_elems_bytes(op.type_str)
+
+        if kind_base in _COLLECTIVES:
+            wire = rbytes * _COLLECTIVES[kind_base]
+            c.collective_bytes += wire
+            c.collective_detail[kind_base] = {"count": 1, "bytes": wire}
+            c.hbm_bytes += rbytes + self._operand_bytes(op, shapes)
+            return c
+        if kind == "while":
+            body = _attr(op.attrs, "body")
+            cond = _attr(op.attrs, "condition")
+            trip = _trip_count(self.comps.get(cond, []))
+            inner = Cost()
+            inner += self.comp_cost(body)
+            inner += self.comp_cost(cond)
+            return inner.scaled(trip)
+        if kind == "conditional":
+            best = Cost()
+            for m in re.finditer(r"branch_computations=\{([^}]*)\}", op.attrs):
+                for branch in m.group(1).split(","):
+                    bc = self.comp_cost(branch.strip().lstrip("%"))
+                    if bc.flops + bc.hbm_bytes > best.flops + best.hbm_bytes:
+                        best = bc
+            tb = _attr(op.attrs, "true_computation")
+            fb = _attr(op.attrs, "false_computation")
+            for b in (tb, fb):
+                if b:
+                    bc = self.comp_cost(b)
+                    if bc.flops + bc.hbm_bytes > best.flops + best.hbm_bytes:
+                        best = bc
+            best = best.scaled(1.0)
+            best.hbm_bytes += rbytes
+            return best
+        if kind == "fusion":
+            called = _attr(op.attrs, "calls")
+            if called:
+                inner = self.comp_cost(called)
+                c.flops += inner.flops
+                c.transcendentals += inner.transcendentals
+                # HBM traffic only at the fusion boundary; operands consumed
+                # solely by slicing ops inside count their SLICE bytes (scan
+                # xs indexing must not count the whole stacked array/step)
+                c.hbm_bytes += rbytes + self._fusion_operand_bytes(
+                    op, shapes, called)
+            else:
+                c.hbm_bytes += rbytes + self._operand_bytes(op, shapes)
+            return c
+        if kind == "call":
+            called = _attr(op.attrs, "to_apply") or _attr(op.attrs, "calls")
+            if called:
+                c += self.comp_cost(called)
+            return c
+
+        # slicing/updating ops touch only the sliced region, not the operand
+        if kind in ("dynamic-slice", "slice", "gather"):
+            c.hbm_bytes += 2 * rbytes
+            return c
+        if kind == "dynamic-update-slice" and len(op.operands) >= 2:
+            upd = op.operands[1].split(" ")[0].lstrip("%")
+            ub = _type_elems_bytes(shapes.get(upd, ""))[1]
+            c.hbm_bytes += 2 * ub
+            return c
+        if kind == "scatter" and len(op.operands) >= 3:
+            upd = op.operands[2].split(" ")[0].lstrip("%")
+            ub = _type_elems_bytes(shapes.get(upd, ""))[1]
+            c.hbm_bytes += 2 * ub
+            return c
+
+        # leaf ops
+        if kind == "dot":
+            lhs_shape = shapes.get(op.operands[0].split(" ")[0].lstrip("%"), "")
+            lelems, _ = _type_elems_bytes(lhs_shape)
+            cdims = _dims(op.attrs, "lhs_contracting_dims")
+            csize = 1
+            mshape = _SHAPE_RE.search(lhs_shape)
+            if mshape and cdims:
+                dims = [int(x) for x in mshape.group(2).split(",") if x]
+                for i in cdims:
+                    if i < len(dims):
+                        csize *= dims[i]
+            c.flops += 2.0 * elems * csize
+        elif kind == "convolution":
+            c.flops += 2.0 * elems * 8  # rough; convs are rare here
+        elif kind in _TRANSCENDENTAL:
+            c.flops += elems
+            c.transcendentals += elems
+        elif kind in _ELEMENTWISE:
+            c.flops += elems
+        elif kind in ("reduce", "reduce-window"):
+            c.flops += self._operand_elems(op, shapes)
+
+        if kind not in _NO_TRAFFIC:
+            c.hbm_bytes += rbytes + self._operand_bytes(op, shapes)
+        return c
+
+    def _fusion_operand_bytes(self, op: Op, shapes: dict[str, str],
+                              called: str) -> float:
+        """Boundary bytes with slicing-aware discounting per operand."""
+        inner_ops = self.comps.get(called, [])
+        inner_shapes = {o.name: o.type_str for o in inner_ops}
+        # param index -> inner op name
+        params: dict[int, str] = {}
+        for o in inner_ops:
+            if o.kind == "parameter" and o.operands:
+                try:
+                    params[int(o.operands[0])] = o.name
+                except ValueError:
+                    pass
+        # usage map: inner op name -> consumer (kind, result bytes)
+        total = 0.0
+        for i, operand in enumerate(op.operands):
+            nm = operand.split(" ")[0].lstrip("%")
+            full = _type_elems_bytes(shapes.get(nm, ""))[1]
+            pname = params.get(i)
+            if pname is None:
+                total += full
+                continue
+            consumers = [o for o in inner_ops
+                         if any(x.split(" ")[0].lstrip("%") == pname
+                                for x in o.operands)]
+            if consumers and all(o.kind in ("dynamic-slice", "slice", "gather")
+                                 for o in consumers):
+                total += sum(_type_elems_bytes(o.type_str)[1]
+                             for o in consumers)
+            elif consumers and all(
+                    o.kind == "dynamic-update-slice" and len(o.operands) >= 2
+                    and o.operands[0].split(" ")[0].lstrip("%") == pname
+                    for o in consumers):
+                total += sum(
+                    _type_elems_bytes(inner_shapes.get(
+                        o.operands[1].split(" ")[0].lstrip("%"), ""))[1]
+                    for o in consumers)
+            else:
+                total += full
+        return total
+
+    def _operand_bytes(self, op: Op, shapes: dict[str, str]) -> int:
+        total = 0
+        for o in op.operands:
+            nm = o.split(" ")[0].lstrip("%")
+            if nm in shapes:
+                total += _type_elems_bytes(shapes[nm])[1]
+        return total
+
+    def _operand_elems(self, op: Op, shapes: dict[str, str]) -> int:
+        total = 0
+        for o in op.operands:
+            nm = o.split(" ")[0].lstrip("%")
+            if nm in shapes:
+                total += _type_elems_bytes(shapes[nm])[0]
+        return total
+
+
+def analyze_text(text: str) -> dict:
+    cost = HloCostModel(text).total()
+    return {
+        "flops": cost.flops,
+        "transcendentals": cost.transcendentals,
+        "hbm_bytes": cost.hbm_bytes,
+        "collective_bytes": cost.collective_bytes,
+        "collective_detail": cost.collective_detail,
+    }
+
+
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _op_label(op: Op, depth: int = 3,
+              comps: Optional[dict] = None) -> str:
+    m = _META_RE.search(op.attrs)
+    if not m and op.kind == "fusion" and comps is not None:
+        # fusion boundary carries no metadata; borrow the largest inner op's
+        called = _attr(op.attrs, "calls")
+        best, best_sz = None, -1
+        for inner in comps.get(called, []):
+            mi = _META_RE.search(inner.attrs)
+            if mi:
+                sz = _type_elems_bytes(inner.type_str)[1]
+                if sz > best_sz:
+                    best, best_sz = mi, sz
+        m = best
+    if not m:
+        return f"<{op.kind}>"
+    name = m.group(1)
+    # strip jit wrapper and truncate to `depth` path segments
+    parts = [p for p in name.split("/") if not p.startswith("jit(")]
+    return "/".join(parts[:depth]) or name
+
+
+def breakdown(text: str, key: str = "hbm_bytes", depth: int = 3,
+              top: int = 20) -> list[tuple[str, float]]:
+    """Attribute cost to jax-level op names (loop multipliers applied).
+
+    key: hbm_bytes | flops | collective_bytes. The label is the op_name
+    metadata truncated to `depth` path segments — enough to localize the
+    model code responsible for each traffic hot-spot.
+    """
+    model = HloCostModel(text)
+    acc: dict[str, float] = {}
+
+    def walk(comp_name: str, mult: float):
+        ops = model.comps.get(comp_name, [])
+        shapes = {op.name: op.type_str for op in ops}
+        for op in ops:
+            if op.kind == "while":
+                body = _attr(op.attrs, "body")
+                cond = _attr(op.attrs, "condition")
+                trip = _trip_count(model.comps.get(cond, []))
+                walk(body, mult * trip)
+                walk(cond, mult * trip)
+                continue
+            c = model._op_cost(op, shapes)
+            val = getattr(c, key)
+            if val:
+                lbl = _op_label(op, depth, model.comps)
+                acc[lbl] = acc.get(lbl, 0.0) + val * mult
+
+    walk(model.entry, 1.0)
+    return sorted(acc.items(), key=lambda kv: -kv[1])[:top]

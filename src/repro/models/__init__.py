@@ -1,0 +1,2 @@
+"""Model zoo: dense/MoE/enc-dec/VLM transformers, Mamba-2 SSD, RG-LRU hybrid."""
+from repro.models.registry import Model, get_model  # noqa: F401

@@ -1,0 +1,137 @@
+"""GQA attention block with pluggable quantized-KV-cache policy.
+
+Three entry points share one QKV computation:
+  * ``attention_train``   — full-sequence flash attention (no cache)
+  * ``attention_prefill`` — flash attention + bulk cache fill
+  * ``attention_decode``  — single-token append + quantized decode attention
+    (LUT path for the polar policy)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import kv_cache as kvc
+from repro.core.attention import flash_attention
+from repro.distributed import ctx
+from repro.models import layers as L
+
+Array = jax.Array
+Params = dict
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    d, hd = cfg.d_model, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(k1, d, cfg.num_heads * hd),
+        "wk": L.dense_init(k2, d, cfg.num_kv_heads * hd),
+        "wv": L.dense_init(k3, d, cfg.num_kv_heads * hd),
+        "wo": L.dense_init(k4, cfg.num_heads * hd, d),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * hd,), jnp.float32)
+    return p
+
+
+def _qkv(params: Params, x: Array, cfg: ModelConfig, positions: Array,
+         rope: bool = True):
+    q = L.linear(x, params["wq"], params.get("bq"))
+    k = L.linear(x, params["wk"], params.get("bk"))
+    v = L.linear(x, params["wv"], params.get("bv"))
+    q = L.split_heads(q, cfg.num_heads)
+    k = L.split_heads(k, cfg.num_kv_heads)
+    v = L.split_heads(v, cfg.num_kv_heads)
+    q = ctx.shard(q, ("batch", "heads", None, None))
+    k = ctx.shard(k, ("batch", "kv_heads", None, None))
+    v = ctx.shard(v, ("batch", "kv_heads", None, None))
+    if rope:
+        q = L.apply_rope(q, positions, cfg.rope_base, cfg.rope_ntk_scale)
+        k = L.apply_rope(k, positions, cfg.rope_base, cfg.rope_ntk_scale)
+    return q, k, v
+
+
+def attention_train(params: Params, x: Array, cfg: ModelConfig, *,
+                    mask_mode: str = "causal",
+                    prefix_len: Optional[Array] = None,
+                    memory: Optional[Array] = None,
+                    window: int = 0) -> Array:
+    """x: (B, T, D). ``memory`` switches to cross-attention (K/V from
+    memory, no RoPE on keys/queries)."""
+    b, t, _ = x.shape
+    if memory is None:
+        positions = jnp.arange(t, dtype=jnp.int32)
+        q, k, v = _qkv(params, x, cfg, positions, rope=True)
+    else:
+        q = L.split_heads(L.linear(x, params["wq"], params.get("bq")),
+                          cfg.num_heads)
+        k = L.split_heads(L.linear(memory, params["wk"], params.get("bk")),
+                          cfg.num_kv_heads)
+        v = L.split_heads(L.linear(memory, params["wv"], params.get("bv")),
+                          cfg.num_kv_heads)
+        mask_mode = "full"
+    out = flash_attention(q, k, v, mode=mask_mode, window=window,
+                          prefix_len=prefix_len)
+    return L.linear(L.merge_heads(out), params["wo"])
+
+
+def attention_prefill(params: Params, x: Array, cfg: ModelConfig,
+                      cache: kvc.KVCache, *, mask_mode: str = "causal",
+                      prefix_len: Optional[Array] = None,
+                      window: int = 0):
+    """Flash attention over the prompt + bulk cache fill. Returns (y, cache)."""
+    b, t, _ = x.shape
+    positions = jnp.arange(t, dtype=jnp.int32)
+    q, k, v = _qkv(params, x, cfg, positions, rope=True)
+    cache = kvc.prefill(cache, k, v)
+    out = flash_attention(q, k, v, mode=mask_mode, window=window,
+                          prefix_len=prefix_len)
+    return L.linear(L.merge_heads(out), params["wo"]), cache
+
+
+def cross_attention_cache(params: Params, memory: Array, cfg: ModelConfig,
+                          cache: kvc.KVCache) -> kvc.KVCache:
+    """Fill a cross-attention cache from encoder memory (no RoPE)."""
+    k = L.split_heads(L.linear(memory, params["wk"], params.get("bk")),
+                      cfg.num_kv_heads)
+    v = L.split_heads(L.linear(memory, params["wv"], params.get("bv")),
+                      cfg.num_kv_heads)
+    return kvc.prefill(cache, k, v)
+
+
+def attention_decode(params: Params, x: Array, cfg: ModelConfig,
+                     cache: kvc.KVCache, *, window: int = 0,
+                     cross: bool = False):
+    """Single-token decode. x: (B, 1, D). Returns (y (B,1,D), cache)."""
+    b = x.shape[0]
+    q = L.split_heads(L.linear(x, params["wq"], params.get("bq")),
+                      cfg.num_heads)                      # (B, H, 1, hd)
+    if cross:
+        # cross-attention: static cache, no RoPE, no append
+        out = kvc.decode_attention(cache, q[:, :, 0], window=0)
+        return L.linear(out.reshape(b, 1, -1), params["wo"]), cache
+    pos = jnp.full((1,), cache.length, jnp.int32)
+    k = L.split_heads(L.linear(x, params["wk"], params.get("bk")),
+                      cfg.num_kv_heads)
+    v = L.split_heads(L.linear(x, params["wv"], params.get("bv")),
+                      cfg.num_kv_heads)
+    q = L.apply_rope(q, pos, cfg.rope_base, cfg.rope_ntk_scale)
+    k = L.apply_rope(k, pos, cfg.rope_base, cfg.rope_ntk_scale)
+    cache = kvc.append(cache, k, v)
+    out = kvc.decode_attention(cache, q[:, :, 0], window=window)  # (B, H, hd)
+    return L.linear(out.reshape(b, 1, -1), params["wo"]), cache
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int) -> kvc.KVCache:
+    cap = max_len
+    if cfg.window:
+        cap = min(cap, cfg.window)
+    g = cfg.quant.group_size
+    cap = -(-cap // g) * g  # round up to a group multiple
+    return kvc.init_cache(cfg.quant, batch, cfg.num_kv_heads, cfg.head_dim,
+                          cap, dtype=jnp.dtype(cfg.dtype))

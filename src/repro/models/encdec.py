@@ -1,0 +1,161 @@
+"""Encoder-decoder transformer (seamless-m4t backbone, audio frontend stub).
+
+Encoder: bidirectional self-attention over precomputed frame embeddings
+(the conformer feature extractor is STUBBED per the assignment — inputs are
+``frames (B, Tf, frontend_dim)``). Decoder: causal self-attention (quantized
+KV cache) + cross-attention (static quantized cache built once from encoder
+memory) + MLP.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import kv_cache as kvc
+from repro.models import layers as L
+from repro.models import attn_block as AB
+from repro.models import transformer as TF
+
+Array = jax.Array
+Params = dict
+
+
+def init_enc_layer(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": AB.init_attention(k1, cfg),
+            "ffn": L.init_mlp(k2, cfg.d_model, cfg.d_ff)}
+
+
+def init_dec_layer(key, cfg: ModelConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln_x": jnp.ones((cfg.d_model,), jnp.float32),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": AB.init_attention(k1, cfg),
+            "xattn": AB.init_attention(k3, cfg),
+            "ffn": L.init_mlp(k2, cfg.d_model, cfg.d_ff)}
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = TF.init_lm_common(k1, cfg)
+    p["frontend_proj"] = L.dense_init(k4, cfg.frontend_dim, cfg.d_model)
+    p["enc_layers"] = L.stack_layer_params(
+        functools.partial(init_enc_layer, cfg=cfg), k2, cfg.encoder_layers)
+    p["dec_layers"] = L.stack_layer_params(
+        functools.partial(init_dec_layer, cfg=cfg), k3, cfg.num_layers)
+    p["enc_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+    return p
+
+
+def encode(params: Params, frames: Array, cfg: ModelConfig,
+           remat: str = "block") -> Array:
+    x = L.linear(frames.astype(jnp.dtype(cfg.dtype)), params["frontend_proj"])
+
+    def body(h, lp):
+        a = AB.attention_train(lp["attn"], L.rms_norm(h, lp["ln1"], cfg.norm_eps),
+                               cfg, mask_mode="full")
+        h = h + a
+        f = L.mlp(lp["ffn"], L.rms_norm(h, lp["ln2"], cfg.norm_eps), cfg.act)
+        return h + f, None
+
+    if remat != "none":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_block_train(lp, h, memory, cfg):
+    a = AB.attention_train(lp["attn"], L.rms_norm(h, lp["ln1"], cfg.norm_eps),
+                           cfg, mask_mode="causal")
+    h = h + a
+    xa = AB.attention_train(lp["xattn"], L.rms_norm(h, lp["ln_x"], cfg.norm_eps),
+                            cfg, memory=memory)
+    h = h + xa
+    f = L.mlp(lp["ffn"], L.rms_norm(h, lp["ln2"], cfg.norm_eps), cfg.act)
+    return h + f
+
+
+def lm_loss(params: Params, batch: dict, cfg: ModelConfig,
+            remat: str = "block", ce_chunk: int = 512):
+    """batch: frames (B, Tf, fd), tokens (B, T+1)."""
+    memory = encode(params, batch["frames"], cfg, remat)
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    x = TF.embed_tokens(params, inputs, cfg)
+
+    def body(h, lp):
+        return _dec_block_train(lp, h, memory, cfg), None
+
+    if remat != "none":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    loss = TF.lm_head_loss(params, x, labels, cfg, ce_chunk)
+    return loss, {"ce": loss}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      memory_len: int):
+    self_cache = AB.make_cache(cfg, batch, max_len)
+    cross_cache = AB.make_cache(cfg, batch, memory_len)
+    stack = lambda c: jax.tree_util.tree_map(
+        lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), c)
+    return {"self": stack(self_cache), "cross": stack(cross_cache)}
+
+
+def prefill_fn(params: Params, batch: dict, cfg: ModelConfig, state):
+    """Encode frames, build cross caches, prefill decoder prompt tokens."""
+    memory = encode(params, batch["frames"], cfg, remat="none")
+    tokens = batch["tokens"]
+    x = TF.embed_tokens(params, tokens, cfg)
+
+    def body(h, xs):
+        lp, self_c, cross_c = xs
+        a, self_c = AB.attention_prefill(
+            lp["attn"], L.rms_norm(h, lp["ln1"], cfg.norm_eps), cfg, self_c,
+            mask_mode="causal")
+        h = h + a
+        cross_c = AB.cross_attention_cache(lp["xattn"], memory, cfg, cross_c)
+        xa = AB.attention_train(lp["xattn"],
+                                L.rms_norm(h, lp["ln_x"], cfg.norm_eps),
+                                cfg, memory=memory)
+        h = h + xa
+        f = L.mlp(lp["ffn"], L.rms_norm(h, lp["ln2"], cfg.norm_eps), cfg.act)
+        return h + f, (self_c, cross_c)
+
+    x, (self_cs, cross_cs) = jax.lax.scan(
+        body, x, (params["dec_layers"], state["self"], state["cross"]))
+    logits = TF.lm_logits(params, x[:, -1:], cfg)
+    return logits[:, 0], {"self": self_cs, "cross": cross_cs}
+
+
+def decode_fn(params: Params, state, token: Array, cfg: ModelConfig):
+    x = TF.embed_tokens(params, token[:, None], cfg)
+
+    def body(h, xs):
+        lp, self_c, cross_c = xs
+        a, self_c = AB.attention_decode(
+            lp["attn"], L.rms_norm(h, lp["ln1"], cfg.norm_eps), cfg, self_c)
+        h = h + a
+        xa, _ = AB.attention_decode(
+            lp["xattn"], L.rms_norm(h, lp["ln_x"], cfg.norm_eps), cfg,
+            cross_c, cross=True)
+        h = h + xa
+        f = L.mlp(lp["ffn"], L.rms_norm(h, lp["ln2"], cfg.norm_eps), cfg.act)
+        return h + f, (self_c, cross_c)
+
+    x, (self_cs, cross_cs) = jax.lax.scan(
+        body, x, (params["dec_layers"], state["self"], state["cross"]))
+    logits = TF.lm_logits(params, x, cfg)
+    return logits[:, 0], {"self": self_cs, "cross": cross_cs}

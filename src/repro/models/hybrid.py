@@ -1,0 +1,195 @@
+"""Hybrid RG-LRU + local-attention LM (RecurrentGemma, arXiv:2402.19427).
+
+Layer types follow ``cfg.block_pattern`` cyclically (("rec","rec","attn")
+for the assigned config). The stack is scanned over *pattern periods*
+(heterogeneous params per period stay homogeneous across periods), with a
+trailing scan over leftover layers — HLO stays O(pattern) in depth.
+
+Local attention uses the ring quantized KV cache (capacity == window) —
+this is where PolarQuant applies in this family; the RG-LRU state is fp.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import attn_block as AB
+from repro.models import rglru as RG
+from repro.models import transformer as TF
+
+Array = jax.Array
+Params = dict
+
+
+def layer_types(cfg: ModelConfig) -> list[str]:
+    pat = cfg.block_pattern or ("attn",)
+    return [pat[i % len(pat)] for i in range(cfg.num_layers)]
+
+
+def _period_split(cfg: ModelConfig) -> tuple[int, list[str], list[str]]:
+    pat = list(cfg.block_pattern or ("attn",))
+    n_periods = cfg.num_layers // len(pat)
+    tail = layer_types(cfg)[n_periods * len(pat) :]
+    if len(set(tail)) > 1:
+        raise ValueError("tail layers must be homogeneous")
+    return n_periods, pat, tail
+
+
+def init_sub_layer(key, cfg: ModelConfig, kind: str) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": jnp.ones((cfg.d_model,), jnp.float32),
+         "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+         "ffn": L.init_mlp(k2, cfg.d_model, cfg.d_ff)}
+    if kind == "attn":
+        p["mix"] = AB.init_attention(k1, cfg)
+    else:
+        p["mix"] = RG.init_rglru_layer(k1, cfg)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    n_periods, pat, tail = _period_split(cfg)
+    keys = jax.random.split(key, 2 + len(pat))
+    p = TF.init_lm_common(keys[0], cfg)
+    p["periods"] = {
+        f"sub{i}_{kind}": L.stack_layer_params(
+            functools.partial(init_sub_layer, cfg=cfg, kind=kind),
+            keys[2 + i], n_periods)
+        for i, kind in enumerate(pat)
+    }
+    if tail:
+        p["tail"] = L.stack_layer_params(
+            functools.partial(init_sub_layer, cfg=cfg, kind=tail[0]),
+            keys[1], len(tail))
+    return p
+
+
+def _sub_train(lp: Params, x: Array, cfg: ModelConfig, kind: str) -> Array:
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        y = AB.attention_train(lp["mix"], h, cfg, mask_mode="local",
+                               window=cfg.window)
+    else:
+        y = RG.rglru_mix(lp["mix"], h, cfg)
+    x = x + y
+    f = L.mlp(lp["ffn"], L.rms_norm(x, lp["ln2"], cfg.norm_eps), cfg.act)
+    from repro.distributed import ctx
+    return ctx.shard(x + f, ("batch", "seq", None))
+
+
+def lm_loss(params: Params, batch: dict, cfg: ModelConfig,
+            remat: str = "block", ce_chunk: int = 512):
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    x = TF.embed_tokens(params, inputs, cfg)
+    n_periods, pat, tail = _period_split(cfg)
+
+    def period_body(h, lps):
+        for i, kind in enumerate(pat):
+            h = _sub_train(lps[f"sub{i}_{kind}"], h, cfg, kind)
+        return h, None
+
+    body = period_body
+    if remat != "none":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["periods"])
+    if tail:
+        def tail_body(h, lp):
+            return _sub_train(lp, h, cfg, tail[0]), None
+        if remat != "none":
+            tail_body = jax.checkpoint(tail_body, prevent_cse=False)
+        x, _ = jax.lax.scan(tail_body, x, params["tail"])
+    loss = TF.lm_head_loss(params, x, labels, cfg, ce_chunk)
+    return loss, {"ce": loss}
+
+
+# ---------------------------------------------------------------------------
+# Serving (state = ring KV caches for attn subs + (conv, h) for rec subs)
+# ---------------------------------------------------------------------------
+
+
+def _stack(n: int, tree):
+    return jax.tree_util.tree_map(
+        lambda a: jnp.zeros((n,) + a.shape, a.dtype), tree)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
+    n_periods, pat, tail = _period_split(cfg)
+    state = {"periods": {}}
+    for i, kind in enumerate(pat):
+        sub = (AB.make_cache(cfg, batch, max_len) if kind == "attn"
+               else RG.init_state(cfg, batch))
+        state["periods"][f"sub{i}_{kind}"] = _stack(n_periods, sub)
+    if tail:
+        sub = (AB.make_cache(cfg, batch, max_len) if tail[0] == "attn"
+               else RG.init_state(cfg, batch))
+        state["tail"] = _stack(len(tail), sub)
+    return state
+
+
+def _sub_prefill(lp, h, cfg, kind, sub_state):
+    hn = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        y, sub_state = AB.attention_prefill(lp["mix"], hn, cfg, sub_state,
+                                            mask_mode="local",
+                                            window=cfg.window)
+    else:
+        y, sub_state = RG.rglru_mix(lp["mix"], hn, cfg, want_state=True)
+    h = h + y
+    f = L.mlp(lp["ffn"], L.rms_norm(h, lp["ln2"], cfg.norm_eps), cfg.act)
+    return h + f, sub_state
+
+
+def _sub_decode(lp, h, cfg, kind, sub_state):
+    hn = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+    if kind == "attn":
+        y, sub_state = AB.attention_decode(lp["mix"], hn, cfg, sub_state,
+                                           window=cfg.window)
+    else:
+        y, sub_state = RG.rglru_step(lp["mix"], hn[:, 0], cfg, sub_state)
+        y = y[:, None]
+    h = h + y
+    f = L.mlp(lp["ffn"], L.rms_norm(h, lp["ln2"], cfg.norm_eps), cfg.act)
+    return h + f, sub_state
+
+
+def _run_stack(params, state, x, cfg, step_fn):
+    n_periods, pat, tail = _period_split(cfg)
+
+    def period_body(h, xs):
+        lps, subs = xs
+        new_subs = {}
+        for i, kind in enumerate(pat):
+            key = f"sub{i}_{kind}"
+            h, new_subs[key] = step_fn(lps[key], h, cfg, kind, subs[key])
+        return h, new_subs
+
+    x, new_periods = jax.lax.scan(
+        period_body, x, (params["periods"], state["periods"]))
+    new_state = {"periods": new_periods}
+    if tail:
+        def tail_body(h, xs):
+            lp, sub = xs
+            h, sub = step_fn(lp, h, cfg, tail[0], sub)
+            return h, sub
+        x, new_tail = jax.lax.scan(tail_body, x, (params["tail"], state["tail"]))
+        new_state["tail"] = new_tail
+    return x, new_state
+
+
+def prefill_fn(params: Params, batch: dict, cfg: ModelConfig, state):
+    x = TF.embed_tokens(params, batch["tokens"], cfg)
+    x, state = _run_stack(params, state, x, cfg, _sub_prefill)
+    logits = TF.lm_logits(params, x[:, -1:], cfg)
+    return logits[:, 0], state
+
+
+def decode_fn(params: Params, state, token: Array, cfg: ModelConfig):
+    x = TF.embed_tokens(params, token[:, None], cfg)
+    x, state = _run_stack(params, state, x, cfg, _sub_decode)
+    logits = TF.lm_logits(params, x, cfg)
+    return logits[:, 0], state

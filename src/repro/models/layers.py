@@ -1,0 +1,135 @@
+"""Shared model building blocks (pure functions + dict params).
+
+Parameters are plain nested dicts of fp32 arrays (master copies); compute
+casts to the config dtype at use. Layer-stacked variants (for
+scan-over-layers) are built with jax.vmap over init functions.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, *, scale: float | None = None) -> Array:
+    scale = (1.0 / math.sqrt(d_in)) if scale is None else scale
+    return jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+
+
+def embed_init(key, vocab: int, d: int) -> Array:
+    return jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# Primitives
+# ---------------------------------------------------------------------------
+
+
+def linear(x: Array, w: Array, b: Array | None = None) -> Array:
+    y = x @ w.astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+def rms_norm(x: Array, w: Array, eps: float = 1e-6) -> Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu(x: Array, wg: Array, wu: Array, wd: Array, act: str = "silu") -> Array:
+    g = linear(x, wg)
+    u = linear(x, wu)
+    a = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    return linear(a * u, wd)
+
+
+def init_mlp(key, d: int, d_ff: int) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wg": dense_init(k1, d, d_ff), "wu": dense_init(k2, d, d_ff),
+            "wd": dense_init(k3, d_ff, d)}
+
+
+def mlp(params: Params, x: Array, act: str = "silu") -> Array:
+    return swiglu(x, params["wg"], params["wu"], params["wd"], act)
+
+
+# ---------------------------------------------------------------------------
+# RoPE ("half" pairing: dims (j, j+d/2) rotate together — matches the polar
+# quantizer's pairing convention; see core/polar.py)
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, base: float,
+                     ntk_scale: float = 1.0) -> Array:
+    """Inverse frequencies; ``ntk_scale > 1`` applies NTK-aware base
+    scaling (paper Appendix C: PolarQuant under context extension) —
+    base' = base * s^(d/(d-2))."""
+    half = head_dim // 2
+    if ntk_scale != 1.0:
+        base = base * ntk_scale ** (head_dim / max(head_dim - 2, 1))
+    return base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+
+
+def apply_rope(x: Array, positions: Array, base: float,
+               ntk_scale: float = 1.0) -> Array:
+    """x: (B, H, T, d); positions: (T,) or (B, T) int32."""
+    d = x.shape[-1]
+    inv = rope_frequencies(d, base, ntk_scale)           # (d/2,)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., T, d/2)
+    cos = jnp.cos(ang)
+    sin = jnp.sin(ang)
+    if positions.ndim == 1:
+        cos, sin = cos[None, None], sin[None, None]       # (1,1,T,d/2)
+    else:
+        cos, sin = cos[:, None], sin[:, None]             # (B,1,T,d/2)
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., : d // 2], x32[..., d // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+
+def split_heads(x: Array, num_heads: int) -> Array:
+    """(B, T, H*d) -> (B, H, T, d)."""
+    b, t, hd = x.shape
+    return x.reshape(b, t, num_heads, hd // num_heads).transpose(0, 2, 1, 3)
+
+
+def merge_heads(x: Array) -> Array:
+    """(B, H, T, d) -> (B, T, H*d)."""
+    b, h, t, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * d)
+
+
+def stack_layer_params(init_fn, key, num_layers: int) -> Params:
+    """vmap an init over layer keys -> params with leading (L,) axis."""
+    keys = jax.random.split(key, num_layers)
+    return jax.vmap(init_fn)(keys)
+
+
+def cross_entropy_loss(logits: Array, labels: Array,
+                       ignore_id: int = -1) -> Array:
+    """Mean token cross entropy in fp32. logits: (..., V), labels: (...)."""
+    logits32 = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits32, axis=-1)
+    ll = jnp.take_along_axis(logits32, labels[..., None].clip(0), axis=-1)[..., 0]
+    nll = lse - ll
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,251 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Chunked SSD forward for training/prefill (O(T) memory, lax.scan over
+chunks for the inter-chunk recurrence) and an O(1)-state recurrent step
+for decode. Attention-free: there is NO KV cache, so PolarQuant is
+inapplicable to this family (DESIGN.md §Arch-applicability) — decode
+state is (conv window, SSD state).
+
+Shapes: heads H = expand*d_model/headdim; B/C projections have G groups
+(G=1 for the assigned config) with R = H/G heads per group.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import ctx
+from repro.models import layers as L
+
+Array = jax.Array
+Params = dict
+
+
+class SSMDims(NamedTuple):
+    d_inner: int
+    nheads: int
+    headdim: int
+    ngroups: int
+    dstate: int
+    conv_dim: int
+    conv_w: int
+
+
+def dims(cfg: ModelConfig) -> SSMDims:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_headdim
+    conv_dim = d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return SSMDims(d_inner, nheads, cfg.ssm_headdim, cfg.ssm_ngroups,
+                   cfg.ssm_state, conv_dim, cfg.ssm_conv)
+
+
+def init_mamba_layer(key, cfg: ModelConfig) -> Params:
+    dm = dims(cfg)
+    d = cfg.d_model
+    k = jax.random.split(key, 4)
+    in_dim = 2 * dm.d_inner + 2 * dm.ngroups * dm.dstate + dm.nheads
+    return {
+        "in_proj": L.dense_init(k[0], d, in_dim),
+        "conv_w": jax.random.normal(k[1], (dm.conv_w, dm.conv_dim),
+                                    jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((dm.conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, dm.nheads)),   # A = -exp()
+        "dt_bias": jnp.full((dm.nheads,), -2.0, jnp.float32),
+        "D": jnp.ones((dm.nheads,), jnp.float32),
+        "norm_w": jnp.ones((dm.d_inner,), jnp.float32),
+        "out_proj": L.dense_init(k[2], dm.d_inner, d),
+        "ln": jnp.ones((d,), jnp.float32),
+    }
+
+
+def _causal_conv(u: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv. u: (B, T, C); w: (W, C).
+
+    A single lax.conv_general_dilated — the earlier pad-per-tap shift
+    formulation materialized 4 full padded copies per call (46% of this
+    arch's train HBM traffic, see EXPERIMENTS.md §Perf mamba v4)."""
+    wn, c = w.shape
+    dn = jax.lax.conv_dimension_numbers(u.shape, (wn, 1, c),
+                                        ("NWC", "WIO", "NWC"))
+    out = jax.lax.conv_general_dilated(
+        u, w[:, None, :].astype(u.dtype), window_strides=(1,),
+        padding=[(wn - 1, 0)], dimension_numbers=dn, feature_group_count=c)
+    return jax.nn.silu(out + b.astype(u.dtype))
+
+
+def _conv_step(u_t: Array, conv_state: Array, w: Array, b: Array):
+    """One-token conv. u_t: (B, C); conv_state: (B, W-1, C) past inputs."""
+    window = jnp.concatenate([conv_state, u_t[:, None]], axis=1)  # (B, W, C)
+    out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                     w.astype(jnp.float32)) + b
+    new_state = window[:, 1:]
+    return jax.nn.silu(out).astype(u_t.dtype), new_state
+
+
+def ssd_chunked(xdt: Array, adt: Array, b_: Array, c_: Array, chunk: int,
+                initial_state: Array | None = None):
+    """Chunked SSD scan.
+
+    xdt: (B, T, G, R, P) — inputs pre-multiplied by dt
+    adt: (B, T, G, R)    — dt * A (negative)
+    b_, c_: (B, T, G, N)
+    Returns (y (B,T,G,R,P), final_state (B,G,R,P,N)).
+    """
+    bsz, t, g, r, p = xdt.shape
+    n = b_.shape[-1]
+    t_orig = t
+    if t % chunk:
+        # zero-pad: adt=0 (decay 1) and xdt=0 make padded steps identities
+        pad = chunk - t % chunk
+        pad4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        xdt = jnp.pad(xdt, pad4 + ((0, 0),))
+        adt = jnp.pad(adt, pad4[:4])
+        b_ = jnp.pad(b_, pad4)
+        c_ = jnp.pad(c_, pad4)
+        t = t + pad
+    nc = t // chunk
+    f32 = jnp.float32
+
+    xdt_c = xdt.reshape(bsz, nc, chunk, g, r, p).astype(f32)
+    adt_c = adt.reshape(bsz, nc, chunk, g, r).transpose(0, 3, 4, 1, 2).astype(f32)
+    b_c = b_.reshape(bsz, nc, chunk, g, n).astype(f32)
+    c_c = c_.reshape(bsz, nc, chunk, g, n).astype(f32)
+
+    a_cum = jnp.cumsum(adt_c, axis=-1)                       # (B,G,R,nc,L)
+
+    # intra-chunk (the "attention-like" quadratic block, L = chunk).
+    # Mask BEFORE exp: masked entries have seg > 0 and would overflow,
+    # poisoning the VJP with 0 * inf = NaN.
+    seg = a_cum[..., :, None] - a_cum[..., None, :]          # (B,G,R,nc,L,S)
+    li = jnp.arange(chunk)
+    tri = li[:, None] >= li[None, :]
+    decay = jnp.exp(jnp.where(tri, seg, -1e30))
+    y_diag = jnp.einsum("bclgn,bcsgn,bgrcls,bcsgrp->bclgrp",
+                        c_c, b_c, decay, xdt_c)
+
+    # per-chunk input states
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)          # (B,G,R,nc,L)
+    chunk_states = jnp.einsum("bcsgn,bgrcs,bcsgrp->bcgrpn", b_c, decay_states,
+                              xdt_c)                          # (B,nc,G,R,P,N)
+
+    # inter-chunk recurrence (sequential scan keeps HLO compact)
+    chunk_decay = jnp.exp(a_cum[..., -1])                     # (B,G,R,nc)
+    if initial_state is None:
+        initial_state = jnp.zeros((bsz, g, r, p, n), f32)
+
+    def body(state, inp):
+        dec, new = inp                                        # (B,G,R), (B,G,R,P,N)
+        prev = state
+        state = state * dec[..., None, None] + new
+        return state, prev
+
+    final_state, prev_states = jax.lax.scan(
+        body, initial_state.astype(f32),
+        (chunk_decay.transpose(3, 0, 1, 2), chunk_states.transpose(1, 0, 2, 3, 4, 5)))
+
+    # contribution of carried-in state to each chunk
+    state_decay = jnp.exp(a_cum)                              # (B,G,R,nc,L)
+    y_off = jnp.einsum("bclgn,cbgrpn,bgrcl->bclgrp", c_c, prev_states,
+                       state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, t, g, r, p)[:, :t_orig]
+    return y, final_state
+
+
+def mamba_mix(params: Params, u: Array, cfg: ModelConfig,
+              initial=None, want_state: bool = False):
+    """The SSD mixer on (B, T, D) (post layer-norm input)."""
+    dm = dims(cfg)
+    bsz, t, _ = u.shape
+    proj = L.linear(u, params["in_proj"])
+    z, xin, bc, dt = jnp.split(
+        proj, [dm.d_inner, 2 * dm.d_inner,
+               2 * dm.d_inner + 2 * dm.ngroups * dm.dstate], axis=-1)
+    conv_in = jnp.concatenate([xin, bc], axis=-1)
+    # model-parallel SSD: conv channels + SSD heads shard over 'model'
+    # (the conv is depthwise and the SSD einsums are head-parallel, so the
+    # only collectives are at the in/out projections)
+    conv_in = ctx.shard(conv_in, ("batch", None, "ssm_conv"))
+    if initial is not None:
+        conv_state0, ssd_state0 = initial
+        padded = jnp.concatenate([conv_state0.astype(conv_in.dtype), conv_in], 1)
+        conv_out = _causal_conv(padded, params["conv_w"], params["conv_b"])
+        conv_out = conv_out[:, dm.conv_w - 1 :]
+    else:
+        conv_out = _causal_conv(conv_in, params["conv_w"], params["conv_b"])
+        ssd_state0 = None
+    xin = conv_out[..., : dm.d_inner]
+    b_ = conv_out[..., dm.d_inner : dm.d_inner + dm.ngroups * dm.dstate]
+    c_ = conv_out[..., dm.d_inner + dm.ngroups * dm.dstate :]
+    b_ = b_.reshape(bsz, t, dm.ngroups, dm.dstate)
+    c_ = c_.reshape(bsz, t, dm.ngroups, dm.dstate)
+
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))           # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,T,H)
+    xh = xin.reshape(bsz, t, dm.ngroups, dm.nheads // dm.ngroups, dm.headdim)
+    dth = dt.reshape(bsz, t, dm.ngroups, dm.nheads // dm.ngroups)
+    xh = ctx.shard(xh, ("batch", None, None, "ssm_heads", None))
+    dth = ctx.shard(dth, ("batch", None, None, "ssm_heads"))
+    chunk = min(cfg.ssm_chunk, t)
+    y, state = ssd_chunked(xh.astype(jnp.float32) * dth[..., None],
+                           dth * a.reshape(1, 1, dm.ngroups, -1),
+                           b_, c_, chunk, ssd_state0)
+    y = ctx.shard(y, ("batch", None, None, "ssm_heads", None))
+    y = y.reshape(bsz, t, dm.d_inner)
+    y = y + xin.astype(jnp.float32) * jnp.repeat(
+        params["D"].astype(jnp.float32), dm.headdim)[None, None]
+    y = L.rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(u.dtype),
+                   params["norm_w"], cfg.norm_eps)
+    out = L.linear(y, params["out_proj"])
+    if want_state:
+        conv_tail = conv_in[:, t - (dm.conv_w - 1) :] if initial is None else \
+            jnp.concatenate([conv_state0.astype(conv_in.dtype), conv_in],
+                            1)[:, -(dm.conv_w - 1):]
+        return out, (conv_tail, state)
+    return out
+
+
+def mamba_step(params: Params, u_t: Array, cfg: ModelConfig, state):
+    """Single-token recurrent step. u_t: (B, D); state = (conv, ssd)."""
+    dm = dims(cfg)
+    conv_state, ssd_state = state
+    bsz = u_t.shape[0]
+    proj = L.linear(u_t, params["in_proj"])
+    z, xin, bc, dt = jnp.split(
+        proj, [dm.d_inner, 2 * dm.d_inner,
+               2 * dm.d_inner + 2 * dm.ngroups * dm.dstate], axis=-1)
+    conv_in = jnp.concatenate([xin, bc], axis=-1)
+    conv_out, conv_state = _conv_step(conv_in, conv_state, params["conv_w"],
+                                      params["conv_b"])
+    xin = conv_out[..., : dm.d_inner]
+    b_ = conv_out[..., dm.d_inner : dm.d_inner + dm.ngroups * dm.dstate]
+    c_ = conv_out[..., dm.d_inner + dm.ngroups * dm.dstate :]
+    b_ = b_.reshape(bsz, dm.ngroups, dm.dstate).astype(jnp.float32)
+    c_ = c_.reshape(bsz, dm.ngroups, dm.dstate).astype(jnp.float32)
+
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    r = dm.nheads // dm.ngroups
+    xh = xin.reshape(bsz, dm.ngroups, r, dm.headdim).astype(jnp.float32)
+    dth = dt.reshape(bsz, dm.ngroups, r)
+    adt = dth * a.reshape(1, dm.ngroups, r)
+    # state: (B, G, R, P, N)
+    ssd_state = ssd_state * jnp.exp(adt)[..., None, None] + jnp.einsum(
+        "bgrp,bgn->bgrpn", xh * dth[..., None], b_)
+    y = jnp.einsum("bgrpn,bgn->bgrp", ssd_state, c_)
+    y = y.reshape(bsz, dm.d_inner)
+    y = y + xin.astype(jnp.float32) * jnp.repeat(params["D"], dm.headdim)[None]
+    y = L.rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(u_t.dtype),
+                   params["norm_w"], cfg.norm_eps)
+    return L.linear(y, params["out_proj"]), (conv_state, ssd_state)
+
+
+def init_state(cfg: ModelConfig, batch: int):
+    dm = dims(cfg)
+    return (jnp.zeros((batch, dm.conv_w - 1, dm.conv_dim), jnp.dtype(cfg.dtype)),
+            jnp.zeros((batch, dm.ngroups, dm.nheads // dm.ngroups,
+                       dm.headdim, dm.dstate), jnp.float32))

@@ -1,0 +1,102 @@
+"""Mixture-of-Experts FFN with sort-free ragged dispatch (top-k routing).
+
+Dispatch strategy (TPU/SPMD-friendly, DESIGN.md §4):
+  * per token-group (device shard), compute top-k expert assignments;
+  * position-in-expert via slot-major cumsum (deterministic tie-break);
+  * tokens scatter-add into a dense (E, C, D) expert buffer (row scatter,
+    OOB-dropped when over capacity — NOT a (T, E, C) one-hot einsum, which
+    costs O(T*E*C*D) MXU flops; the scatter is O(T*k*D));
+  * per-expert FFN as a single (E, C, D) x (E, D, F) einsum (MXU bated);
+  * gather rows back and combine with router gates.
+
+Shared experts (qwen2-moe) run densely on every token.
+Aux load-balancing loss follows Switch (mean_prob * mean_assignment * E).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import ctx
+from repro.models import layers as L
+
+Array = jax.Array
+Params = dict
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    ff = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.num_experts
+    keys = jax.random.split(key, 5)
+    p = {
+        "router": L.dense_init(keys[0], d, e, scale=0.02),
+        "wg": jax.vmap(lambda k: L.dense_init(k, d, ff))(
+            jax.random.split(keys[1], e)),
+        "wu": jax.vmap(lambda k: L.dense_init(k, d, ff))(
+            jax.random.split(keys[2], e)),
+        "wd": jax.vmap(lambda k: L.dense_init(k, ff, d))(
+            jax.random.split(keys[3], e)),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = L.init_mlp(keys[4], d, ff * cfg.num_shared_experts)
+    return p
+
+
+def moe_ffn(params: Params, x: Array, cfg: ModelConfig):
+    """x: (B, T, D) -> (y, aux_loss). Capacity C = T*k/E * capacity_factor
+    per batch row (token group)."""
+    b, t, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    cap = max(int(t * k / e * cfg.capacity_factor), 1)
+    cap = -(-cap // 8) * 8  # sublane-align capacity
+
+    logits = (x.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                   # (B, T, E)
+    gates, eidx = jax.lax.top_k(probs, k)                     # (B, T, k)
+    if cfg.norm_topk:
+        gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+
+    # Switch-style load-balance aux loss.
+    me = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(eidx, e, dtype=jnp.float32), axis=2),
+        axis=(0, 1))
+    aux = e * jnp.sum(me * ce) * cfg.router_aux_loss
+
+    # position-in-expert: slot-major cumsum (slot 0 of every token first).
+    onehot = jax.nn.one_hot(eidx, e, dtype=jnp.int32)          # (B, T, k, E)
+    flat = onehot.transpose(0, 2, 1, 3).reshape(b, k * t, e)   # slot-major
+    pos = jnp.cumsum(flat, axis=1) - flat                      # (B, k*T, E)
+    pos = jnp.sum(pos * flat, axis=-1)                         # (B, k*T)
+    eflat = eidx.transpose(0, 2, 1).reshape(b, k * t)
+    keep = pos < cap
+    dst = jnp.where(keep, eflat * cap + pos, e * cap)          # OOB => drop
+
+    xk = jnp.broadcast_to(x[:, None], (b, k, t, d)).reshape(b, k * t, d)
+    buf = jnp.zeros((b, e * cap, d), x.dtype)
+    buf = jax.vmap(lambda bf, ix, src: bf.at[ix].add(src, mode="drop"))(
+        buf, dst, xk)
+    buf = buf.reshape(b, e, cap, d)
+    buf = ctx.shard(buf, ("batch", "experts", None, None))
+
+    # Per-expert SwiGLU on the MXU: (B,E,C,D) x (E,D,F).
+    dt = x.dtype
+    h = jnp.einsum("becd,edf->becf", buf, params["wg"].astype(dt))
+    u = jnp.einsum("becd,edf->becf", buf, params["wu"].astype(dt))
+    h = jax.nn.silu(h) if cfg.act == "silu" else jax.nn.gelu(h)
+    h = ctx.shard(h * u, ("batch", "experts", None, "expert_ff"))
+    out_e = jnp.einsum("becf,efd->becd", h, params["wd"].astype(dt))
+    out_e = ctx.shard(out_e, ("batch", "experts", None, None))
+
+    rows = jax.vmap(
+        lambda bf, ix: bf.at[ix].get(mode="fill", fill_value=0))(
+        out_e.reshape(b, e * cap, d), dst)                     # (B, k*T, D)
+    rows = rows.reshape(b, k, t, d)
+    gk = (gates.transpose(0, 2, 1) * keep.reshape(b, k, t)).astype(dt)
+    y = jnp.einsum("bktd,bkt->btd", rows, gk)
+
+    if cfg.num_shared_experts:
+        y = y + L.mlp(params["shared"], x, cfg.act)
+    return y, aux

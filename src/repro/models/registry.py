@@ -1,0 +1,123 @@
+"""Uniform Model interface over every architecture family.
+
+``get_model(cfg)`` returns a :class:`Model` bundle of pure functions:
+  init(key) -> params
+  loss(params, batch) -> (loss, metrics)                 [train step core]
+  init_decode_state(batch, max_len) -> state             [concrete zeros]
+  prefill(params, batch, state) -> (last_logits, state)
+  decode(params, state, token) -> (logits, state)
+  input_specs(shape) -> dict[str, ShapeDtypeStruct]      [dry-run stand-ins]
+
+The decode path for attention families runs over the quantized KV cache
+(cfg.quant policy — PolarQuant by default); ssm/hybrid use their O(1)
+recurrent states (+ ring cache for hybrid local attention).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as TF
+from repro.models import encdec as ED
+from repro.models import ssm_lm as SSM
+from repro.models import hybrid as HY
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[[Array], dict]
+    loss: Callable[[dict, dict], tuple[Array, dict]]
+    init_decode_state: Callable[..., Any]
+    prefill: Callable[[dict, dict, Any], tuple[Array, Any]]
+    decode: Callable[[dict, Any, Array], tuple[Array, Any]]
+    input_specs: Callable[[ShapeConfig], dict]
+
+    def decode_state_specs(self, shape: ShapeConfig):
+        """ShapeDtypeStructs of the decode state (no allocation)."""
+        return jax.eval_shape(
+            lambda: self.init_decode_state(shape.global_batch, shape.seq_len))
+
+
+def _token_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, t = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        text = t - (cfg.frontend_tokens if cfg.family == "vlm" else 0)
+        specs = {"tokens": jax.ShapeDtypeStruct((b, text + 1), i32)}
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_tokens, cfg.frontend_dim), f)
+        if cfg.family == "vlm":
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_tokens, cfg.frontend_dim), f)
+        return specs
+    if shape.kind == "prefill":
+        text = t - (cfg.frontend_tokens if cfg.family == "vlm" else 0)
+        specs = {"tokens": jax.ShapeDtypeStruct((b, text), i32)}
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_tokens, cfg.frontend_dim), f)
+        if cfg.family == "vlm":
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.frontend_tokens, cfg.frontend_dim), f)
+        return specs
+    # decode: one new token against a state of size seq_len
+    return {"token": jax.ShapeDtypeStruct((b,), i32)}
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    specs = functools.partial(_token_specs, cfg)
+    if cfg.family in ("dense", "moe", "vlm"):
+        return Model(
+            cfg=cfg,
+            init=functools.partial(TF.init_params, cfg=cfg),
+            loss=lambda p, b, **kw: TF.lm_loss(p, b, cfg, **kw),
+            init_decode_state=lambda batch, max_len: TF.init_decode_caches(
+                cfg, batch, max_len),
+            prefill=lambda p, b, s: TF.prefill_fn(p, b, cfg, s),
+            decode=lambda p, s, t: TF.decode_fn(p, s, t, cfg),
+            input_specs=specs,
+        )
+    if cfg.family == "encdec":
+        return Model(
+            cfg=cfg,
+            init=functools.partial(ED.init_params, cfg=cfg),
+            loss=lambda p, b, **kw: ED.lm_loss(p, b, cfg, **kw),
+            init_decode_state=lambda batch, max_len: ED.init_decode_state(
+                cfg, batch, max_len, cfg.frontend_tokens),
+            prefill=lambda p, b, s: ED.prefill_fn(p, b, cfg, s),
+            decode=lambda p, s, t: ED.decode_fn(p, s, t, cfg),
+            input_specs=specs,
+        )
+    if cfg.family == "ssm":
+        return Model(
+            cfg=cfg,
+            init=functools.partial(SSM.init_params, cfg=cfg),
+            loss=lambda p, b, **kw: SSM.lm_loss(p, b, cfg, **kw),
+            init_decode_state=lambda batch, max_len: SSM.init_decode_state(
+                cfg, batch),
+            prefill=lambda p, b, s: SSM.prefill_fn(p, b, cfg, s),
+            decode=lambda p, s, t: SSM.decode_fn(p, s, t, cfg),
+            input_specs=specs,
+        )
+    if cfg.family == "hybrid":
+        return Model(
+            cfg=cfg,
+            init=functools.partial(HY.init_params, cfg=cfg),
+            loss=lambda p, b, **kw: HY.lm_loss(p, b, cfg, **kw),
+            init_decode_state=lambda batch, max_len: HY.init_decode_state(
+                cfg, batch, max_len),
+            prefill=lambda p, b, s: HY.prefill_fn(p, b, cfg, s),
+            decode=lambda p, s, t: HY.decode_fn(p, s, t, cfg),
+            input_specs=specs,
+        )
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,146 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrence: h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t), with
+a_t = exp(-c * softplus(Lambda) * r_t), c = 8, and r/i gates computed by
+block-diagonal linears from the (causally convolved) input branch. Training
+uses jax.lax.associative_scan over time (log-depth); decode is an O(1)
+state update. State = (conv window, h) — bounded, so the ``long_500k``
+shape is well-defined for the hybrid family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import ctx
+from repro.models import layers as L
+
+Array = jax.Array
+Params = dict
+_C = 8.0
+
+
+def init_rglru_layer(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    nb = max(cfg.num_heads, 1)
+    bs = w // nb
+    k = jax.random.split(key, 7)
+    # Lambda init so that a^c is roughly uniform in [0.9, 0.999].
+    u = jax.random.uniform(k[5], (w,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.exp(-jnp.log(u) / (2 * _C)) - 1.0)  # softplus^-1
+    return {
+        "w_gate": L.dense_init(k[0], d, w),
+        "w_in": L.dense_init(k[1], d, w),
+        "conv_w": jax.random.normal(k[2], (cfg.conv1d_width, w),
+                                    jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "rg_w": jax.random.normal(k[3], (nb, bs, bs), jnp.float32) / bs ** 0.5,
+        "rg_b": jnp.zeros((w,), jnp.float32),
+        "ig_w": jax.random.normal(k[4], (nb, bs, bs), jnp.float32) / bs ** 0.5,
+        "ig_b": jnp.zeros((w,), jnp.float32),
+        "lam": lam,
+        "w_out": L.dense_init(k[6], w, d),
+    }
+
+
+def _block_diag(x: Array, w: Array, b: Array) -> Array:
+    """x: (..., W) -> block-diagonal linear with w: (NB, bs, bs)."""
+    nb, bs, _ = w.shape
+    xb = x.reshape(*x.shape[:-1], nb, bs)
+    y = jnp.einsum("...nb,nbc->...nc", xb.astype(jnp.float32),
+                   w.astype(jnp.float32))
+    return y.reshape(*x.shape) + b
+
+
+def _causal_conv(u: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv via one lax.conv (see mamba2._causal_conv)."""
+    wn, c = w.shape
+    dn = jax.lax.conv_dimension_numbers(u.shape, (wn, 1, c),
+                                        ("NWC", "WIO", "NWC"))
+    out = jax.lax.conv_general_dilated(
+        u, w[:, None, :].astype(u.dtype), window_strides=(1,),
+        padding=[(wn - 1, 0)], dimension_numbers=dn, feature_group_count=c)
+    return out + b.astype(u.dtype)
+
+
+def _gates(params: Params, u: Array):
+    r = jax.nn.sigmoid(_block_diag(u, params["rg_w"], params["rg_b"]))
+    i = jax.nn.sigmoid(_block_diag(u, params["ig_w"], params["ig_b"]))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * u.astype(jnp.float32)
+    return a, gated
+
+
+def rglru_mix(params: Params, x: Array, cfg: ModelConfig, initial=None,
+              want_state: bool = False):
+    """The Griffin recurrent mixer. x: (B, T, D) (post layer-norm)."""
+    y_gate = jax.nn.gelu(L.linear(x, params["w_gate"]))
+    y_gate = ctx.shard(y_gate, ("batch", None, "rec_width"))
+    u_raw = ctx.shard(L.linear(x, params["w_in"]),
+                      ("batch", None, "rec_width"))
+    cw = cfg.conv1d_width
+    if initial is not None:
+        conv_state0, h0 = initial
+        padded = jnp.concatenate([conv_state0.astype(u_raw.dtype), u_raw], 1)
+        u = _causal_conv(padded, params["conv_w"], params["conv_b"])[:, cw - 1 :]
+    else:
+        h0 = None
+        u = _causal_conv(u_raw, params["conv_w"], params["conv_b"])
+    a, gated = _gates(params, u)
+
+    if h0 is not None:
+        # fold the carried state in as a virtual step 0
+        a = jnp.concatenate([jnp.zeros_like(a[:, :1]), a], axis=1)
+        gated = jnp.concatenate([h0[:, None].astype(jnp.float32), gated], axis=1)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    out = L.linear((y_gate.astype(jnp.float32) * h).astype(x.dtype),
+                   params["w_out"])
+    if want_state:
+        # conv state holds raw (pre-conv) inputs
+        if initial is not None:
+            conv_tail = jnp.concatenate(
+                [conv_state0.astype(u_raw.dtype), u_raw], axis=1)[:, -(cw - 1):]
+        else:
+            conv_tail = _tail_pad(u_raw, cw - 1)
+        return out, (conv_tail, h[:, -1])
+    return out
+
+
+def _tail_pad(u: Array, n: int) -> Array:
+    t = u.shape[1]
+    if t >= n:
+        return u[:, t - n :]
+    return jnp.pad(u, ((0, 0), (n - t, 0), (0, 0)))
+
+
+def rglru_step(params: Params, x_t: Array, cfg: ModelConfig, state):
+    """Single-token step. x_t: (B, D); state = (conv (B, cw-1, W), h (B, W))."""
+    conv_state, h = state
+    y_gate = jax.nn.gelu(L.linear(x_t, params["w_gate"]))
+    u_raw = L.linear(x_t, params["w_in"])
+    window = jnp.concatenate([conv_state, u_raw[:, None]], axis=1)
+    u = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                   params["conv_w"].astype(jnp.float32)) + params["conv_b"]
+    u = u.astype(x_t.dtype)
+    a, gated = _gates(params, u)
+    h = a * h + gated
+    out = L.linear((y_gate.astype(jnp.float32) * h).astype(x_t.dtype),
+                   params["w_out"])
+    return out, (window[:, 1:], h)
+
+
+def init_state(cfg: ModelConfig, batch: int):
+    w = cfg.lru_width or cfg.d_model
+    return (jnp.zeros((batch, cfg.conv1d_width - 1, w), jnp.dtype(cfg.dtype)),
+            jnp.zeros((batch, w), jnp.float32))

@@ -1,0 +1,82 @@
+"""Mamba-2 language model: scanned stack of (RMSNorm -> SSD mixer) blocks.
+
+Attention-free: decode state is (conv window, SSD state) per layer — O(1)
+in sequence length, so decode_32k and long_500k lower with tiny state.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import transformer as TF
+
+Array = jax.Array
+Params = dict
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = TF.init_lm_common(k1, cfg)
+    p["layers"] = L.stack_layer_params(
+        functools.partial(M2.init_mamba_layer, cfg=cfg), k2, cfg.num_layers)
+    return p
+
+
+def lm_loss(params: Params, batch: dict, cfg: ModelConfig,
+            remat: str = "block", ce_chunk: int = 512):
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    x = TF.embed_tokens(params, inputs, cfg)
+
+    from repro.distributed import ctx
+
+    def body(h, lp):
+        y = M2.mamba_mix(lp, L.rms_norm(h, lp["ln"], cfg.norm_eps), cfg)
+        # remat-saved carry stored sequence-sharded (layer re-gathers T;
+        # compute stays head-sharded) — see EXPERIMENTS.md §Perf mamba v5
+        return ctx.shard(h + y, ("batch", "seq", None)), None
+
+    if remat != "none":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    loss = TF.lm_head_loss(params, x, labels, cfg, ce_chunk)
+    return loss, {"ce": loss}
+
+
+def init_decode_state(cfg: ModelConfig, batch: int):
+    single = M2.init_state(cfg, batch)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), single)
+
+
+def prefill_fn(params: Params, batch: dict, cfg: ModelConfig, state):
+    x = TF.embed_tokens(params, batch["tokens"], cfg)
+
+    def body(h, xs):
+        lp, _unused = xs
+        y, st = M2.mamba_mix(lp, L.rms_norm(h, lp["ln"], cfg.norm_eps), cfg,
+                             want_state=True)
+        return h + y, st
+
+    x, state = jax.lax.scan(body, x, (params["layers"], state))
+    logits = TF.lm_logits(params, x[:, -1:], cfg)
+    return logits[:, 0], state
+
+
+def decode_fn(params: Params, state, token: Array, cfg: ModelConfig):
+    x = TF.embed_tokens(params, token[:, None], cfg)
+
+    def body(h, xs):
+        lp, st = xs
+        y, st = M2.mamba_step(lp, L.rms_norm(h, lp["ln"], cfg.norm_eps)[:, 0],
+                              cfg, st)
+        return h + y[:, None], st
+
+    x, state = jax.lax.scan(body, x, (params["layers"], state))
+    logits = TF.lm_logits(params, x, cfg)
+    return logits[:, 0], state

@@ -1,0 +1,243 @@
+"""Decoder-only transformer LM (dense / MoE / prefix-LM VLM families).
+
+Layer stack is scanned (jax.lax.scan over stacked layer params) with an
+optional remat policy — the HLO stays O(1) in depth, which keeps 512-device
+SPMD compiles tractable and bounds saved activations to one layer input per
+layer (sharded via ctx.shard logical rules).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import kv_cache as kvc
+from repro.distributed import ctx
+from repro.models import layers as L
+from repro.models import attn_block as AB
+from repro.models import moe as MOE
+
+Array = jax.Array
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# Common LM pieces
+# ---------------------------------------------------------------------------
+
+
+def init_lm_common(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {"embed": L.embed_init(k1, cfg.vocab_size, cfg.d_model),
+         "final_norm": jnp.ones((cfg.d_model,), jnp.float32)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(k2, cfg.d_model, cfg.vocab_size)
+    return p
+
+
+def embed_tokens(params: Params, tokens: Array, cfg: ModelConfig) -> Array:
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.scale_embedding:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return ctx.shard(x, ("batch", None, None))
+
+
+def lm_logits(params: Params, x: Array, cfg: ModelConfig) -> Array:
+    h = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ w.astype(h.dtype)
+    return ctx.shard(logits, ("batch", None, "vocab"))
+
+
+def lm_head_loss(params: Params, h: Array, labels: Array, cfg: ModelConfig,
+                 ce_chunk: int = 512) -> Array:
+    """Cross entropy WITHOUT materializing (B, T, V) fp32 logits.
+
+    Scans the lm head over token chunks (rematted so the backward
+    recomputes each chunk's logits instead of saving them) — the dominant
+    train-memory term for large-vocab archs. ``ce_chunk=0`` falls back to
+    the single-shot path (kept for A/B in EXPERIMENTS.md §Perf)."""
+    if ce_chunk <= 0 or h.shape[1] <= ce_chunk or h.shape[1] % ce_chunk:
+        return L.cross_entropy_loss(lm_logits(params, h, cfg), labels)
+    b, t, d = h.shape
+    nc = t // ce_chunk
+    hc = h.reshape(b, nc, ce_chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, ce_chunk).transpose(1, 0, 2)
+
+    def body(acc, xs):
+        hx, lx = xs
+        logits = lm_logits(params, hx, cfg)
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logits.astype(jnp.float32),
+                                 lx[..., None].clip(0), axis=-1)[..., 0]
+        mask = (lx != -1).astype(jnp.float32)
+        return (acc[0] + jnp.sum((lse - ll) * mask), acc[1] + jnp.sum(mask)), None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    (nll, n), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (hc, lc))
+    return nll / jnp.maximum(n, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Decoder block
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": jnp.ones((cfg.d_model,), jnp.float32),
+         "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+         "attn": AB.init_attention(k1, cfg)}
+    if cfg.family == "moe":
+        p["ffn"] = MOE.init_moe(k2, cfg)
+    else:
+        p["ffn"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _ffn_apply(bp: Params, x: Array, cfg: ModelConfig):
+    if cfg.family == "moe":
+        return MOE.moe_ffn(bp["ffn"], x, cfg)
+    return L.mlp(bp["ffn"], x, cfg.act), jnp.zeros((), jnp.float32)
+
+
+def block_train(bp: Params, x: Array, cfg: ModelConfig, *, mask_mode: str,
+                prefix_len: Optional[Array], window: int = 0):
+    h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+    x = x + AB.attention_train(bp["attn"], h, cfg, mask_mode=mask_mode,
+                               prefix_len=prefix_len, window=window)
+    h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+    f, aux = _ffn_apply(bp, h, cfg)
+    # 'seq' -> model: the remat-saved per-layer carry is stored
+    # sequence-sharded (Megatron-style sequence parallelism); attention
+    # re-gathers K/V as needed. Rules may map 'seq' to None to disable.
+    return ctx.shard(x + f, ("batch", "seq", None)), aux
+
+
+def block_prefill(bp: Params, x: Array, cfg: ModelConfig, cache, *,
+                  mask_mode: str, prefix_len: Optional[Array],
+                  window: int = 0):
+    h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+    y, cache = AB.attention_prefill(bp["attn"], h, cfg, cache,
+                                    mask_mode=mask_mode,
+                                    prefix_len=prefix_len, window=window)
+    x = x + y
+    h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+    f, _ = _ffn_apply(bp, h, cfg)
+    return x + f, cache
+
+
+def block_decode(bp: Params, x: Array, cfg: ModelConfig, cache, *,
+                 window: int = 0):
+    h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+    y, cache = AB.attention_decode(bp["attn"], h, cfg, cache, window=window)
+    x = x + y
+    h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+    f, _ = _ffn_apply(bp, h, cfg)
+    return x + f, cache
+
+
+# ---------------------------------------------------------------------------
+# Stacked-layer forward passes
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = init_lm_common(k1, cfg)
+    p["layers"] = L.stack_layer_params(
+        functools.partial(init_block, cfg=cfg), k2, cfg.num_layers)
+    if cfg.family == "vlm":
+        p["projector"] = L.dense_init(k3, cfg.frontend_dim, cfg.d_model)
+    return p
+
+
+def forward_hidden(params: Params, x: Array, cfg: ModelConfig, *,
+                   mask_mode: str = "causal",
+                   prefix_len: Optional[Array] = None,
+                   remat: str = "block") -> tuple[Array, Array]:
+    """Run the scanned layer stack. Returns (hidden, aux_loss_sum)."""
+
+    def body(carry, lp):
+        h, aux = carry
+        h, a = block_train(lp, h, cfg, mask_mode=mask_mode,
+                           prefix_len=prefix_len, window=cfg.window)
+        return (h, aux + a), None
+
+    if remat != "none":
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    return x, aux
+
+
+def lm_loss(params: Params, batch: dict, cfg: ModelConfig,
+            remat: str = "block", ce_chunk: int = 512):
+    """batch['tokens']: (B, T+1) int32. Returns (loss, metrics)."""
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    mask_mode = "causal" if cfg.window == 0 else "local"
+    x = embed_tokens(params, inputs, cfg)
+    prefix_len = None
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(x.dtype)  # (B, np, fd)
+        px = L.linear(patches, params["projector"])
+        x = jnp.concatenate([px, x], axis=1)
+        prefix_len = jnp.full((x.shape[0],), cfg.frontend_tokens, jnp.int32)
+        mask_mode = "prefix"
+    h, aux = forward_hidden(params, x, cfg, mask_mode=mask_mode,
+                            prefix_len=prefix_len, remat=remat)
+    if cfg.family == "vlm":
+        h = h[:, cfg.frontend_tokens :]
+    loss = lm_head_loss(params, h, labels, cfg, ce_chunk)
+    return loss + aux, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode over stacked caches
+# ---------------------------------------------------------------------------
+
+
+def init_decode_caches(cfg: ModelConfig, batch: int, max_len: int):
+    single = AB.make_cache(cfg, batch, max_len)
+    return jax.tree_util.tree_map(
+        lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), single)
+
+
+def prefill_fn(params: Params, batch: dict, cfg: ModelConfig, caches):
+    tokens = batch["tokens"]
+    x = embed_tokens(params, tokens, cfg)
+    mask_mode = "causal" if cfg.window == 0 else "local"
+    prefix_len = None
+    if cfg.family == "vlm":
+        px = L.linear(batch["patches"].astype(x.dtype), params["projector"])
+        x = jnp.concatenate([px, x], axis=1)
+        prefix_len = jnp.full((x.shape[0],), cfg.frontend_tokens, jnp.int32)
+        mask_mode = "prefix"
+
+    def body(h, xs):
+        lp, cache = xs
+        h, cache = block_prefill(lp, h, cfg, cache, mask_mode=mask_mode,
+                                 prefix_len=prefix_len, window=cfg.window)
+        return h, cache
+
+    x, caches = jax.lax.scan(body, x, (params["layers"], caches))
+    logits = lm_logits(params, x[:, -1:], cfg)
+    return logits[:, 0], caches
+
+
+def decode_fn(params: Params, caches, token: Array, cfg: ModelConfig):
+    """token: (B,) int32 -> (logits (B, V), caches)."""
+    x = embed_tokens(params, token[:, None], cfg)
+
+    def body(h, xs):
+        lp, cache = xs
+        h, cache = block_decode(lp, h, cfg, cache, window=cfg.window)
+        return h, cache
+
+    x, caches = jax.lax.scan(body, x, (params["layers"], caches))
+    logits = lm_logits(params, x, cfg)
+    return logits[:, 0], caches

@@ -1,0 +1,3 @@
+"""Optimizers and LR schedules (from scratch — no optax dependency)."""
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update  # noqa: F401
+from repro.optim.schedule import cosine_schedule, linear_warmup  # noqa: F401

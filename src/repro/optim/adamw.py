@@ -1,0 +1,64 @@
+"""AdamW with decoupled weight decay, fp32 moments, global-norm clipping.
+
+State shards exactly like the parameters (ZeRO: m/v inherit param specs).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class AdamWState(NamedTuple):
+    step: Array        # () int32
+    m: Any             # pytree like params (fp32)
+    v: Any             # pytree like params (fp32)
+
+
+def adamw_init(params: Any) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree_util.tree_map(zeros, params),
+                      v=jax.tree_util.tree_map(zeros, params))
+
+
+def global_norm(tree: Any) -> Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def adamw_update(params: Any, grads: Any, state: AdamWState, lr: Array, *,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, clip_norm: float = 1.0):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32) * scale
+        m = b1 * m + (1.0 - b1) * g32
+        v = b2 * v + (1.0 - b2) * g32 * g32
+        mh = m / bc1
+        vh = v / bc2
+        p32 = p.astype(jnp.float32)
+        # decoupled weight decay (skip obvious gains/biases: ndim < 2)
+        wd = weight_decay if p.ndim >= 2 else 0.0
+        p32 = p32 - lr * (mh / (jnp.sqrt(vh) + eps) + wd * p32)
+        return p32.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step, new_m, new_v), {"grad_norm": gnorm}

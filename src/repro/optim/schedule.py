@@ -1,0 +1,19 @@
+"""Learning-rate schedules as pure functions of the step."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, peak_lr: float, warmup_steps: int):
+    s = jnp.asarray(step, jnp.float32)
+    return peak_lr * jnp.minimum(1.0, (s + 1.0) / max(warmup_steps, 1))
+
+
+def cosine_schedule(step, peak_lr: float, warmup_steps: int,
+                    total_steps: int, min_ratio: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = linear_warmup(step, peak_lr, warmup_steps)
+    prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                    0.0, 1.0)
+    cos = min_ratio + (1.0 - min_ratio) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(s < warmup_steps, warm, peak_lr * cos)

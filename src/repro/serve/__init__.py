@@ -1,0 +1,2 @@
+"""Serving: batched decode engine over quantized KV caches."""
+from repro.serve.engine import ServeEngine, GenerationConfig  # noqa: F401

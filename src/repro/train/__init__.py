@@ -1,0 +1,3 @@
+"""Training: step construction, trainer loop, fault tolerance."""
+from repro.train.train_step import TrainState, make_train_step, init_train_state  # noqa: F401
+from repro.train.trainer import Trainer, TrainerConfig  # noqa: F401

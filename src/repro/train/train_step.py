@@ -1,0 +1,191 @@
+"""Train-step construction: grad accumulation, remat, AdamW, sharding.
+
+``make_train_step`` returns a jit'd (state, batch) -> (state, metrics) with
+donated state, parameter/optimizer shardings resolved from
+distributed/sharding.py, and activations constrained via the ctx logical
+rules. Gradient accumulation scans over microbatches (bounds activation
+memory; grads accumulate in param-sharded fp32 buffers).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed import ctx
+from repro.distributed import sharding as shd
+from repro.models.registry import Model
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule
+
+Array = jax.Array
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+class StepConfig(NamedTuple):
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    microbatches: int = 1
+    remat: str = "block"
+    ce_chunk: int = 512        # 0 => unchunked lm-head loss (A/B baseline)
+    seq_shard: bool = True     # sequence-shard remat-saved activations
+    param_dtype: str = "float32"  # bfloat16 halves grad-reduce wire bytes
+                                  # (fp32 master lives in the Adam update)
+
+
+def init_train_state(model: Model, key, param_dtype: str = "float32") -> TrainState:
+    params = model.init(key)
+    if param_dtype != "float32":
+        dt = jnp.dtype(param_dtype)
+        params = jax.tree_util.tree_map(lambda p: p.astype(dt), params)
+    return TrainState(params=params, opt=adamw_init(params))
+
+
+def train_state_pspecs(state_shapes: TrainState, mesh: Mesh,
+                       cfg: ModelConfig) -> TrainState:
+    pspecs = shd.param_pspecs(state_shapes.params, mesh, cfg)
+    return TrainState(
+        params=pspecs,
+        opt=AdamWState(step=P(),
+                       m=shd.param_pspecs(state_shapes.opt.m, mesh, cfg),
+                       v=shd.param_pspecs(state_shapes.opt.v, mesh, cfg)))
+
+
+def _loss_and_grad(model: Model, params, batch, remat: str, ce_chunk: int):
+    def lf(p):
+        loss, metrics = model.loss(p, batch, remat=remat, ce_chunk=ce_chunk)
+        return loss, metrics
+    (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+    return loss, metrics, grads
+
+
+def make_train_step(model: Model, mesh: Optional[Mesh],
+                    step_cfg: StepConfig = StepConfig(), *,
+                    global_batch: int = 8, jit: bool = True):
+    """Build the train step. With ``mesh``: fully sharded (FSDP x TP)."""
+    cfg = model.cfg
+    rules = (shd.logical_rules(cfg, mesh, global_batch)
+             if mesh is not None else None)
+    if rules is not None and not step_cfg.seq_shard:
+        rules = dict(rules, seq=None)
+
+    def step(state: TrainState, batch: dict):
+        def run():
+            if step_cfg.microbatches <= 1:
+                loss, metrics, grads = _loss_and_grad(
+                    model, state.params, batch, step_cfg.remat,
+                    step_cfg.ce_chunk)
+            else:
+                n = step_cfg.microbatches
+                micro = jax.tree_util.tree_map(
+                    lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]),
+                    batch)
+
+                def body(acc, mb):
+                    loss_a, metrics_a, g_a = acc
+                    loss, metrics, grads = _loss_and_grad(
+                        model, state.params, mb, step_cfg.remat,
+                        step_cfg.ce_chunk)
+                    g_a = jax.tree_util.tree_map(jnp.add, g_a, grads)
+                    return (loss_a + loss,
+                            jax.tree_util.tree_map(jnp.add, metrics_a, metrics),
+                            g_a), None
+
+                # microbatch 0 outside the scan fixes the metric/grad trees
+                loss0, metrics0, g0 = _loss_and_grad(
+                    model, state.params,
+                    jax.tree_util.tree_map(lambda x: x[0], micro),
+                    step_cfg.remat, step_cfg.ce_chunk)
+                rest = jax.tree_util.tree_map(lambda x: x[1:], micro)
+                (loss, metrics, grads), _ = jax.lax.scan(
+                    body, (loss0, metrics0, g0), rest)
+                inv = 1.0 / n
+                loss = loss * inv
+                metrics = jax.tree_util.tree_map(lambda x: x * inv, metrics)
+                grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+
+            lr = cosine_schedule(state.opt.step, step_cfg.peak_lr,
+                                 step_cfg.warmup_steps, step_cfg.total_steps)
+            params, opt, om = adamw_update(
+                state.params, grads, state.opt, lr,
+                weight_decay=step_cfg.weight_decay,
+                clip_norm=step_cfg.clip_norm)
+            metrics = dict(metrics, loss=loss, lr=lr, **om)
+            return TrainState(params, opt), metrics
+
+        if rules is not None:
+            with ctx.use_sharding(mesh, rules):
+                return run()
+        return run()
+
+    if not jit:
+        return step
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(0,))
+
+    state_shapes = jax.eval_shape(
+        lambda k: init_train_state(model, k, step_cfg.param_dtype),
+        jax.random.PRNGKey(0))
+    state_specs = train_state_pspecs(state_shapes, mesh, cfg)
+    state_shd = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), state_specs,
+        is_leaf=lambda x: isinstance(x, P))
+    _cache: dict = {}
+
+    def jitted(state, batch):
+        key = tuple(sorted((k, v.shape, str(v.dtype)) for k, v in batch.items()))
+        if key not in _cache:
+            bspecs = shd.batch_pspecs(
+                {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                 for k, v in batch.items()}, mesh, global_batch)
+            _cache[key] = jax.jit(
+                step,
+                in_shardings=(state_shd, {k: NamedSharding(mesh, s)
+                                          for k, s in bspecs.items()}),
+                out_shardings=(state_shd, None), donate_argnums=(0,))
+        return _cache[key](state, batch)
+
+    jitted.state_specs = state_specs      # for checkpoint/dry-run use
+    jitted.state_shardings = state_shd
+    return jitted
+
+
+def lower_train_step(model: Model, mesh: Mesh, step_cfg: StepConfig,
+                     global_batch: int, batch_specs: dict):
+    """Lower (no execution) for the dry-run: returns jax.stages.Lowered."""
+    cfg = model.cfg
+    state_shapes = jax.eval_shape(
+        lambda k: init_train_state(model, k, step_cfg.param_dtype),
+        jax.random.PRNGKey(0))
+    state_specs = train_state_pspecs(state_shapes, mesh, cfg)
+    state_in = jax.tree_util.tree_map(
+        lambda sh, sp: jax.ShapeDtypeStruct(
+            sh.shape, sh.dtype, sharding=NamedSharding(mesh, sp)),
+        state_shapes, state_specs,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)))
+    bspecs = shd.batch_pspecs(batch_specs, mesh, global_batch)
+    batch_in = {k: jax.ShapeDtypeStruct(
+        v.shape, v.dtype, sharding=NamedSharding(mesh, bspecs[k]))
+        for k, v in batch_specs.items()}
+
+    step = make_train_step(model, mesh, step_cfg,
+                           global_batch=global_batch, jit=False)
+    state_shd = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), state_specs,
+        is_leaf=lambda x: isinstance(x, P))
+    fn = jax.jit(step, in_shardings=(state_shd, {k: NamedSharding(mesh, s)
+                                                 for k, s in bspecs.items()}),
+                 out_shardings=(state_shd, None), donate_argnums=(0,))
+    return fn.lower(state_in, batch_in)

@@ -1,0 +1,130 @@
+"""Trainer: loop + fault tolerance (checkpoint/restart, preemption,
+straggler watchdog) around make_train_step.
+
+Fault-tolerance contract:
+  * checkpoints save (params, optimizer, data state) with an atomic
+    manifest; restart resumes at the exact step with the exact next batch
+    (the data pipeline is deterministic in (seed, step));
+  * SIGTERM triggers an emergency checkpoint at the next step boundary
+    (preemption tolerance);
+  * a wall-clock watchdog flags straggling steps (> ``straggler_factor`` x
+    the trailing median) — at scale this is the hook for re-sharding or
+    hot-spare swap; here it logs and records the event;
+  * checkpoints are mesh-agnostic: restarting on a different device count
+    re-shards on restore (elastic scaling).
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager, latest_step, restore_checkpoint
+from repro.data.pipeline import SyntheticLMDataset
+from repro.models.registry import Model
+from repro.train.train_step import (StepConfig, TrainState, init_train_state,
+                                    make_train_step)
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep_checkpoints: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, model: Model, dataset: SyntheticLMDataset,
+                 cfg: TrainerConfig, step_cfg: StepConfig = StepConfig(),
+                 mesh=None, log_fn: Callable[[str], None] = print):
+        self.model = model
+        self.dataset = dataset
+        self.cfg = cfg
+        self.step_cfg = step_cfg
+        self.mesh = mesh
+        self.log = log_fn
+        self.step_fn = make_train_step(
+            model, mesh, step_cfg, global_batch=dataset.global_batch)
+        self.ckpt = CheckpointManager(cfg.checkpoint_dir,
+                                      keep=cfg.keep_checkpoints)
+        self.straggler_events: list[int] = []
+        self._durations: list[float] = []
+        self.step = 0
+        self.state: Optional[TrainState] = None
+
+    # -- state ----------------------------------------------------------
+    def init_or_restore(self) -> TrainState:
+        last = latest_step(self.cfg.checkpoint_dir)
+        if last is not None:
+            shapes = jax.eval_shape(
+                lambda k: init_train_state(self.model, k),
+                jax.random.PRNGKey(self.cfg.seed))
+            shardings = getattr(self.step_fn, "state_shardings", None)
+            self.state, extra = restore_checkpoint(
+                self.cfg.checkpoint_dir, last, shapes, shardings)
+            self.step = int(extra["step"])
+            self.dataset.state.step = int(extra["data_step"])
+            self.log(f"[trainer] restored step={self.step} "
+                     f"(elastic: {jax.device_count()} devices)")
+        else:
+            self.state = init_train_state(self.model,
+                                          jax.random.PRNGKey(self.cfg.seed))
+            if self.mesh is not None and hasattr(self.step_fn, "state_shardings"):
+                self.state = jax.device_put(self.state,
+                                            self.step_fn.state_shardings)
+        return self.state
+
+    def _save(self):
+        self.ckpt.save(self.step, self.state,
+                       extra={"step": self.step,
+                              "data_step": self.dataset.state.step})
+
+    # -- loop ------------------------------------------------------------
+    def run(self) -> dict:
+        if self.state is None:
+            self.init_or_restore()
+        history = []
+        while self.step < self.cfg.total_steps:
+            batch = self.dataset.next_batch()
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            t0 = time.monotonic()
+            self.state, metrics = self.step_fn(self.state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dur = time.monotonic() - t0
+            self.step += 1
+            history.append(float(metrics["loss"]))
+
+            # straggler watchdog
+            if len(self._durations) >= 5:
+                med = statistics.median(self._durations[-20:])
+                if dur > self.cfg.straggler_factor * med:
+                    self.straggler_events.append(self.step)
+                    self.log(f"[trainer] straggler at step {self.step}: "
+                             f"{dur:.3f}s vs median {med:.3f}s")
+            self._durations.append(dur)
+
+            if self.step % self.cfg.log_every == 0:
+                self.log(f"[trainer] step={self.step} "
+                         f"loss={float(metrics['loss']):.4f} "
+                         f"gnorm={float(metrics['grad_norm']):.3f} "
+                         f"lr={float(metrics['lr']):.2e} {dur*1e3:.0f}ms")
+            if self.step % self.cfg.checkpoint_every == 0:
+                self._save()
+            if self.ckpt.maybe_emergency_save(
+                    self.step, self.state,
+                    extra={"step": self.step,
+                           "data_step": self.dataset.state.step}):
+                self.log("[trainer] preemption checkpoint written; exiting")
+                break
+        if self.step % self.cfg.checkpoint_every:
+            self._save()
+        return {"losses": history, "stragglers": self.straggler_events,
+                "final_step": self.step}

@@ -1,0 +1,82 @@
+"""Shared utilities: pytree dataclasses, dtype helpers, shape math."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, TypeVar
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+T = TypeVar("T")
+
+
+def pytree_dataclass(cls: type[T]) -> type[T]:
+    """A frozen dataclass registered as a JAX pytree.
+
+    Fields annotated with ``static=True`` metadata become aux (hashable) data.
+    """
+    cls = dataclasses.dataclass(frozen=True)(cls)
+    data_fields = [f.name for f in dataclasses.fields(cls) if not f.metadata.get("static")]
+    meta_fields = [f.name for f in dataclasses.fields(cls) if f.metadata.get("static")]
+    jax.tree_util.register_dataclass(cls, data_fields=data_fields, meta_fields=meta_fields)
+    return cls
+
+
+def static_field(**kwargs):
+    return dataclasses.field(metadata={"static": True}, **kwargs)
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total bytes of all arrays (or ShapeDtypeStructs) in a pytree."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for leaf in leaves:
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            total += int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+def tree_params_count(tree: Any) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(tree)
+               if hasattr(l, "shape"))
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f}{unit}"
+        n /= 1024.0
+    return f"{n:.2f}PiB"
+
+
+def human_count(n: float) -> str:
+    for unit in ("", "K", "M", "B", "T"):
+        if abs(n) < 1000.0:
+            return f"{n:.2f}{unit}"
+        n /= 1000.0
+    return f"{n:.2f}Q"
+
+
+def split_key(key: jax.Array, n: int) -> list[jax.Array]:
+    return list(jax.random.split(key, n))
+
+
+@functools.lru_cache(maxsize=None)
+def pow2(bits: int) -> int:
+    return 1 << bits
+
+
+def assert_divisible(a: int, b: int, what: str = "") -> None:
+    if a % b != 0:
+        raise ValueError(f"{what}: {a} is not divisible by {b}")

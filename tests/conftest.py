@@ -1,0 +1,40 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the real single CPU device; only the dry-run forces 512 devices (in a
+subprocess)."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def rope_structured_keys(key, b, h, t, d, outlier_channels=4,
+                         rope_base=10000.0):
+    """Synthetic keys matching the paper's premise (Fig. 1 / KVQuant):
+    pre-RoPE outlier channels have CONSISTENT magnitude (large fixed mean,
+    small spread) and sit in low-frequency rotary pairs; RoPE rotation then
+    sweeps that magnitude across both paired dims (channel-wise outliers
+    post-RoPE), while the polar radius stays tight and the angle drifts
+    slowly — exactly the structure PolarQuant exploits."""
+    import jax.numpy as jnp
+    from repro.models.layers import apply_rope
+    k1, k2, k3 = jax.random.split(key, 3)
+    half = d // 2
+    # low-frequency pairs (phi = base^(-2j/d) smallest for j near half-1)
+    lo = 3 * half // 4
+    idx = lo + jax.random.choice(k2, half - lo, (outlier_channels,),
+                                 replace=False)
+    mean = jnp.zeros((d,))
+    signs = jax.random.rademacher(k3, (outlier_channels,), jnp.float32)
+    mean = mean.at[idx].set(10.0 * signs)
+    pre = jax.random.normal(k1, (b, h, t, d)) + mean
+    pos = jnp.arange(t, dtype=jnp.int32)
+    return apply_rope(pre, pos, rope_base)
+
+
+@pytest.fixture
+def structured_keys():
+    return rope_structured_keys

@@ -1,0 +1,76 @@
+"""Checkpointing: roundtrip, atomic manifests, retention, elastic restore."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import (CheckpointManager, latest_step,
+                              restore_checkpoint, save_checkpoint)
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (8, 16)),
+            "nested": {"b": jnp.arange(10, dtype=jnp.int32),
+                       "c": jnp.float32(3.5)}}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 7, t, extra={"step": 7})
+    assert latest_step(str(tmp_path)) == 7
+    target = jax.tree_util.tree_map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), t)
+    restored, extra = restore_checkpoint(str(tmp_path), 7, target)
+    assert extra == {"step": 7}
+    for a, b in zip(jax.tree_util.tree_leaves(t),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_torn_checkpoint_invisible(tmp_path):
+    """A step dir without a manifest (preempted mid-save) is never listed."""
+    t = _tree()
+    save_checkpoint(str(tmp_path), 3, t)
+    os.makedirs(tmp_path / "step_0000000009")
+    (tmp_path / "step_0000000009" / "shards-00000.npz").write_bytes(b"junk")
+    assert latest_step(str(tmp_path)) == 3
+
+
+def test_retention_gc(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.save(s, t)
+    steps = sorted(n for n in os.listdir(tmp_path) if n.startswith("step_"))
+    assert len(steps) == 2
+    assert latest_step(str(tmp_path)) == 4
+
+
+def test_manifest_records_shapes(tmp_path):
+    t = _tree()
+    p = save_checkpoint(str(tmp_path), 1, t)
+    man = json.load(open(os.path.join(p, "manifest.json")))
+    assert man["leaves"]["a"]["shape"] == [8, 16]
+    assert man["leaves"]["nested::b"]["dtype"] == "int32"
+
+
+def test_elastic_restore_across_shardings(tmp_path):
+    """Save sharded on an N-device mesh; restore onto a different layout.
+
+    On 1 CPU device this degenerates to replicated<->replicated, but the
+    offset-keyed shard format is the same code path the 512-way dry-run
+    meshes use; per-shard offsets are exercised in the multi-process branch
+    of save_checkpoint."""
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sharding = jax.NamedSharding(mesh, jax.sharding.PartitionSpec("data"))
+    t = {"w": jax.device_put(jnp.arange(32, dtype=jnp.float32), sharding)}
+    save_checkpoint(str(tmp_path), 5, t)
+    target = {"w": jax.ShapeDtypeStruct((32,), jnp.float32)}
+    restored, _ = restore_checkpoint(str(tmp_path), 5, target,
+                                     shardings={"w": sharding})
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.arange(32, dtype=np.float32))

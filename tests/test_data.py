@@ -1,0 +1,51 @@
+"""Data pipeline: determinism, resume semantics, host sharding, learnability."""
+import numpy as np
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.data import SyntheticLMDataset
+
+
+def _ds(**kw):
+    cfg = reduce_for_smoke(get_config("tinyllama-1.1b"))
+    return SyntheticLMDataset(cfg, global_batch=kw.pop("gb", 8),
+                              seq_len=kw.pop("sl", 64), **kw)
+
+
+def test_deterministic_in_seed_and_step():
+    a = _ds(seed=1).local_batch_np(step=5)
+    b = _ds(seed=1).local_batch_np(step=5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = _ds(seed=2).local_batch_np(step=5)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_resume_replays_exact_stream():
+    ds = _ds(seed=3)
+    seen = [ds.next_batch()["tokens"] for _ in range(4)]
+    ds2 = _ds(seed=3)
+    ds2.state.step = 2
+    np.testing.assert_array_equal(ds2.next_batch()["tokens"], seen[2])
+    np.testing.assert_array_equal(ds2.next_batch()["tokens"], seen[3])
+
+
+def test_host_sharding_partitions_batch():
+    full = _ds(seed=4, process_index=0, process_count=1).local_batch_np(0)
+    h0 = _ds(seed=4, gb=8, process_index=0, process_count=2).local_batch_np(0)
+    h1 = _ds(seed=4, gb=8, process_index=1, process_count=2).local_batch_np(0)
+    np.testing.assert_array_equal(
+        np.concatenate([h0["tokens"], h1["tokens"]]), full["tokens"])
+
+
+def test_stream_is_learnable():
+    """Markov structure: unigram-context continuation entropy must be well
+    below uniform — otherwise training can't show loss decreasing."""
+    ds = _ds(seed=5, gb=16, sl=256)
+    toks = ds.next_batch()["tokens"]
+    from collections import Counter, defaultdict
+    ctx = defaultdict(Counter)
+    for row in toks:
+        for a, b in zip(row[:-1], row[1:]):
+            ctx[int(a)][int(b)] += 1
+    top_frac = np.mean([max(v.values()) / sum(v.values())
+                        for v in ctx.values() if sum(v.values()) > 3])
+    assert top_frac > 0.5, top_frac  # strongly predictable continuations

@@ -1,0 +1,49 @@
+"""SnapKV-style eviction: selection sanity + composition with PolarQuant."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.eviction import snapkv_select
+
+
+def test_keeps_observation_window():
+    b, h, t, d, w = 1, 2, 128, 16, 16
+    k = jax.random.normal(jax.random.PRNGKey(0), (b, h, t, d))
+    q_obs = jax.random.normal(jax.random.PRNGKey(1), (b, h, w, d))
+    mask = snapkv_select(q_obs, k, budget=48, obs_window=w)
+    assert mask.shape == (b, h, t)
+    # observation window always kept
+    assert bool(mask[:, :, t - w :].all())
+    # budget respected
+    assert int(mask.sum(-1).max()) <= 48
+
+
+def test_selects_high_attention_tokens():
+    b, h, t, d, w = 1, 1, 64, 8, 8
+    k = jax.random.normal(jax.random.PRNGKey(2), (b, h, t, d)) * 0.05
+    # token 7 strongly attended: align it with the observation queries
+    q_obs = jax.random.normal(jax.random.PRNGKey(3), (b, h, w, d))
+    k = k.at[:, :, 7].set(q_obs.mean(axis=2) * 10)
+    mask = snapkv_select(q_obs, k, budget=16, obs_window=w)
+    assert bool(mask[0, 0, 7])
+
+
+def test_eviction_error_decreases_with_budget():
+    b, h, t, d, w = 1, 2, 256, 32, 16
+    k = jax.random.normal(jax.random.PRNGKey(4), (b, h, t, d))
+    v = jax.random.normal(jax.random.PRNGKey(5), (b, h, t, d))
+    q = jax.random.normal(jax.random.PRNGKey(6), (b, h, 4, d))
+    q_obs = jax.random.normal(jax.random.PRNGKey(7), (b, h, w, d))
+
+    def attn(mask=None):
+        s = jnp.einsum("bhqd,bhtd->bhqt", q * d ** -0.5, k)
+        if mask is not None:
+            s = jnp.where(mask[:, :, None, :], s, -1e30)
+        return jnp.einsum("bhqt,bhtd->bhqd", jax.nn.softmax(s, -1), v)
+
+    full = attn()
+    errs = []
+    for budget in (32, 128, 224):
+        o = attn(snapkv_select(q_obs, k, budget, w))
+        errs.append(float(jnp.linalg.norm(o - full)))
+    assert errs[0] > errs[1] > errs[2], errs

@@ -1,0 +1,83 @@
+"""Loop-aware HLO static cost model: trip-count multiplication, dot flops,
+slicing-aware traffic, collective accounting."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_cost import (HloCostModel, analyze_text,
+                                   parse_computations, _type_elems_bytes)
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_trip_count_multiplies_flops():
+    def body(c, w):
+        return c @ w, None
+    x = jnp.zeros((64, 64))
+    ws = jnp.zeros((7, 64, 64))
+    txt = _compile(lambda x, ws: jax.lax.scan(body, x, ws)[0], x, ws)
+    res = analyze_text(txt)
+    expect = 7 * 2 * 64 ** 3
+    assert 0.95 * expect <= res["flops"] <= 1.2 * expect, res["flops"]
+
+
+def test_nested_scans_multiply():
+    def inner(c, w):
+        return c @ w, None
+
+    def outer(c, _):
+        y, _ = jax.lax.scan(inner, c, jnp.zeros((5, 32, 32)))
+        return y, None
+
+    x = jnp.zeros((32, 32))
+    txt = _compile(lambda x: jax.lax.scan(outer, x, None, length=3)[0], x)
+    res = analyze_text(txt)
+    expect = 15 * 2 * 32 ** 3
+    assert 0.9 * expect <= res["flops"] <= 1.3 * expect, res["flops"]
+
+
+def test_transcendentals_counted():
+    x = jnp.zeros((128, 128))
+    txt = _compile(lambda x: jnp.exp(x) + jnp.tanh(x), x)
+    res = analyze_text(txt)
+    assert res["transcendentals"] == 2 * 128 * 128
+
+
+def test_dynamic_slice_not_counted_fully():
+    """Scan xs slicing must cost the slice, not the whole stacked array."""
+    big = jnp.zeros((1000, 64))
+
+    def body(c, i):
+        return c + jax.lax.dynamic_slice_in_dim(big, i, 1, 0)[0], None
+
+    txt = _compile(
+        lambda: jax.lax.scan(body, jnp.zeros((64,)),
+                             jnp.arange(4, dtype=jnp.int32))[0])
+    res = analyze_text(txt)
+    # 4 iterations x O(small); full-array counting would be ~4 * 256KB
+    assert res["hbm_bytes"] < 4 * big.nbytes * 0.5, res["hbm_bytes"]
+
+
+def test_type_parse():
+    assert _type_elems_bytes("bf16[2,3]{1,0}") == (6, 12)
+    assert _type_elems_bytes("(f32[4], u8[8])") == (12, 24)
+    assert _type_elems_bytes("pred[]") == (1, 1)
+
+
+def test_comment_stripping_in_tuple_types():
+    txt = """
+%c (p: s32[]) -> s32[] {
+  ROOT %p = s32[] parameter(0)
+}
+ENTRY %e (a: f32[8]) -> (f32[8], f32[8]) {
+  %a = f32[8]{0} parameter(0)
+  %m = f32[8]{0} multiply(%a, %a)
+  ROOT %t = (f32[8]{0}, /*index=1*/f32[8]{0}) tuple(%m, %a)
+}
+"""
+    comps = parse_computations(txt)
+    assert "e" in comps
+    kinds = [o.kind for o in comps["e"]]
+    assert "multiply" in kinds and "tuple" in kinds

@@ -1,0 +1,127 @@
+"""Pallas kernels (interpret mode) vs pure-jnp oracles: shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import QuantConfig, init_cache, prefill
+from repro.core.kv_cache import decode_attention
+from repro.kernels import ops
+from repro.kernels import ref as R
+
+
+def _inputs(seed, b, hkv, qh, d, g, gcount, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    k = jax.random.normal(ks[0], (b, hkv, gcount * g, d), dtype)
+    q = jax.random.normal(ks[1], (b, hkv, qh, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, gcount * g, d), dtype)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# encode kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d,g", [(32, 16), (64, 32), (128, 8)])
+@pytest.mark.parametrize("r,t", [(4, 4), (3, 3), (5, 3)])
+def test_encode_kernel_exact(d, g, r, t):
+    _, k, _ = _inputs(0, 1, 2, 1, d, g, 3)
+    out_ref = ops.polar_encode(k, r_bits=r, t_bits=t, group_size=g,
+                               backend="ref")
+    out_pl = ops.polar_encode(k, r_bits=r, t_bits=t, group_size=g,
+                              backend="interpret")
+    np.testing.assert_array_equal(np.asarray(out_ref[0]), np.asarray(out_pl[0]))
+    for a, b in zip(out_ref[1:], out_pl[1:]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_encode_kernel_dtypes(dtype):
+    _, k, _ = _inputs(1, 1, 1, 1, 32, 16, 2, dtype)
+    out_ref = ops.polar_encode(k, group_size=16, backend="ref")
+    out_pl = ops.polar_encode(k, group_size=16, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(out_ref[0]), np.asarray(out_pl[0]))
+
+
+# ---------------------------------------------------------------------------
+# QK-score kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("d,g,gcount,qh", [(32, 16, 4, 2), (64, 32, 2, 4),
+                                           (128, 16, 2, 1)])
+@pytest.mark.parametrize("r,t", [(4, 4), (3, 3)])
+def test_qk_kernel_sweep(d, g, gcount, qh, r, t):
+    q, k, _ = _inputs(2, 2, 2, qh, d, g, gcount)
+    enc = ops.polar_encode(k, r_bits=r, t_bits=t, group_size=g, backend="ref")
+    s_ref = ops.polar_qk_scores(q, *enc, r_bits=r, t_bits=t, backend="ref")
+    s_pl = ops.polar_qk_scores(q, *enc, r_bits=r, t_bits=t,
+                               backend="interpret", block_groups=2)
+    np.testing.assert_allclose(np.asarray(s_ref), np.asarray(s_pl),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused decode-attention kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("quantized_values", [False, True])
+@pytest.mark.parametrize("length_frac", [0.3, 1.0])
+def test_fused_attention_kernel(quantized_values, length_frac):
+    b, hkv, qh, d, g, gcount = 2, 2, 4, 32, 16, 4
+    q, k, v = _inputs(3, b, hkv, qh, d, g, gcount)
+    enc = ops.polar_encode(k, group_size=g, backend="ref")
+    length = jnp.asarray(int(gcount * g * length_frac) // g * g, jnp.int32)
+    if quantized_values:
+        from repro.core.quantizers import encode_values
+        qv = encode_values(v, 4)
+        vals, vs, vz = qv.codes, qv.scale, qv.zero
+    else:
+        vals, vs, vz = v, None, None
+    o_ref = ops.polar_decode_attention_grouped(
+        q, *enc, vals, vs, vz, length, backend="ref")
+    o_pl = ops.polar_decode_attention_grouped(
+        q, *enc, vals, vs, vz, length, backend="interpret", block_groups=2)
+    for a, b_ in zip(o_ref, o_pl):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_full_path_matches_core_decode_attention():
+    """ops.polar_decode_attention_full == core.decode_attention (the jnp
+    serving path) including the fp residual segment."""
+    b, hkv, d, g = 1, 2, 32, 16
+    t = 3 * g + 7
+    cfg = QuantConfig(method="polar", group_size=g, residual_dtype="float32")
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    k = jax.random.normal(ks[0], (b, hkv, t, d))
+    v = jax.random.normal(ks[1], (b, hkv, t, d))
+    cache = prefill(init_cache(cfg, b, hkv, d, 4 * g, dtype=jnp.float32), k, v)
+    q = jax.random.normal(ks[2], (b, hkv * 2, d))
+    o_core = decode_attention(cache, q)
+    for backend in ("ref", "interpret"):
+        o = ops.polar_decode_attention_full(
+            q, cache.key_codes, cache.key_scales["rho_scale"],
+            cache.key_scales["rho_zero"], cache.key_scales["theta_scale"],
+            cache.key_scales["theta_zero"], cache.key_residual,
+            cache.value_fp, None, None, cache.length, backend=backend)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(o_core),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_merge_softmax_partials_exact():
+    """The associative merge must equal a monolithic softmax."""
+    s = jax.random.normal(jax.random.PRNGKey(5), (3, 50))
+    v = jax.random.normal(jax.random.PRNGKey(6), (3, 50, 8))
+    full = jnp.einsum("bt,btd->bd", jax.nn.softmax(s, -1), v)
+    parts = []
+    for lo, hi in [(0, 20), (20, 35), (35, 50)]:
+        m = jnp.max(s[:, lo:hi], -1)
+        p = jnp.exp(s[:, lo:hi] - m[:, None])
+        parts.append((jnp.einsum("bt,btd->bd", p, v[:, lo:hi]),
+                      m, jnp.sum(p, -1)))
+    merged = ops.merge_softmax_partials(parts)
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(full),
+                               rtol=1e-5, atol=1e-6)

@@ -1,0 +1,130 @@
+"""KV cache invariants: streaming parity, ring semantics, masks, values."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import QuantConfig, append, decode_attention, init_cache, prefill
+from repro.core.kv_cache import position_masks
+
+
+def _kv(seed, b, h, t, d):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return jax.random.normal(k1, (b, h, t, d)), jax.random.normal(k2, (b, h, t, d))
+
+
+@pytest.mark.parametrize("method", ["polar", "kivi", "zipcache", "int", "none"])
+def test_prefill_equals_streaming(method):
+    """Bulk prefill and token-by-token append must agree.
+
+    Polar (floor grid) and fp caches agree bit-exactly; the round-to-nearest
+    (midtread) baselines may flip codes at exact .5 boundaries when XLA
+    fuses the two paths differently, so they get a one-quantization-step
+    tolerance."""
+    B, H, d, g, T = 1, 2, 32, 16, 70
+    k, v = _kv(0, B, H, T, d)
+    cfg = QuantConfig(method=method, group_size=g, key_bits=4)
+    ca = prefill(init_cache(cfg, B, H, d, 128), k, v)
+    cb = init_cache(cfg, B, H, d, 128)
+    ap = jax.jit(append)
+    for i in range(T):
+        cb = ap(cb, k[:, :, i : i + 1], v[:, :, i : i + 1])
+    q = jax.random.normal(jax.random.PRNGKey(9), (B, H * 2, d))
+    oa, ob = decode_attention(ca, q), decode_attention(cb, q)
+    atol = 2e-6 if method in ("polar", "none") else 5e-3
+    np.testing.assert_allclose(np.asarray(oa), np.asarray(ob),
+                               atol=atol, rtol=1e-5)
+    if method == "polar":
+        np.testing.assert_array_equal(np.asarray(ca.key_codes),
+                                      np.asarray(cb.key_codes))
+
+
+@pytest.mark.parametrize("method", ["polar", "none"])
+def test_ring_window_attention(method):
+    """Ring cache == oracle attention over the last `window` tokens."""
+    B, H, d, W, T = 1, 2, 32, 64, 200
+    k, v = _kv(1, B, H, T, d)
+    cfg = QuantConfig(method=method, group_size=16,
+                      residual_dtype="float32")
+    cache = init_cache(cfg, B, H, d, W, dtype=jnp.float32)
+    ap = jax.jit(append)
+    for i in range(T):
+        cache = ap(cache, k[:, :, i : i + 1], v[:, :, i : i + 1])
+    q = jax.random.normal(jax.random.PRNGKey(2), (B, H, d))
+    out = decode_attention(cache, q, window=W)
+    s = jnp.einsum("bhd,bhtd->bht", q * d ** -0.5, k[:, :, T - W :])
+    oracle = jnp.einsum("bht,bhtd->bhd", jax.nn.softmax(s, -1), v[:, :, T - W :])
+    tol = 0.35 if method == "polar" else 1e-4
+    rel = float(jnp.linalg.norm(out - oracle) / jnp.linalg.norm(oracle))
+    assert rel < tol, rel
+
+
+def test_ring_prefill_matches_append():
+    B, H, d, W, T = 1, 1, 16, 32, 100
+    k, v = _kv(2, B, H, T, d)
+    cfg = QuantConfig(method="polar", group_size=16, residual_dtype="float32")
+    ca = prefill(init_cache(cfg, B, H, d, W), k, v)
+    cb = init_cache(cfg, B, H, d, W)
+    for i in range(T):
+        cb = append(cb, k[:, :, i : i + 1], v[:, :, i : i + 1])
+    np.testing.assert_array_equal(np.asarray(ca.key_codes),
+                                  np.asarray(cb.key_codes))
+    q = jax.random.normal(jax.random.PRNGKey(3), (B, H, d))
+    np.testing.assert_allclose(
+        np.asarray(decode_attention(ca, q, window=W)),
+        np.asarray(decode_attention(cb, q, window=W)), atol=1e-6)
+
+
+def test_quantized_values():
+    B, H, d, T = 2, 2, 32, 96
+    k, v = _kv(3, B, H, T, d)
+    q = jax.random.normal(jax.random.PRNGKey(4), (B, H, d))
+    cfg_fp = QuantConfig(method="polar", group_size=32, value_bits=0)
+    cfg_q = QuantConfig(method="polar", group_size=32, value_bits=4)
+    o_fp = decode_attention(prefill(init_cache(cfg_fp, B, H, d, 128), k, v), q)
+    o_q = decode_attention(prefill(init_cache(cfg_q, B, H, d, 128), k, v), q)
+    rel = float(jnp.linalg.norm(o_q - o_fp) / jnp.linalg.norm(o_fp))
+    assert rel < 0.1, rel
+
+
+def test_cache_memory_footprint():
+    """PolarQuant codes cut key bytes ~4x vs bf16 (plus group stats)."""
+    from repro.utils import tree_bytes
+    B, H, d, T = 4, 4, 128, 4096
+    c_fp = init_cache(QuantConfig(method="none"), B, H, d, T)
+    c_pq = init_cache(QuantConfig(method="polar", group_size=128), B, H, d, T)
+    key_fp = c_fp.key_fp.size * 2
+    key_pq = (c_pq.key_codes.size
+              + sum(a.size * 4 for a in c_pq.key_scales.values())
+              + c_pq.key_residual.size * 2)
+    assert key_pq < 0.40 * key_fp  # ~0.31 expected (8/16 phys + stats fp32)
+
+
+# ---------------------------------------------------------------------------
+# position mask properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(0, 400), st.sampled_from([(64, 16, 64), (128, 32, 128),
+                                             (64, 16, 0)]))
+def test_position_masks_properties(length, cap_g_window):
+    cap, g, window = cap_g_window
+    if window == 0:
+        length = min(length, cap)  # linear-cache contract: length <= capacity
+    valid_g, in_res, flushed = position_masks(cap, g, jnp.asarray(length), window)
+    valid_g, in_res = np.asarray(valid_g), np.asarray(in_res)
+    fl = int(flushed)
+    # never both
+    assert not (valid_g & in_res).any()
+    # residual count == length - flushed (capped at visible slots)
+    assert in_res.sum() == min(length - fl, g)
+    # grouped valid count == min(flushed, window bound)
+    if window:
+        expect = max(min(fl, window - (length - fl)), 0)
+        assert valid_g.sum() == min(expect, cap)
+    else:
+        assert valid_g.sum() == min(fl, cap)

@@ -1,0 +1,73 @@
+"""Polar transform unit + property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import polar
+
+
+@pytest.mark.parametrize("pairing", ["half", "adjacent"])
+def test_roundtrip(pairing):
+    k = jax.random.normal(jax.random.PRNGKey(0), (3, 5, 64))
+    rho, theta = polar.to_polar(k, pairing)
+    back = polar.from_polar(rho, theta, pairing)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(k), atol=1e-5)
+
+
+def test_theta_range():
+    k = jax.random.normal(jax.random.PRNGKey(1), (100, 32))
+    _, theta = polar.to_polar(k)
+    assert float(theta.min()) >= 0.0
+    assert float(theta.max()) <= 2 * np.pi + 1e-6
+
+
+def test_rho_nonnegative_and_magnitude():
+    k = jax.random.normal(jax.random.PRNGKey(2), (10, 16))
+    rho, _ = polar.to_polar(k)
+    assert float(rho.min()) >= 0.0
+    x, y = polar.split_pairs(k)
+    np.testing.assert_allclose(np.asarray(rho ** 2), np.asarray(x ** 2 + y ** 2),
+                               rtol=1e-5)
+
+
+def test_rope_preserves_radius(structured_keys):
+    """The paper's core observation: RoPE rotation is magnitude-preserving,
+    so pre- and post-RoPE radii are identical per pair."""
+    from repro.models.layers import apply_rope
+    key = jax.random.PRNGKey(3)
+    pre = jax.random.normal(key, (2, 2, 64, 32))
+    pos = jnp.arange(64, dtype=jnp.int32)
+    post = apply_rope(pre, pos, 10000.0)
+    rho_pre, _ = polar.to_polar(pre)
+    rho_post, _ = polar.to_polar(post)
+    np.testing.assert_allclose(np.asarray(rho_pre), np.asarray(rho_post),
+                               atol=1e-4)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-1e3, 1e3, allow_nan=False, width=32),
+                min_size=8, max_size=8))
+def test_roundtrip_hypothesis(vals):
+    k = jnp.asarray(vals, jnp.float32)[None]
+    rho, theta = polar.to_polar(k)
+    back = polar.from_polar(rho, theta)
+    # fp error of the trig roundtrip scales with the PAIR norm (a tiny
+    # component next to a huge one is only recoverable to |pair| * eps)
+    x, y = polar.split_pairs(k)
+    pair_norm = np.asarray(jnp.sqrt(x * x + y * y))
+    tol = 1e-5 + 5e-7 * np.concatenate([pair_norm, pair_norm], -1)
+    err = np.abs(np.asarray(back) - np.asarray(k))
+    assert (err <= tol).all(), (err, tol)
+
+
+def test_pairings_differ_but_consistent():
+    k = jnp.arange(8, dtype=jnp.float32)[None]
+    xh, yh = polar.split_pairs(k, "half")
+    xa, ya = polar.split_pairs(k, "adjacent")
+    assert not np.allclose(np.asarray(xh), np.asarray(xa))
+    np.testing.assert_allclose(
+        np.asarray(polar.merge_pairs(xh, yh, "half")), np.asarray(k))
+    np.testing.assert_allclose(
+        np.asarray(polar.merge_pairs(xa, ya, "adjacent")), np.asarray(k))

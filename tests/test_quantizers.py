@@ -1,0 +1,189 @@
+"""Quantizer correctness: error bounds, invariants, method comparisons."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import polar
+from repro.core.quantizers import (
+    QuantConfig, affine_decode, affine_encode, decode_channel_keys,
+    decode_polar_keys, decode_token_keys, decode_values, decode_zipcache_keys,
+    encode_int_keys, encode_kivi_keys, encode_polar_keys, encode_values,
+    encode_zipcache_keys,
+)
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# Affine quantizer properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 8), st.sampled_from(["midrise", "midtread"]),
+       st.integers(0, 10_000))
+def test_affine_error_bound(bits, mode, seed):
+    x = _rand(seed, (4, 37))
+    codes, s, z = affine_encode(x, bits, axis=-1, mode=mode)
+    xt = affine_decode(codes, s, z, mode)
+    err = jnp.abs(x - xt)
+    bound = s * 0.5 + 1e-5
+    assert bool(jnp.all(err <= bound)), float((err - bound).max())
+    assert codes.dtype == jnp.uint8
+    assert int(codes.max()) <= (1 << bits) - 1
+
+
+def test_affine_monotone():
+    x = jnp.linspace(-3, 3, 64)[None]
+    codes, _, _ = affine_encode(x, 4, axis=-1, mode="midrise")
+    c = np.asarray(codes)[0]
+    assert (np.diff(c.astype(int)) >= 0).all()
+
+
+def test_affine_constant_input():
+    x = jnp.full((2, 16), 3.14)
+    codes, s, z = affine_encode(x, 4, axis=-1, mode="midtread")
+    xt = affine_decode(codes, s, z, "midtread")
+    np.testing.assert_allclose(np.asarray(xt), 3.14, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# PolarQuant
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("r,t", [(4, 4), (3, 3), (5, 3), (2, 4)])
+def test_polar_error_bound(r, t):
+    """|k - k~| <= s_rho/2 + (rho + s_rho/2) * s_theta/2 per element."""
+    g = 32
+    k = _rand(0, (2, 2, 128, 32), 2.0)
+    cfg = QuantConfig(method="polar", rho_bits=r, theta_bits=t, group_size=g)
+    pk = encode_polar_keys(k, cfg)
+    kt = decode_polar_keys(pk)
+    rho, _ = polar.to_polar(k)
+    rho_g = rho.reshape(2, 2, 4, g, 16)
+    bound = (pk.rho_scale * 0.5 + (rho_g + pk.rho_scale * 0.5)
+             * pk.theta_scale * 0.5)
+    err_x = jnp.abs(k - kt)
+    px, py = polar.split_pairs(err_x)
+    err_vec = jnp.sqrt(px ** 2 + py ** 2).reshape(2, 2, 4, g, 16)
+    assert bool(jnp.all(err_vec <= bound + 1e-4))
+
+
+def test_polar_code_packing():
+    k = _rand(1, (1, 1, 64, 16))
+    cfg = QuantConfig(method="polar", rho_bits=5, theta_bits=3, group_size=32)
+    pk = encode_polar_keys(k, cfg)
+    assert pk.codes.dtype == jnp.uint8
+    assert int(pk.rho_codes().max()) <= 31
+    assert int(pk.theta_codes().max()) <= 7
+    recombined = (pk.rho_codes() << 3) | pk.theta_codes()
+    np.testing.assert_array_equal(np.asarray(recombined), np.asarray(pk.codes))
+
+
+def test_polar_competitive_with_kivi(structured_keys):
+    """Paper Table 1: PolarQuant preserves quality comparably to KIVI at
+    matched bit width (its *win* is the LUT decode speedup + robustness to
+    token-wise collapse, not strictly lower MSE)."""
+    k = structured_keys(jax.random.PRNGKey(0), 2, 2, 512, 64)
+    cfgp = QuantConfig(method="polar", rho_bits=4, theta_bits=4, group_size=128)
+    cfgk = QuantConfig(method="kivi", key_bits=4, group_size=128)
+    ep = float(jnp.linalg.norm(k - decode_polar_keys(encode_polar_keys(k, cfgp))))
+    ek = float(jnp.linalg.norm(k - decode_channel_keys(encode_kivi_keys(k, cfgk))))
+    assert ep < 2.5 * ek, (ep, ek)
+
+
+def test_polar_beats_token_wise_methods(structured_keys):
+    """Table 1's collapse rows: plain token-wise Int-N degrades hard on
+    channel-outlier keys; PolarQuant does not. ZipCache's channel-norm
+    partially rescues it on this synthetic (real Qwen-style extreme
+    outliers are what collapse it in the paper), so the zipcache assertion
+    is a bounded-competitive one."""
+    k = structured_keys(jax.random.PRNGKey(1), 2, 2, 512, 64)
+    cfgp = QuantConfig(method="polar", rho_bits=4, theta_bits=4, group_size=128)
+    ep = float(jnp.linalg.norm(k - decode_polar_keys(encode_polar_keys(k, cfgp))))
+    cfgi = QuantConfig(method="int", key_bits=4)
+    ei = float(jnp.linalg.norm(k - decode_token_keys(encode_int_keys(k, cfgi))))
+    cfgz = QuantConfig(method="zipcache", key_bits=4, group_size=128)
+    ez = float(jnp.linalg.norm(
+        k - decode_zipcache_keys(encode_zipcache_keys(k, cfgz))))
+    assert ep < ei, (ep, ei)
+    assert ep < 2.0 * ez, (ep, ez)
+
+
+def test_angle_bits_more_sensitive_than_radius(structured_keys):
+    """Paper Table 6 Observation 1: at fixed total bits, spending on the
+    angle beats spending on the radius — (r3,t5) < (r4,t4) < (r5,t3) err."""
+    k = structured_keys(jax.random.PRNGKey(2), 2, 2, 1024, 64)
+    errs = {}
+    for r, t in [(5, 3), (4, 4), (3, 5)]:
+        cfg = QuantConfig(method="polar", rho_bits=r, theta_bits=t,
+                          group_size=128)
+        errs[(r, t)] = float(jnp.linalg.norm(
+            k - decode_polar_keys(encode_polar_keys(k, cfg))))
+    assert errs[(3, 5)] < errs[(4, 4)] < errs[(5, 3)], errs
+
+
+def test_theta_fixed_grid_variant():
+    k = _rand(3, (1, 2, 64, 32))
+    cfg = QuantConfig(method="polar", theta_stats="fixed", group_size=32)
+    pk = encode_polar_keys(k, cfg)
+    kt = decode_polar_keys(pk)
+    rel = float(jnp.linalg.norm(k - kt) / jnp.linalg.norm(k))
+    assert rel < 0.35
+
+
+# ---------------------------------------------------------------------------
+# Baselines + values
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("enc,dec", [
+    (encode_kivi_keys, decode_channel_keys),
+    (encode_zipcache_keys, decode_zipcache_keys),
+])
+def test_grouped_baselines_roundtrip(enc, dec):
+    k = _rand(4, (2, 2, 128, 32), 3.0)
+    cfg = QuantConfig(method="kivi", key_bits=8, group_size=32)
+    rel = float(jnp.linalg.norm(k - dec(enc(k, cfg))) / jnp.linalg.norm(k))
+    assert rel < 0.01
+
+
+def test_values_roundtrip():
+    v = _rand(5, (2, 2, 64, 32))
+    qv = encode_values(v, 8)
+    rel = float(jnp.linalg.norm(v - decode_values(qv)) / jnp.linalg.norm(v))
+    assert rel < 0.01
+
+
+def test_bits_accounting():
+    cfg = QuantConfig(method="polar", rho_bits=4, theta_bits=4, group_size=128)
+    assert abs(cfg.key_bits_per_element - 4.25) < 1e-6
+    cfg33 = QuantConfig(method="polar", rho_bits=3, theta_bits=3, group_size=128)
+    assert abs(cfg33.key_bits_per_element - 3.25) < 1e-6
+    kivi = QuantConfig(method="kivi", key_bits=4, group_size=128)
+    assert abs(kivi.key_bits_per_element - 4.25) < 1e-6
+    kivi32 = QuantConfig(method="kivi", key_bits=4, group_size=32)
+    assert abs(kivi32.key_bits_per_element - 5.0) < 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([16, 32, 64]))
+def test_polar_roundtrip_hypothesis(seed, g):
+    # (4, 4) is the max packed precision (r + t <= 8, one uint8 per pair)
+    k = _rand(seed, (1, 1, 2 * g, 8), 4.0)
+    cfg = QuantConfig(method="polar", rho_bits=4, theta_bits=4, group_size=g)
+    kt = decode_polar_keys(encode_polar_keys(k, cfg))
+    rel = float(jnp.linalg.norm(k - kt) / (jnp.linalg.norm(k) + 1e-9))
+    assert rel < 0.3, rel
+
+
+def test_overwide_bits_rejected():
+    k = _rand(0, (1, 1, 32, 8))
+    with pytest.raises(ValueError):
+        encode_polar_keys(k, QuantConfig(method="polar", rho_bits=6,
+                                         theta_bits=6, group_size=16))

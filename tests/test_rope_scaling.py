@@ -1,0 +1,60 @@
+"""NTK RoPE scaling (paper Appendix C): PolarQuant is insensitive to the
+RoPE base / NTK context extension — the polar premise (rotation preserves
+radius) holds for any frequency configuration."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.core import polar
+from repro.core.quantizers import (QuantConfig, decode_polar_keys,
+                                   encode_polar_keys)
+from repro.models import get_model
+from repro.models.layers import apply_rope, rope_frequencies
+
+
+def test_ntk_scaling_lowers_frequencies():
+    f1 = rope_frequencies(64, 10000.0)
+    f2 = rope_frequencies(64, 10000.0, ntk_scale=4.0)
+    assert float(f2[1:].max()) < float(f1[1:].max())
+    np.testing.assert_allclose(float(f2[0]), 1.0)  # first freq unscaled
+
+
+def test_radius_invariance_any_base():
+    """The paper's core invariant under every RoPE configuration."""
+    pre = jax.random.normal(jax.random.PRNGKey(0), (1, 2, 64, 32)) + 5.0
+    pos = jnp.arange(64, dtype=jnp.int32)
+    for base, scale in [(10000.0, 1.0), (500000.0, 1.0), (1e6, 1.0),
+                        (10000.0, 4.0)]:
+        post = apply_rope(pre, pos, base, scale)
+        r_pre, _ = polar.to_polar(pre)
+        r_post, _ = polar.to_polar(post)
+        np.testing.assert_allclose(np.asarray(r_pre), np.asarray(r_post),
+                                   atol=1e-4)
+
+
+def test_quant_error_stable_across_bases(structured_keys):
+    errs = []
+    for base in (10000.0, 500000.0, 1000000.0):
+        k = structured_keys(jax.random.PRNGKey(1), 2, 2, 512, 64,
+                            rope_base=base)
+        cfg = QuantConfig(method="polar", group_size=128)
+        kt = decode_polar_keys(encode_polar_keys(k, cfg))
+        errs.append(float(jnp.linalg.norm(k - kt) / jnp.linalg.norm(k)))
+    assert max(errs) < 1.6 * min(errs), errs
+
+
+def test_model_with_ntk_scaling_runs():
+    cfg = reduce_for_smoke(get_config("tinyllama-1.1b"))
+    cfg = dataclasses.replace(cfg, rope_ntk_scale=2.0)
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 65), 0,
+                                          cfg.vocab_size)}
+    loss, _ = m.loss(params, batch)
+    assert bool(jnp.isfinite(loss))
+    state = m.init_decode_state(2, 128)
+    lg, state = m.prefill(params, {"tokens": batch["tokens"][:, :64]}, state)
+    assert bool(jnp.isfinite(lg).all())

@@ -1,0 +1,76 @@
+"""Sharding-rule resolution: divisibility fallbacks, FSDP+TP assignment."""
+import dataclasses
+
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed.sharding import (decode_state_pspec, logical_rules,
+                                        param_pspec)
+
+
+class FakeMesh:
+    """Duck-typed mesh: .shape dict + .axis_names (pure spec resolution)."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_tp_column_parallel():
+    spec = param_pspec("layers/attn/wq", (36, 4096, 4096), MESH)
+    assert spec[-1] == "model"
+    assert spec[-2] == ("pod", "data")
+
+
+def test_tp_row_parallel():
+    spec = param_pspec("layers/attn/wo", (36, 4096, 4096), MESH)
+    assert spec[-2] == "model"
+    assert spec[-1] == ("pod", "data")
+
+
+def test_kv_head_fallback():
+    # yi-9b: kv_heads*hd = 512 -> 512 % 16 == 0, sharded
+    assert param_pspec("layers/attn/wk", (48, 4096, 512), MESH)[-1] == "model"
+    # a hypothetical 24-wide kv projection: 24 % 16 != 0 -> no TP, FSDP
+    spec = param_pspec("layers/attn/wk", (48, 4096, 24), MESH)
+    assert spec[-1] is None
+    assert spec[-2] == ("pod", "data")
+
+
+def test_moe_expert_parallel_vs_tp():
+    dbrx = get_config("dbrx-132b")
+    spec = param_pspec("layers/ffn/wg", (40, 16, 6144, 10752), MESH, dbrx)
+    assert spec[-3] == "model"        # 16 experts % 16 == 0 -> EP
+    qwen = get_config("qwen2-moe-a2.7b")
+    spec = param_pspec("layers/ffn/wg", (24, 60, 2048, 1408), MESH, qwen)
+    assert spec[-3] != "model"        # 60 % 16 != 0 -> falls back to TP
+    assert spec[-1] == "model"
+
+
+def test_norms_not_fsdp():
+    assert param_pspec("layers/ln1", (36, 4096), MESH) == P(None, None)
+
+
+def test_logical_rules_divisibility():
+    yi = get_config("yi-9b")
+    rules = logical_rules(yi, MESH, global_batch=256)
+    assert rules["heads"] == "model"       # 32 % 16
+    assert rules["kv_heads"] is None       # 4 % 16 != 0
+    assert rules["batch"] == ("pod", "data")
+    rules1 = logical_rules(yi, MESH, global_batch=1)
+    assert rules1["batch"] is None         # long_500k: batch 1 not divisible
+
+
+def test_decode_state_specs():
+    # stacked key codes (L, B, Hkv, G, g, P): batch->dp, seq/groups->model
+    spec = decode_state_pspec("key_codes", (48, 128, 4, 256, 128, 64), MESH,
+                              global_batch=128)
+    assert spec[1] == ("pod", "data")
+    assert "model" in tuple(spec)
+    # batch=1: nothing on dp
+    spec = decode_state_pspec("key_codes", (48, 1, 4, 4096, 128, 64), MESH,
+                              global_batch=1)
+    assert spec[1] is None
