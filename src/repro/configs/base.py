@@ -59,6 +59,10 @@ class ModelConfig:
     conv1d_width: int = 4
     # --- cache policy ---
     quant: QuantConfig = field(default_factory=QuantConfig)
+    # decode-attention backend: "jnp" = pure-jnp masked softmax over the
+    # cache; "ref"|"interpret"|"pallas" route the polar policy through the
+    # fused LUT flash-decode kernel (kernels.ops.polar_decode_attention_full)
+    decode_backend: str = "jnp"
 
     def __post_init__(self):
         if self.head_dim == 0 and self.num_heads > 0:

@@ -1,0 +1,194 @@
+"""Cache layouts: WHERE cached tokens live, independent of HOW they are
+quantized (DESIGN.md §9).
+
+The quantization *policy* (:class:`~repro.core.quantizers.QuantConfig`)
+decides the bit layout of each stored token/group; the *layout* decides
+which physical buffer slot a logical position maps to:
+
+* :class:`LinearLayout` — slot == absolute position; capacity bounds the
+  sequence length. The dense serving default.
+* :class:`RingLayout`   — slot == position % capacity; capacity equals the
+  local-attention window, so a key expires exactly when its value slot is
+  overwritten.
+* :class:`PagedLayout`  — tokens live in fixed-size pages drawn from a
+  shared pool; a per-slot page table maps group index -> pool page. Page
+  size equals the quantization group size, so one page holds exactly one
+  key group plus its token-major value rows, and admission/eviction of
+  whole requests becomes free-list bookkeeping instead of buffer copies.
+
+All layout objects are pure-static (hashable frozen dataclasses): they ride
+on pytree dataclasses as aux data and jit retraces only when the layout
+itself changes, never per step.
+
+:class:`PageAllocator` is the host-side free-list companion of
+``PagedLayout``: the scheduler allocates/reclaims pages between jitted
+steps and ships the updated page table to the device as a plain int32
+array. Unassigned entries point at the pool's *scratch page* (index
+``num_pages``) so masked-out lanes of batched scatters land harmlessly
+there — no -1 special-casing inside kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearLayout:
+    """Dense layout: absolute position == buffer slot. Requires
+    ``length <= capacity`` at all times."""
+
+    capacity: int
+
+    def token_slot(self, pos):
+        return pos
+
+    def group_slot(self, gidx, ngroups: int):
+        return gidx
+
+    def prefill_offset(self, t: int) -> int:
+        if t > self.capacity:
+            raise ValueError(
+                f"prompt length {t} exceeds linear capacity {self.capacity}")
+        return 0
+
+    def copy_segments(self, t: int) -> list[tuple[int, int, int]]:
+        self.prefill_offset(t)
+        return [(0, t, 0)]
+
+
+@dataclasses.dataclass(frozen=True)
+class RingLayout:
+    """Sliding-window layout: slot ``pos % capacity``; capacity == window."""
+
+    capacity: int
+
+    def token_slot(self, pos):
+        return pos % self.capacity
+
+    def group_slot(self, gidx, ngroups: int):
+        return gidx % ngroups
+
+    def prefill_offset(self, t: int) -> int:
+        return max(0, t - self.capacity)
+
+    def copy_segments(self, t: int) -> list[tuple[int, int, int]]:
+        return ring_segments(t, self.capacity)
+
+
+def ring_segments(t: int, cap: int) -> list[tuple[int, int, int]]:
+    """Static (src_lo, src_hi, dst_lo) copy segments mapping positions
+    [max(0, t-cap), t) onto slots pos % cap. At most two segments."""
+    start = max(0, t - cap)
+    if start == 0:
+        return [(0, t, 0)]
+    p0 = -(-start // cap) * cap  # first position mapping to slot 0
+    segs = []
+    if p0 > start:
+        segs.append((start, min(p0, t), start % cap))
+    if t > p0:
+        segs.append((p0, t, 0))
+    return segs
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Paged layout: a pool of ``num_pages`` fixed-size pages shared by up
+    to ``slots`` concurrent sequences, each owning at most
+    ``pages_per_slot`` pages via its page-table row.
+
+    ``page_size`` must equal the quantization group size: page == group is
+    what lets the paged cache reuse the grouped encode/decode machinery
+    (and the fused LUT decode kernel) unchanged on gathered views.
+    """
+
+    page_size: int
+    num_pages: int       # allocatable pages (scratch page excluded)
+    slots: int
+    pages_per_slot: int
+
+    @property
+    def scratch_page(self) -> int:
+        """Write target for masked-out lanes; readers never see it because
+        every read is masked by per-slot lengths."""
+        return self.num_pages
+
+    @property
+    def pool_pages(self) -> int:
+        """Physical pages to allocate: pool + one scratch page."""
+        return self.num_pages + 1
+
+    @property
+    def tokens_per_slot(self) -> int:
+        return self.pages_per_slot * self.page_size
+
+    def pages_for(self, num_tokens: int) -> int:
+        """Pages needed to hold ``num_tokens`` tokens of one sequence."""
+        return -(-num_tokens // self.page_size)
+
+
+class PageAllocator:
+    """Host-side free-list allocator over a :class:`PagedLayout`.
+
+    Not a pytree: lives in the serving scheduler, mutates numpy state
+    between jitted steps, and exposes the device-ready ``table``.
+    """
+
+    def __init__(self, layout: PagedLayout):
+        self.layout = layout
+        self._free: deque[int] = deque(range(layout.num_pages))
+        self._table = np.full((layout.slots, layout.pages_per_slot),
+                              layout.scratch_page, np.int32)
+        self._owned: list[list[int]] = [[] for _ in range(layout.slots)]
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.layout.num_pages - len(self._free)
+
+    def utilization(self) -> float:
+        return self.used_pages / max(self.layout.num_pages, 1)
+
+    def slot_pages(self, slot: int) -> int:
+        return len(self._owned[slot])
+
+    def can_alloc(self, count: int) -> bool:
+        return len(self._free) >= count
+
+    def alloc(self, slot: int, count: int = 1) -> bool:
+        """Append ``count`` pages to ``slot``'s table row. All-or-nothing:
+        returns False (state unchanged) when the pool or the slot's row
+        can't fit them."""
+        owned = self._owned[slot]
+        if count > len(self._free):
+            return False
+        if len(owned) + count > self.layout.pages_per_slot:
+            return False
+        for _ in range(count):
+            page = self._free.popleft()
+            self._table[slot, len(owned)] = page
+            owned.append(page)
+        return True
+
+    def free_slot(self, slot: int) -> int:
+        """Return all of ``slot``'s pages to the free list; returns the
+        number reclaimed."""
+        owned = self._owned[slot]
+        n = len(owned)
+        self._free.extend(owned)
+        self._owned[slot] = []
+        self._table[slot, :] = self.layout.scratch_page
+        return n
+
+    def table(self) -> jnp.ndarray:
+        """Device-ready (slots, pages_per_slot) int32 page table."""
+        return jnp.asarray(self._table)
+
+    def table_np(self) -> np.ndarray:
+        return self._table.copy()

@@ -20,6 +20,7 @@ vector with a tile+reshape — no dynamic slicing (see ``assemble_scores``).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any
 
 import jax
@@ -28,6 +29,9 @@ import jax.numpy as jnp
 from repro.utils import pytree_dataclass, static_field
 from repro.core import quantizers as qz
 from repro.core import lut as lut_mod
+from repro.core.cache_layout import (
+    LinearLayout, RingLayout, ring_segments as _ring_segments,
+)
 from repro.core.quantizers import QuantConfig
 
 Array = jax.Array
@@ -44,9 +48,10 @@ class KVCache:
     value_scale: Any
     value_zero: Any
     value_fp: Any           # Array or None
-    length: Array           # () int32
+    length: Array           # () int32 — or (B,) for gathered paged views
     cfg: QuantConfig = static_field(default=QuantConfig())
     max_len: int = static_field(default=0)
+    layout: Any = static_field(default=None)   # LinearLayout | RingLayout
 
     @property
     def batch(self) -> int:
@@ -70,6 +75,12 @@ class KVCache:
     @property
     def grouped(self) -> bool:
         return self.cfg.method in ("polar", "kivi", "zipcache")
+
+    @property
+    def lay(self):
+        """Placement layout; pre-layout caches default to ring arithmetic
+        (slot = pos % capacity), of which linear is the degenerate case."""
+        return self.layout if self.layout is not None else RingLayout(self.max_len)
 
 
 def _grouped_key_buffers(cfg: QuantConfig, b: int, h: int, d: int, gcount: int,
@@ -96,8 +107,13 @@ def _grouped_key_buffers(cfg: QuantConfig, b: int, h: int, d: int, gcount: int,
 
 
 def init_cache(cfg: QuantConfig, batch: int, num_kv_heads: int, head_dim: int,
-               max_len: int, dtype=jnp.bfloat16) -> KVCache:
-    """Allocate an empty cache of capacity ``max_len`` tokens."""
+               max_len: int, dtype=jnp.bfloat16, layout=None) -> KVCache:
+    """Allocate an empty cache of capacity ``max_len`` tokens.
+
+    ``layout`` picks the placement policy (default: ring arithmetic over
+    ``max_len`` slots, which is also correct for linear use since positions
+    then never wrap). Quantization policy and placement are independent —
+    any ``cfg.method`` composes with any layout."""
     b, h, d = batch, num_kv_heads, head_dim
     g = cfg.group_size
     sdt = jnp.dtype(cfg.scale_dtype)
@@ -129,7 +145,8 @@ def init_cache(cfg: QuantConfig, batch: int, num_kv_heads: int, head_dim: int,
                    key_residual=key_residual, key_fp=key_fp,
                    value_codes=value_codes, value_scale=value_scale,
                    value_zero=value_zero, value_fp=value_fp,
-                   length=jnp.zeros((), jnp.int32), cfg=cfg, max_len=max_len)
+                   length=jnp.zeros((), jnp.int32), cfg=cfg, max_len=max_len,
+                   layout=layout)
 
 
 # ---------------------------------------------------------------------------
@@ -170,8 +187,9 @@ def append(cache: KVCache, k_new: Array, v_new: Array) -> KVCache:
     serves unbounded (linear) caches and ring (local-window) caches.
     """
     cfg = cache.cfg
+    lay = cache.lay
     pos = cache.length
-    tok_slot = pos % cache.max_len
+    tok_slot = lay.token_slot(pos)
     updates: dict[str, Any] = {}
 
     # --- values (token-major) ---
@@ -201,7 +219,7 @@ def append(cache: KVCache, k_new: Array, v_new: Array) -> KVCache:
             codes_buf, scales_buf, res = args
             # res (B,H,g,d) -> codes (B,H,1,g,*) / scales (B,H,1,1|g,*)
             codes, scales = _encode_group(res, cfg)
-            gidx = (pos // g) % codes_buf.shape[2]
+            gidx = lay.group_slot(pos // g, codes_buf.shape[2])
             codes_buf = _dus(codes_buf, codes, 2, gidx)
             scales_buf = {k: _dus(scales_buf[k], scales[k], 2, gidx)
                           for k in scales_buf}
@@ -218,28 +236,12 @@ def append(cache: KVCache, k_new: Array, v_new: Array) -> KVCache:
         updates["key_scales"] = scales_buf
         updates["key_residual"] = residual
 
-    import dataclasses
     return dataclasses.replace(cache, length=pos + 1, **updates)
 
 
 # ---------------------------------------------------------------------------
 # Prefill (bulk insert of T tokens into an empty cache)
 # ---------------------------------------------------------------------------
-
-
-def _ring_segments(t: int, cap: int) -> list[tuple[int, int, int]]:
-    """Static (src_lo, src_hi, dst_lo) copy segments mapping positions
-    [max(0, t-cap), t) onto slots pos % cap. At most two segments."""
-    start = max(0, t - cap)
-    if start == 0:
-        return [(0, t, 0)]
-    p0 = -(-start // cap) * cap  # first position mapping to slot 0
-    segs = []
-    if p0 > start:
-        segs.append((start, min(p0, t), start % cap))
-    if t > p0:
-        segs.append((p0, t, 0))
-    return segs
 
 
 def prefill(cache: KVCache, k: Array, v: Array) -> KVCache:
@@ -252,11 +254,12 @@ def prefill(cache: KVCache, k: Array, v: Array) -> KVCache:
     (see ``position_masks``).
     """
     cfg = cache.cfg
+    lay = cache.lay
     b, h, t, d = k.shape
     cap = cache.max_len
     g = cfg.group_size if cache.grouped else 1
-    off = max(0, t - cap)          # tokens before `off` fall out of the ring
-    segs = _ring_segments(t, cap)
+    off = lay.prefill_offset(t)    # tokens before `off` fall out of the ring
+    segs = lay.copy_segments(t)
     updates: dict[str, Any] = {}
 
     def write_tok(buf, src):
@@ -307,7 +310,6 @@ def prefill(cache: KVCache, k: Array, v: Array) -> KVCache:
         updates["key_scales"] = scales_buf
         updates["key_residual"] = residual
 
-    import dataclasses
     return dataclasses.replace(
         cache, length=jnp.asarray(t, jnp.int32), **updates)
 
@@ -362,9 +364,18 @@ def position_masks(t_cap: int, g: int, length: Array, window: int):
     window), so grouped-validity and residual-membership never overlap.
     Linear caches are the degenerate case (positions == slot index).
 
-    Returns (valid_grouped, in_residual, flushed): (t_cap,) bools + scalar.
+    ``length`` may be () — one shared length — or (B,) per-sequence lengths
+    (gathered paged views under continuous batching, where every slot sits
+    at its own position).
+
+    Returns (valid_grouped, in_residual, flushed): (t_cap,) bools + scalar,
+    or (B, t_cap) bools + (B,) for batched lengths.
     """
+    length = jnp.asarray(length, jnp.int32)
     i = jnp.arange(t_cap, dtype=jnp.int32)
+    if length.ndim:
+        i = i[None, :]
+        length = length[:, None]
     flushed = (length // g) * g
     abs_k = i + ((flushed - 1 - i) // t_cap) * t_cap
     abs_v = i + ((length - 1 - i) // t_cap) * t_cap
@@ -372,7 +383,7 @@ def position_masks(t_cap: int, g: int, length: Array, window: int):
     if window > 0:
         valid_g = valid_g & (abs_k >= length - window)
     in_res = (abs_v >= flushed) & (abs_v < length)
-    return valid_g, in_res, flushed
+    return valid_g, in_res, (flushed if flushed.ndim == 0 else flushed[:, 0])
 
 
 def decode_attention(cache: KVCache, q: Array, scale: float | None = None,
@@ -393,6 +404,9 @@ def decode_attention(cache: KVCache, q: Array, scale: float | None = None,
     t_cap = cache.max_len
     length = cache.length
 
+    def bc(mask):  # (T,) or (B,T) -> broadcastable against (B,Hkv,Qh,T)
+        return mask if mask.ndim == 1 else mask[:, None, None, :]
+
     if cache.grouped:
         g = cfg.group_size
         valid_g, in_res, _ = position_masks(t_cap, g, length, window)
@@ -400,12 +414,12 @@ def decode_attention(cache: KVCache, q: Array, scale: float | None = None,
         res = cache.key_residual.astype(jnp.float32)               # (B,Hkv,g,d)
         s_res = jnp.einsum("bhqd,bhgd->bhqg", q4, res)             # (B,Hkv,Qh,g)
         s_res_tiled = jnp.tile(s_res, (1, 1, 1, t_cap // g))       # slot % g trick
-        scores = jnp.where(in_res, s_res_tiled,
-                           jnp.where(valid_g, s_grouped, NEG_INF))
+        scores = jnp.where(bc(in_res), s_res_tiled,
+                           jnp.where(bc(valid_g), s_grouped, NEG_INF))
     else:
         valid_g, in_res, _ = position_masks(t_cap, 1, length, window)
         scores = grouped_scores(cache, q4, use_lut)
-        scores = jnp.where(valid_g | in_res, scores, NEG_INF)
+        scores = jnp.where(bc(valid_g | in_res), scores, NEG_INF)
 
     probs = jax.nn.softmax(scores, axis=-1)                        # fp32
     if cfg.value_bits > 0:
@@ -416,6 +430,43 @@ def decode_attention(cache: KVCache, q: Array, scale: float | None = None,
         v_tilde = cache.value_fp.astype(jnp.float32)
     out = jnp.einsum("bhqt,bhtd->bhqd", probs, v_tilde)
     return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def fused_decode_attention(cache: KVCache, q: Array,
+                           scale: float | None = None,
+                           backend: str = "ref") -> Array:
+    """Single-step decode attention via the fused flash-decode kernel
+    (:func:`repro.kernels.ops.polar_decode_attention_full`).
+
+    Semantically equivalent to :func:`decode_attention` for a *linear*
+    polar cache (no ring wrap, no window) — the kernel consumes the cache
+    buffers directly: LUT scores over quantized groups fused with the
+    value matmul, exact online-softmax merge with the fp residual.
+    ``cache.length`` may be () or (B,) (heterogeneous slot lengths).
+    ``backend``: ref | interpret | pallas (see kernels.ops).
+    """
+    cfg = cache.cfg
+    if cfg.method != "polar":
+        raise ValueError("fused decode path requires the polar policy, "
+                         f"got {cfg.method!r}")
+    if not isinstance(cache.layout, LinearLayout):
+        # ring (and layout-less, which defaults to ring arithmetic) caches
+        # can wrap: the kernel's pos < flushed mask would validate
+        # overwritten slots
+        raise ValueError("fused decode path requires a linear layout")
+    # function-local import: core is imported by kernels.ref at package
+    # init; importing ops at module scope would cycle.
+    from repro.kernels import ops
+    sc = cache.key_scales
+    quant_v = cfg.value_bits > 0
+    return ops.polar_decode_attention_full(
+        q, cache.key_codes, sc["rho_scale"], sc["rho_zero"],
+        sc["theta_scale"], sc["theta_zero"], cache.key_residual,
+        cache.value_codes if quant_v else cache.value_fp,
+        cache.value_scale if quant_v else None,
+        cache.value_zero if quant_v else None,
+        cache.length, r_bits=cfg.rho_bits, t_bits=cfg.theta_bits,
+        softmax_scale=scale, backend=backend)
 
 
 def cache_logical_bits(cache: KVCache) -> float:

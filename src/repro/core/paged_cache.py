@@ -1,0 +1,381 @@
+"""Paged quantized KV cache: a shared page pool + per-slot page tables.
+
+One page holds exactly one quantization group (``page_size == group_size``):
+its key codes/stats and its ``page_size`` token-major value rows. Requests
+own pages through a host-managed page table (see
+``cache_layout.PageAllocator``); admission and reclamation are free-list
+bookkeeping — no buffer copies, no recompiles (all shapes static).
+
+Buffer shapes (``PP = num_pages + 1``: last page is the masked-write
+scratch page, ``S`` = slots, ``N`` = pages_per_slot, ``g`` = page size):
+
+* grouped key methods (polar / kivi / zipcache):
+    - ``key_codes``    (PP, H, g, d/2|d) uint8 page pool
+    - ``key_scales``   dict of (PP, H, 1|g, ·) stat pools
+    - ``key_residual`` (S, H, g, d) per-slot fp not-yet-full group
+* token-wise keys (int): ``key_codes`` (PP, H, g, d) + per-token stats
+* fp keys ("none"): ``key_fp`` (PP, H, g, d)
+* values (all methods): token-major page rows, quantized or fp
+* ``lengths`` (S,) int32 per-slot token counts
+
+The invariant mirrors the dense cache: value rows for positions
+``[0, len)`` live in pages (row ``pos % g`` of page ``table[pos // g]``),
+key codes for ``[0, flushed)`` live in pages, and keys of the partial
+group ``[flushed, len)`` live in the per-slot residual. ``gather_view``
+materializes a per-slot dense :class:`~repro.core.kv_cache.KVCache` view
+from the page table, so decode attention reuses the existing machinery —
+including the fused LUT flash-decode kernel — with per-slot lengths.
+
+Streaming parity: prefill rounds keys through ``cfg.residual_dtype``
+exactly like the dense cache, so paged and dense caches produce
+bit-identical codes for the same token stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import pytree_dataclass, static_field
+from repro.core import kv_cache as kvc
+from repro.core import quantizers as qz
+from repro.core.cache_layout import LinearLayout, PagedLayout
+from repro.core.kv_cache import _encode_group, _grouped_key_buffers
+from repro.core.quantizers import QuantConfig
+
+Array = jax.Array
+
+
+@pytree_dataclass
+class PagedKVCache:
+    key_codes: Any          # page pool or None
+    key_scales: Any         # dict of stat pools or None
+    key_residual: Any       # (S, H, g, d) or None
+    key_fp: Any             # (PP, H, g, d) or None
+    value_codes: Any
+    value_scale: Any
+    value_zero: Any
+    value_fp: Any
+    lengths: Array          # (S,) int32
+    cfg: QuantConfig = static_field(default=QuantConfig())
+    layout: PagedLayout = static_field(default=None)
+
+    @property
+    def num_kv_heads(self) -> int:
+        for leaf in (self.key_codes, self.key_fp):
+            if leaf is not None:
+                return leaf.shape[1]
+        raise ValueError("empty cache")
+
+    @property
+    def head_dim(self) -> int:
+        v = self.value_codes if self.value_codes is not None else self.value_fp
+        return v.shape[-1]
+
+    @property
+    def grouped(self) -> bool:
+        return self.cfg.method in ("polar", "kivi", "zipcache")
+
+
+def init_paged_cache(cfg: QuantConfig, layout: PagedLayout,
+                     num_kv_heads: int, head_dim: int,
+                     dtype=jnp.bfloat16) -> PagedKVCache:
+    """Allocate empty page pools for ``layout`` under policy ``cfg``."""
+    if layout.page_size != cfg.group_size and cfg.method in (
+            "polar", "kivi", "zipcache"):
+        raise ValueError(
+            f"page_size {layout.page_size} must equal group_size "
+            f"{cfg.group_size} (one page == one quantization group)")
+    pp, s = layout.pool_pages, layout.slots
+    h, d, g = num_kv_heads, head_dim, layout.page_size
+    sdt = jnp.dtype(cfg.scale_dtype)
+    rdt = jnp.dtype(cfg.residual_dtype)
+    key_codes = key_scales = key_residual = key_fp = None
+    if cfg.method in ("polar", "kivi", "zipcache"):
+        # one group per page: build (PP, H, 1, g, ·) buffers, drop the G axis
+        codes, scales = _grouped_key_buffers(cfg, pp, h, d, 1, sdt)
+        key_codes = codes[:, :, 0]
+        key_scales = {k: v[:, :, 0] for k, v in scales.items()}
+        key_residual = jnp.zeros((s, h, g, d), rdt)
+    elif cfg.method == "int":
+        key_codes = jnp.zeros((pp, h, g, d), jnp.uint8)
+        key_scales = {"scale": jnp.zeros((pp, h, g, 1), sdt),
+                      "zero": jnp.zeros((pp, h, g, 1), sdt)}
+    elif cfg.method == "none":
+        key_fp = jnp.zeros((pp, h, g, d), dtype)
+    else:
+        raise ValueError(cfg.method)
+
+    value_codes = value_scale = value_zero = value_fp = None
+    if cfg.value_bits > 0:
+        value_codes = jnp.zeros((pp, h, g, d), jnp.uint8)
+        value_scale = jnp.zeros((pp, h, g, 1), sdt)
+        value_zero = jnp.zeros((pp, h, g, 1), sdt)
+    else:
+        value_fp = jnp.zeros((pp, h, g, d), dtype)
+
+    return PagedKVCache(key_codes=key_codes, key_scales=key_scales,
+                        key_residual=key_residual, key_fp=key_fp,
+                        value_codes=value_codes, value_scale=value_scale,
+                        value_zero=value_zero, value_fp=value_fp,
+                        lengths=jnp.zeros((s,), jnp.int32), cfg=cfg,
+                        layout=layout)
+
+
+# ---------------------------------------------------------------------------
+# Page pool scatter/gather helpers
+# ---------------------------------------------------------------------------
+
+
+def _scatter_pages(pool: Array, pages: Array, update: Array) -> Array:
+    """pool (PP, H, a, b) <- update (G, H, a, b) at page ids ``pages`` (G,).
+
+    Masked-out rows point at the scratch page; duplicate scratch writes race
+    but the scratch page is never read.
+    """
+    return pool.at[pages].set(update.astype(pool.dtype))
+
+
+def _gather_pages(pool: Array, table: Array) -> Array:
+    """pool (PP, H, a, b), table (S, N) -> (S, H, N, a, b)."""
+    return pool[table].transpose(0, 2, 1, 3, 4)
+
+
+def _scatter_rows(pool: Array, pages: Array, rows: Array,
+                  update: Array) -> Array:
+    """pool (PP, H, g, b) <- update (S, H, b) at (page, row) per slot."""
+    return pool.at[pages, :, rows].set(update.astype(pool.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Prefill (one request, padded to a static bucket length)
+# ---------------------------------------------------------------------------
+
+
+def paged_prefill(cache: PagedKVCache, slot: Array, page_row: Array,
+                  k: Array, v: Array, true_len: Array) -> PagedKVCache:
+    """Write one request's prompt into its assigned pages.
+
+    k/v: (1, Hkv, Tp, d) post-RoPE, ``Tp`` a *static* bucket length
+    (multiple of the page size; the real prompt occupies the first
+    ``true_len`` tokens, the tail is padding). ``slot``: () int32 slot id;
+    ``page_row``: (N,) int32 page-table row for the slot (entries beyond
+    the prompt's pages may be scratch). Pages whose group index is not
+    fully/partially covered by real tokens are redirected to the scratch
+    page, so padding never pollutes the pool.
+    """
+    cfg = cache.cfg
+    lay = cache.layout
+    _, h, tp, d = k.shape
+    g = lay.page_size
+    if tp % g:
+        raise ValueError(f"bucket length {tp} not a multiple of page {g}")
+    npage = tp // g
+    gi = jnp.arange(npage, dtype=jnp.int32)
+    true_len = jnp.asarray(true_len, jnp.int32)
+    nfull = true_len // g                     # fully-real key groups
+    ntouch = -(-true_len // g)                # pages holding any real value
+    row_pages = page_row[:npage]
+    scratch = lay.scratch_page
+    updates: dict[str, Any] = {}
+
+    # --- values: token-major rows of every touched page ---
+    def vpages():
+        return jnp.where(gi < ntouch, row_pages, scratch)
+
+    def to_pages(x):  # (1, H, Tp, ·) -> (G, H, g, ·)
+        return x[0].reshape(h, npage, g, x.shape[-1]).transpose(1, 0, 2, 3)
+
+    if cfg.value_bits > 0:
+        qv = qz.encode_values(v, cfg.value_bits, cfg.scale_dtype)
+        updates["value_codes"] = _scatter_pages(
+            cache.value_codes, vpages(), to_pages(qv.codes))
+        updates["value_scale"] = _scatter_pages(
+            cache.value_scale, vpages(), to_pages(qv.scale))
+        updates["value_zero"] = _scatter_pages(
+            cache.value_zero, vpages(), to_pages(qv.zero))
+    else:
+        updates["value_fp"] = _scatter_pages(
+            cache.value_fp, vpages(), to_pages(v))
+
+    # --- keys ---
+    if cfg.method == "none":
+        updates["key_fp"] = _scatter_pages(
+            cache.key_fp, vpages(), to_pages(k))
+    elif cfg.method == "int":
+        qk = qz.encode_int_keys(k, cfg)
+        updates["key_codes"] = _scatter_pages(
+            cache.key_codes, vpages(), to_pages(qk.codes))
+        updates["key_scales"] = {
+            "scale": _scatter_pages(cache.key_scales["scale"], vpages(),
+                                    to_pages(qk.scale)),
+            "zero": _scatter_pages(cache.key_scales["zero"], vpages(),
+                                   to_pages(qk.zero))}
+    else:
+        kpages = jnp.where(gi < nfull, row_pages, scratch)
+        # round through the residual dtype: streaming-parity invariant with
+        # the dense cache and with later token-by-token appends
+        k_rdt = k.astype(jnp.dtype(cfg.residual_dtype))
+        codes, scales = _encode_group(k_rdt, cfg)   # (1,H,G,g,·)/(1,H,G,1|g,·)
+        updates["key_codes"] = _scatter_pages(
+            cache.key_codes, kpages, codes[0].transpose(1, 0, 2, 3))
+        updates["key_scales"] = {
+            key: _scatter_pages(cache.key_scales[key], kpages,
+                                scales[key][0].transpose(1, 0, 2, 3))
+            for key in cache.key_scales}
+        # partial group -> per-slot residual. The clamp binds only when
+        # nfull*g == Tp, i.e. rem == 0: the slice is then misaligned
+        # garbage, but every residual read is masked by lengths and later
+        # appends overwrite row (pos % g) before it can become visible.
+        start = jnp.minimum(nfull * g, tp - g)
+        k_res = jax.lax.dynamic_slice_in_dim(k_rdt, start, g, axis=2)[0]
+        residual = cache.key_residual.at[slot].set(
+            k_res.astype(cache.key_residual.dtype))
+        updates["key_residual"] = residual
+
+    lengths = cache.lengths.at[slot].set(true_len)
+    return dataclasses.replace(cache, lengths=lengths, **updates)
+
+
+# ---------------------------------------------------------------------------
+# Append (batched decode step over all slots)
+# ---------------------------------------------------------------------------
+
+
+def paged_append(cache: PagedKVCache, k_new: Array, v_new: Array,
+                 page_table: Array, active: Array) -> PagedKVCache:
+    """Append one token per *active* slot. k_new/v_new: (S, Hkv, 1, d)
+    post-RoPE; page_table: (S, N) int32; active: (S,) bool.
+
+    Inactive slots write to the scratch page / keep their state; lengths
+    advance only where active. Unlike the dense cache's ``lax.cond`` flush
+    (one shared position), every slot sits at its own position, so the
+    group encode runs every step and the flush is realized as a masked
+    scatter target.
+    """
+    cfg = cache.cfg
+    lay = cache.layout
+    s, h, _, d = k_new.shape
+    g = lay.page_size
+    scratch = lay.scratch_page
+    pos = cache.lengths                       # (S,)
+    gidx = jnp.minimum(pos // g, lay.pages_per_slot - 1)
+    page = jnp.take_along_axis(page_table, gidx[:, None], axis=1)[:, 0]
+    page = jnp.where(active, page, scratch)   # (S,)
+    row = pos % g                             # (S,)
+    sid = jnp.arange(s)
+    updates: dict[str, Any] = {}
+
+    # --- values (token-major page rows) ---
+    if cfg.value_bits > 0:
+        qv = qz.encode_values(v_new, cfg.value_bits, cfg.scale_dtype)
+        updates["value_codes"] = _scatter_rows(
+            cache.value_codes, page, row, qv.codes[:, :, 0])
+        updates["value_scale"] = _scatter_rows(
+            cache.value_scale, page, row, qv.scale[:, :, 0])
+        updates["value_zero"] = _scatter_rows(
+            cache.value_zero, page, row, qv.zero[:, :, 0])
+    else:
+        updates["value_fp"] = _scatter_rows(
+            cache.value_fp, page, row, v_new[:, :, 0])
+
+    # --- keys ---
+    if cfg.method == "none":
+        updates["key_fp"] = _scatter_rows(
+            cache.key_fp, page, row, k_new[:, :, 0])
+    elif cfg.method == "int":
+        qk = qz.encode_int_keys(k_new, cfg)
+        updates["key_codes"] = _scatter_rows(
+            cache.key_codes, page, row, qk.codes[:, :, 0])
+        updates["key_scales"] = {
+            "scale": _scatter_rows(cache.key_scales["scale"], page, row,
+                                   qk.scale[:, :, 0]),
+            "zero": _scatter_rows(cache.key_scales["zero"], page, row,
+                                  qk.zero[:, :, 0])}
+    else:
+        written = cache.key_residual.at[sid, :, row].set(
+            k_new[:, :, 0].astype(cache.key_residual.dtype))
+        residual = jnp.where(active[:, None, None, None], written,
+                             cache.key_residual)
+        flush = active & (row == g - 1)
+        codes, scales = _encode_group(residual, cfg)  # (S,H,1,g,·)
+        fpage = jnp.where(flush, page, scratch)
+        updates["key_codes"] = _scatter_pages(
+            cache.key_codes, fpage, codes[:, :, 0])
+        updates["key_scales"] = {
+            key: _scatter_pages(cache.key_scales[key], fpage,
+                                scales[key][:, :, 0])
+            for key in cache.key_scales}
+        updates["key_residual"] = residual
+
+    lengths = pos + active.astype(jnp.int32)
+    return dataclasses.replace(cache, lengths=lengths, **updates)
+
+
+# ---------------------------------------------------------------------------
+# Gathered dense view + decode attention
+# ---------------------------------------------------------------------------
+
+
+def gather_view(cache: PagedKVCache, page_table: Array) -> kvc.KVCache:
+    """Materialize per-slot dense cache views from the page table.
+
+    Returns a :class:`KVCache` with batch == slots, ``length`` (S,) —
+    consumable by ``kv_cache.decode_attention`` (batched masks) and
+    ``kv_cache.fused_decode_attention`` (per-slot kernel lengths).
+    Unassigned table entries gather the scratch page; their tokens sit
+    beyond the slot's length and are masked out.
+    """
+    cfg = cache.cfg
+    lay = cache.layout
+    s, n = page_table.shape
+    g = lay.page_size
+    t_cap = n * g
+    key_codes = key_scales = key_residual = key_fp = None
+
+    def flat_tokens(x):  # (S, H, N, g, ·) -> (S, H, N*g, ·)
+        return x.reshape(x.shape[0], x.shape[1], t_cap, x.shape[-1])
+
+    if cache.grouped:
+        key_codes = _gather_pages(cache.key_codes, page_table)
+        key_scales = {k: _gather_pages(v, page_table)
+                      for k, v in cache.key_scales.items()}
+        key_residual = cache.key_residual
+    elif cfg.method == "int":
+        key_codes = flat_tokens(_gather_pages(cache.key_codes, page_table))
+        key_scales = {k: flat_tokens(_gather_pages(v, page_table))
+                      for k, v in cache.key_scales.items()}
+    else:
+        key_fp = flat_tokens(_gather_pages(cache.key_fp, page_table))
+
+    value_codes = value_scale = value_zero = value_fp = None
+    if cfg.value_bits > 0:
+        value_codes = flat_tokens(_gather_pages(cache.value_codes, page_table))
+        value_scale = flat_tokens(_gather_pages(cache.value_scale, page_table))
+        value_zero = flat_tokens(_gather_pages(cache.value_zero, page_table))
+    else:
+        value_fp = flat_tokens(_gather_pages(cache.value_fp, page_table))
+
+    return kvc.KVCache(key_codes=key_codes, key_scales=key_scales,
+                       key_residual=key_residual, key_fp=key_fp,
+                       value_codes=value_codes, value_scale=value_scale,
+                       value_zero=value_zero, value_fp=value_fp,
+                       length=cache.lengths, cfg=cfg, max_len=t_cap,
+                       layout=LinearLayout(t_cap))
+
+
+def paged_decode_attention(cache: PagedKVCache, q: Array, page_table: Array,
+                           scale: float | None = None,
+                           backend: str = "jnp") -> Array:
+    """Single-step attention of q (S, Hq, d) over all slots' pages.
+
+    ``backend="jnp"`` uses the pure-jnp masked-softmax path;
+    ``ref|interpret|pallas`` route the polar policy through the fused
+    flash-decode kernel (per-slot lengths).
+    """
+    view = gather_view(cache, page_table)
+    if backend == "jnp" or cache.cfg.method != "polar":
+        return kvc.decode_attention(view, q, scale=scale)
+    return kvc.fused_decode_attention(view, q, scale=scale, backend=backend)

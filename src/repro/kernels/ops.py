@@ -28,10 +28,18 @@ from repro.kernels.polar_attention import (
 Array = jax.Array
 NEG_INF = -1e30
 DEFAULT_BACKEND = "ref"
+BACKENDS = ("ref", "interpret", "pallas")
+
+
+def _check_backend(backend: str) -> None:
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown kernel backend {backend!r}; "
+                         f"expected one of {BACKENDS}")
 
 
 def polar_qk_scores(q, codes, rs, rz, ts, tz, *, r_bits=4, t_bits=4,
                     backend: str = DEFAULT_BACKEND, block_groups: int = 4):
+    _check_backend(backend)
     if backend == "ref":
         return ref_mod.ref_polar_qk_scores(q, codes, rs, rz, ts, tz,
                                            r_bits=r_bits, t_bits=t_bits)
@@ -42,6 +50,7 @@ def polar_qk_scores(q, codes, rs, rz, ts, tz, *, r_bits=4, t_bits=4,
 
 def polar_encode(k, *, r_bits=4, t_bits=4, group_size=128,
                  scale_dtype="float32", backend: str = DEFAULT_BACKEND):
+    _check_backend(backend)
     if backend == "ref":
         return ref_mod.ref_polar_encode(k, r_bits=r_bits, t_bits=t_bits,
                                         group_size=group_size,
@@ -55,6 +64,7 @@ def polar_decode_attention_grouped(q, codes, rs, rz, ts, tz, values, vscale,
                                    vzero, length, *, r_bits=4, t_bits=4,
                                    backend: str = DEFAULT_BACKEND,
                                    block_groups: int = 4):
+    _check_backend(backend)
     if backend == "ref":
         if vscale is not None:
             values = (values.astype(jnp.float32) * vscale.astype(jnp.float32)
@@ -93,8 +103,9 @@ def polar_decode_attention_full(
     fp residual segment, merged exactly.
 
     q: (B, Hq, d); key_residual: (B, Hkv, g, d); values: (B, Hkv, T, d) or
-    uint8 codes (+ vscale/vzero (B,Hkv,T,1)); length: () total tokens.
-    Returns (B, Hq, d) in q.dtype.
+    uint8 codes (+ vscale/vzero (B,Hkv,T,1)); length: () or (B,) total
+    tokens — per-sequence lengths mask each continuous-batching slot at its
+    own decode position. Returns (B, Hq, d) in q.dtype.
     """
     b, hq, d = q.shape
     hkv = codes.shape[1]
@@ -102,7 +113,8 @@ def polar_decode_attention_full(
     qpk = hq // hkv
     scale = d ** -0.5 if softmax_scale is None else softmax_scale
     q4 = (q.astype(jnp.float32) * scale).reshape(b, hkv, qpk, d)
-    flushed = (length // g) * g
+    len_b = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
+    flushed = (len_b // g) * g                                   # (B,)
 
     acc_g, m_g, l_g = polar_decode_attention_grouped(
         q4, codes, rs, rz, ts, tz, values, vscale, vzero, flushed,
@@ -113,21 +125,25 @@ def polar_decode_attention_full(
     res = key_residual.astype(jnp.float32)                       # (B,Hkv,g,d)
     s_res = jnp.einsum("bhqd,bhgd->bhqg", q4, res)
     slot = jnp.arange(g, dtype=jnp.int32)
-    n_res = length - flushed
-    mask = slot < n_res
+    n_res = len_b - flushed                                      # (B,)
+    mask = slot[None, None, None, :] < n_res[:, None, None, None]
     s_res = jnp.where(mask, s_res, NEG_INF)
     m_r = jnp.max(s_res, axis=-1)
     p_r = jnp.where(mask, jnp.exp(s_res - m_r[..., None]), 0.0)
     l_r = jnp.sum(p_r, axis=-1)
-    # residual V rows live token-major at [flushed, flushed + g)
+    # residual V rows live token-major at [flushed, flushed + g) — gathered
+    # per sequence (flushed differs across slots; clamp keeps the gather in
+    # bounds when a full cache leaves no residual rows to read)
+    t_cap = values.shape[2]
+    rows = jnp.minimum(flushed[:, None] + slot[None, :], t_cap - 1)
+    idx = rows[:, None, :, None]                                 # (B,1,g,1)
+    v_res = jnp.take_along_axis(values, idx, axis=2)
     if vscale is not None:
-        v_res = jax.lax.dynamic_slice_in_dim(values, flushed, g, axis=2)
-        vs_res = jax.lax.dynamic_slice_in_dim(vscale, flushed, g, axis=2)
-        vz_res = jax.lax.dynamic_slice_in_dim(vzero, flushed, g, axis=2)
+        vs_res = jnp.take_along_axis(vscale, idx, axis=2)
+        vz_res = jnp.take_along_axis(vzero, idx, axis=2)
         v_res = (v_res.astype(jnp.float32) * vs_res.astype(jnp.float32)
                  + vz_res.astype(jnp.float32))
     else:
-        v_res = jax.lax.dynamic_slice_in_dim(values, flushed, g, axis=2)
         v_res = v_res.astype(jnp.float32)
     acc_r = jnp.einsum("bhqg,bhgd->bhqd", p_r, v_res)
 

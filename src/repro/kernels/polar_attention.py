@@ -111,7 +111,10 @@ def polar_decode_attention_grouped(
     q: (B,Hkv,Qh,d) — ALREADY scaled by softmax scale.
     codes: (B,Hkv,G,g,P); stats: (B,Hkv,G,1,P).
     values: (B,Hkv,T,d) fp, or uint8 codes with vscale/vzero (B,Hkv,T,1)
-    (pass vscale=None for fp values). length: () int32 valid grouped tokens.
+    (pass vscale=None for fp values). length: () or (B,) int32 valid
+    grouped tokens — per-sequence when batched (continuous batching slots
+    at heterogeneous positions); the kernel reads its own row via the
+    length BlockSpec, so the body is unchanged.
 
     Returns (out (B,Hkv,Qh,d), m (B,Hkv,Qh), l (B,Hkv,Qh)) — unnormalized
     partials (see module docstring).
@@ -131,7 +134,8 @@ def polar_decode_attention_grouped(
     stat_spec = pl.BlockSpec((1, 1, gb, 1, p), lambda i, j, n: (i, j, n, 0, 0))
     v_spec = pl.BlockSpec((1, 1, s_blk, d), lambda i, j, n: (i, j, n, 0))
     vstat_spec = pl.BlockSpec((1, 1, s_blk, 1), lambda i, j, n: (i, j, n, 0))
-    len2 = jnp.reshape(length.astype(jnp.int32), (1, 1))
+    len2 = jnp.broadcast_to(
+        jnp.asarray(length, jnp.int32).reshape(-1, 1), (b, 1))
 
     if quantized_values:
         v_in = (values, vscale, vzero)
@@ -152,7 +156,7 @@ def polar_decode_attention_grouped(
             pl.BlockSpec((1, 1, gb, g, p), lambda i, j, n: (i, j, n, 0, 0)),
             stat_spec, stat_spec, stat_spec, stat_spec,
             *v_specs,
-            pl.BlockSpec((1, 1), lambda i, j, n: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, n: (i, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, 1, qh, d), lambda i, j, n: (i, j, 0, 0)),

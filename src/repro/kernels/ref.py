@@ -51,8 +51,10 @@ def ref_polar_decode_attention(q, codes, rs, rz, ts, tz, values, length, *,
                                softmax_scale: float | None = None):
     """Fused decode attention over the *grouped* part of the cache.
 
-    q: (B, Hkv, Qh, d); values: (B, Hkv, T, d) fp; length: () int32 = number
-    of valid grouped tokens (a multiple of g).
+    q: (B, Hkv, Qh, d); values: (B, Hkv, T, d) fp; length: () or (B,) int32
+    = number of valid grouped tokens per sequence (a multiple of g) — the
+    batched form serves continuous batching, where every slot sits at its
+    own decode position.
     Returns (out, m, l): un-normalized flash-style partial results so the
     caller can merge the fp residual segment —
         out: (B, Hkv, Qh, d) = sum_t exp(s_t - m) v_t
@@ -64,11 +66,13 @@ def ref_polar_decode_attention(q, codes, rs, rz, ts, tz, values, length, *,
     s = ref_polar_qk_scores(q * scale, codes, rs, rz, ts, tz,
                             r_bits=r_bits, t_bits=t_bits)
     t_cap = s.shape[-1]
+    len_b = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
     pos = jnp.arange(t_cap, dtype=jnp.int32)
-    s = jnp.where(pos < length, s, NEG_INF)
+    valid = pos[None, None, None, :] < len_b[:, None, None, None]
+    s = jnp.where(valid, s, NEG_INF)
     m = jnp.max(s, axis=-1)
     p = jnp.exp(s - m[..., None])
-    p = jnp.where(pos < length, p, 0.0)  # kill exp(NEG_INF - NEG_INF) rows
+    p = jnp.where(valid, p, 0.0)  # kill exp(NEG_INF - NEG_INF) rows
     l = jnp.sum(p, axis=-1)
     out = jnp.einsum("bhqt,bhtd->bhqd", p, values.astype(jnp.float32))
     return out, m, l

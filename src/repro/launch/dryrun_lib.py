@@ -227,6 +227,8 @@ def run_cell(arch: str, shape_name: str, mesh: Mesh, out_dir: str,
     # XLA's cost_analysis counts while (scan) bodies ONCE — kept only for
     # reference. The loop-aware static model (hlo_cost) is authoritative.
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):  # pre-0.5 jax returns [dict]
+        cost = cost[0] if cost else {}
     rec["cost_xla_raw"] = {k: float(v) for k, v in cost.items()
                            if isinstance(v, (int, float)) and
                            k in ("flops", "bytes accessed", "transcendentals")}

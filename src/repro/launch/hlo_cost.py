@@ -144,6 +144,19 @@ def _split_operands(s: str) -> list[str]:
     return [o for o in (x.strip() for x in out) if o]
 
 
+def _operand_name(s: str) -> str:
+    """SSA name of an operand reference.
+
+    Newer HLO prints operands as ``%name``; older dumps prefix the type
+    (``f32[64,64]{1,0} %name``) — take the last %-token, falling back to the
+    first token (literal constant operands like ``7``).
+    """
+    for tok in reversed(s.split()):
+        if tok.startswith("%"):
+            return tok.lstrip("%")
+    return s.split(" ")[0].lstrip("%")
+
+
 def _attr(attrs: str, key: str) -> Optional[str]:
     m = re.search(key + r"=%?([\w\.\-]+)", attrs)
     return m.group(1) if m else None
@@ -257,19 +270,19 @@ class HloCostModel:
             c.hbm_bytes += 2 * rbytes
             return c
         if kind == "dynamic-update-slice" and len(op.operands) >= 2:
-            upd = op.operands[1].split(" ")[0].lstrip("%")
+            upd = _operand_name(op.operands[1])
             ub = _type_elems_bytes(shapes.get(upd, ""))[1]
             c.hbm_bytes += 2 * ub
             return c
         if kind == "scatter" and len(op.operands) >= 3:
-            upd = op.operands[2].split(" ")[0].lstrip("%")
+            upd = _operand_name(op.operands[2])
             ub = _type_elems_bytes(shapes.get(upd, ""))[1]
             c.hbm_bytes += 2 * ub
             return c
 
         # leaf ops
         if kind == "dot":
-            lhs_shape = shapes.get(op.operands[0].split(" ")[0].lstrip("%"), "")
+            lhs_shape = shapes.get(_operand_name(op.operands[0]), "")
             lelems, _ = _type_elems_bytes(lhs_shape)
             cdims = _dims(op.attrs, "lhs_contracting_dims")
             csize = 1
@@ -310,14 +323,14 @@ class HloCostModel:
         # usage map: inner op name -> consumer (kind, result bytes)
         total = 0.0
         for i, operand in enumerate(op.operands):
-            nm = operand.split(" ")[0].lstrip("%")
+            nm = _operand_name(operand)
             full = _type_elems_bytes(shapes.get(nm, ""))[1]
             pname = params.get(i)
             if pname is None:
                 total += full
                 continue
             consumers = [o for o in inner_ops
-                         if any(x.split(" ")[0].lstrip("%") == pname
+                         if any(_operand_name(x) == pname
                                 for x in o.operands)]
             if consumers and all(o.kind in ("dynamic-slice", "slice", "gather")
                                  for o in consumers):
@@ -325,11 +338,11 @@ class HloCostModel:
                              for o in consumers)
             elif consumers and all(
                     o.kind == "dynamic-update-slice" and len(o.operands) >= 2
-                    and o.operands[0].split(" ")[0].lstrip("%") == pname
+                    and _operand_name(o.operands[0]) == pname
                     for o in consumers):
                 total += sum(
                     _type_elems_bytes(inner_shapes.get(
-                        o.operands[1].split(" ")[0].lstrip("%"), ""))[1]
+                        _operand_name(o.operands[1]), ""))[1]
                     for o in consumers)
             else:
                 total += full
@@ -338,7 +351,7 @@ class HloCostModel:
     def _operand_bytes(self, op: Op, shapes: dict[str, str]) -> int:
         total = 0
         for o in op.operands:
-            nm = o.split(" ")[0].lstrip("%")
+            nm = _operand_name(o)
             if nm in shapes:
                 total += _type_elems_bytes(shapes[nm])[1]
         return total
@@ -346,7 +359,7 @@ class HloCostModel:
     def _operand_elems(self, op: Op, shapes: dict[str, str]) -> int:
         total = 0
         for o in op.operands:
-            nm = o.split(" ")[0].lstrip("%")
+            nm = _operand_name(o)
             if nm in shapes:
                 total += _type_elems_bytes(shapes[nm])[0]
         return total

@@ -17,22 +17,31 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis_types where this jax supports them.
+
+    Older jax (<0.5) has neither ``jax.sharding.AxisType`` nor the
+    ``axis_types`` kwarg; Auto is its only behavior, so plain make_mesh is
+    equivalent there.
+    """
+    try:
+        auto = (jax.sharding.AxisType.Auto,) * len(axes)
+        return jax.make_mesh(shape, axes, axis_types=auto)
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model_axis: int = 1):
     """A small mesh over whatever devices exist (tests, examples)."""
     n = len(jax.devices())
     model_axis = min(model_axis, n)
-    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"),
-                         axis_types=_auto(2))
+    return make_mesh((n // model_axis, model_axis), ("data", "model"))
 
 
 def data_axes(mesh) -> tuple[str, ...]:

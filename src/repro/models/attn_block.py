@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import kv_cache as kvc
+from repro.core import paged_cache as pgc
 from repro.core.attention import flash_attention
 from repro.distributed import ctx
 from repro.models import layers as L
@@ -123,15 +124,68 @@ def attention_decode(params: Params, x: Array, cfg: ModelConfig,
     q = L.apply_rope(q, pos, cfg.rope_base, cfg.rope_ntk_scale)
     k = L.apply_rope(k, pos, cfg.rope_base, cfg.rope_ntk_scale)
     cache = kvc.append(cache, k, v)
-    out = kvc.decode_attention(cache, q[:, :, 0], window=window)  # (B, H, hd)
+    if (cfg.decode_backend != "jnp" and cfg.quant.method == "polar"
+            and window == 0):
+        # fused kernel assumes linear placement — ring windows stay on the
+        # jnp path
+        out = kvc.fused_decode_attention(cache, q[:, :, 0],
+                                         backend=cfg.decode_backend)
+    else:
+        out = kvc.decode_attention(cache, q[:, :, 0], window=window)
     return L.linear(out.reshape(b, 1, -1), params["wo"]), cache
 
 
+def attention_prefill_paged(params: Params, x: Array, cfg: ModelConfig,
+                            cache: pgc.PagedKVCache, *, slot: Array,
+                            page_row: Array, true_len: Array):
+    """One request's prompt attention + paged cache fill.
+
+    x: (1, Tp, D) with Tp a static bucket length; real tokens occupy
+    ``[0, true_len)``, the tail is padding. Causal masking means padding
+    (at the end) never influences real positions, so the flash output for
+    real tokens is exact. Returns (y (1, Tp, D), cache).
+    """
+    b, t, _ = x.shape
+    positions = jnp.arange(t, dtype=jnp.int32)
+    q, k, v = _qkv(params, x, cfg, positions, rope=True)
+    cache = pgc.paged_prefill(cache, slot, page_row, k, v, true_len)
+    out = flash_attention(q, k, v, mode="causal")
+    return L.linear(L.merge_heads(out), params["wo"]), cache
+
+
+def attention_decode_paged(params: Params, x: Array, cfg: ModelConfig,
+                           cache: pgc.PagedKVCache, *, page_table: Array,
+                           active: Array):
+    """Batched single-token decode over continuous-batching slots.
+
+    x: (S, 1, D); every slot sits at its own position (cache.lengths), so
+    RoPE uses per-slot positions and attention masks per-slot lengths.
+    Returns (y (S, 1, D), cache).
+    """
+    s = x.shape[0]
+    q = L.split_heads(L.linear(x, params["wq"], params.get("bq")),
+                      cfg.num_heads)                      # (S, H, 1, hd)
+    k = L.split_heads(L.linear(x, params["wk"], params.get("bk")),
+                      cfg.num_kv_heads)
+    v = L.split_heads(L.linear(x, params["wv"], params.get("bv")),
+                      cfg.num_kv_heads)
+    pos = cache.lengths[:, None]                          # (S, 1)
+    q = L.apply_rope(q, pos, cfg.rope_base, cfg.rope_ntk_scale)
+    k = L.apply_rope(k, pos, cfg.rope_base, cfg.rope_ntk_scale)
+    cache = pgc.paged_append(cache, k, v, page_table, active)
+    backend = cfg.decode_backend if cfg.quant.method == "polar" else "jnp"
+    out = pgc.paged_decode_attention(cache, q[:, :, 0], page_table,
+                                     backend=backend)
+    return L.linear(out.reshape(s, 1, -1), params["wo"]), cache
+
+
 def make_cache(cfg: ModelConfig, batch: int, max_len: int) -> kvc.KVCache:
+    from repro.core.cache_layout import LinearLayout, RingLayout
     cap = max_len
     if cfg.window:
         cap = min(cap, cfg.window)
     g = cfg.quant.group_size
     cap = -(-cap // g) * g  # round up to a group multiple
+    layout = RingLayout(cap) if cfg.window else LinearLayout(cap)
     return kvc.init_cache(cfg.quant, batch, cfg.num_kv_heads, cfg.head_dim,
-                          cap, dtype=jnp.dtype(cfg.dtype))
+                          cap, dtype=jnp.dtype(cfg.dtype), layout=layout)

@@ -39,6 +39,13 @@ class Model:
     prefill: Callable[[dict, dict, Any], tuple[Array, Any]]
     decode: Callable[[dict, Any, Array], tuple[Array, Any]]
     input_specs: Callable[[ShapeConfig], dict]
+    # --- continuous batching over paged caches (None where unsupported) ---
+    # init_paged_state(layout) -> stacked per-layer PagedKVCache
+    # prefill_paged(params, tokens (1,Tp), state, slot, page_row, true_len)
+    # decode_paged(params, state, token (S,), page_table, active)
+    init_paged_state: Callable[..., Any] | None = None
+    prefill_paged: Callable[..., Any] | None = None
+    decode_paged: Callable[..., Any] | None = None
 
     def decode_state_specs(self, shape: ShapeConfig):
         """ShapeDtypeStructs of the decode state (no allocation)."""
@@ -77,6 +84,18 @@ def _token_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
 def get_model(cfg: ModelConfig) -> Model:
     specs = functools.partial(_token_specs, cfg)
     if cfg.family in ("dense", "moe", "vlm"):
+        paged = {}
+        # vlm prefill needs the patch frontend; the paged attention path
+        # has no sliding-window masking, so windowed configs are excluded
+        if cfg.family != "vlm" and cfg.window == 0:
+            paged = dict(
+                init_paged_state=lambda layout: TF.init_paged_caches(
+                    cfg, layout),
+                prefill_paged=lambda p, toks, s, slot, row, tl:
+                    TF.prefill_paged_fn(p, toks, cfg, s, slot, row, tl),
+                decode_paged=lambda p, s, t, table, active:
+                    TF.decode_paged_fn(p, s, t, table, active, cfg),
+            )
         return Model(
             cfg=cfg,
             init=functools.partial(TF.init_params, cfg=cfg),
@@ -86,6 +105,7 @@ def get_model(cfg: ModelConfig) -> Model:
             prefill=lambda p, b, s: TF.prefill_fn(p, b, cfg, s),
             decode=lambda p, s, t: TF.decode_fn(p, s, t, cfg),
             input_specs=specs,
+            **paged,
         )
     if cfg.family == "encdec":
         return Model(

@@ -207,6 +207,15 @@ def init_decode_caches(cfg: ModelConfig, batch: int, max_len: int):
         lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), single)
 
 
+def init_paged_caches(cfg: ModelConfig, layout):
+    """Stacked per-layer paged caches sharing one page-table numbering."""
+    from repro.core import paged_cache as pgc
+    single = pgc.init_paged_cache(cfg.quant, layout, cfg.num_kv_heads,
+                                  cfg.head_dim, dtype=jnp.dtype(cfg.dtype))
+    return jax.tree_util.tree_map(
+        lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), single)
+
+
 def prefill_fn(params: Params, batch: dict, cfg: ModelConfig, caches):
     tokens = batch["tokens"]
     x = embed_tokens(params, tokens, cfg)
@@ -236,6 +245,75 @@ def decode_fn(params: Params, caches, token: Array, cfg: ModelConfig):
     def body(h, xs):
         lp, cache = xs
         h, cache = block_decode(lp, h, cfg, cache, window=cfg.window)
+        return h, cache
+
+    x, caches = jax.lax.scan(body, x, (params["layers"], caches))
+    logits = lm_logits(params, x, cfg)
+    return logits[:, 0], caches
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching: per-request prefill + batched decode over paged caches
+# ---------------------------------------------------------------------------
+
+
+def _block_prefill_paged(bp: Params, x: Array, cfg: ModelConfig, cache, *,
+                         slot, page_row, true_len):
+    h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+    y, cache = AB.attention_prefill_paged(bp["attn"], h, cfg, cache,
+                                          slot=slot, page_row=page_row,
+                                          true_len=true_len)
+    x = x + y
+    h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+    f, _ = _ffn_apply(bp, h, cfg)
+    return x + f, cache
+
+
+def _block_decode_paged(bp: Params, x: Array, cfg: ModelConfig, cache, *,
+                        page_table, active):
+    h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+    y, cache = AB.attention_decode_paged(bp["attn"], h, cfg, cache,
+                                         page_table=page_table,
+                                         active=active)
+    x = x + y
+    h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+    f, _ = _ffn_apply(bp, h, cfg)
+    return x + f, cache
+
+
+def prefill_paged_fn(params: Params, tokens: Array, cfg: ModelConfig,
+                     caches, slot: Array, page_row: Array, true_len: Array):
+    """Prefill ONE request into its slot's pages.
+
+    tokens: (1, Tp) int32, Tp a static bucket length (real prompt =
+    first ``true_len`` tokens). Returns (last-real-token logits (1, V),
+    caches).
+    """
+    x = embed_tokens(params, tokens, cfg)
+
+    def body(h, xs):
+        lp, cache = xs
+        h, cache = _block_prefill_paged(lp, h, cfg, cache, slot=slot,
+                                        page_row=page_row, true_len=true_len)
+        return h, cache
+
+    x, caches = jax.lax.scan(body, x, (params["layers"], caches))
+    last = jax.lax.dynamic_slice_in_dim(x, true_len - 1, 1, axis=1)
+    logits = lm_logits(params, last, cfg)
+    return logits[:, 0], caches
+
+
+def decode_paged_fn(params: Params, caches, token: Array, page_table: Array,
+                    active: Array, cfg: ModelConfig):
+    """Batched decode step over all slots. token: (S,) int32 ->
+    (logits (S, V), caches). Inactive slots produce don't-care logits and
+    leave their cache state untouched (lengths included)."""
+    x = embed_tokens(params, token[:, None], cfg)
+
+    def body(h, xs):
+        lp, cache = xs
+        h, cache = _block_decode_paged(lp, h, cfg, cache,
+                                       page_table=page_table, active=active)
         return h, cache
 
     x, caches = jax.lax.scan(body, x, (params["layers"], caches))

@@ -1,2 +1,5 @@
-"""Serving: batched decode engine over quantized KV caches."""
-from repro.serve.engine import ServeEngine, GenerationConfig  # noqa: F401
+"""Serving: batched decode engines over quantized KV caches."""
+from repro.serve.engine import (  # noqa: F401
+    ContinuousBatchingEngine, GenerationConfig, ServeEngine,
+)
+from repro.serve.scheduler import Request, Scheduler  # noqa: F401

@@ -1,26 +1,38 @@
-"""Batched serving engine: prefill -> decode over the quantized KV cache.
+"""Serving engines over the quantized KV cache.
 
-The engine jit-compiles one prefill step per prompt length bucket and one
-decode step; the decode step is the PolarQuant fast path (grouped LUT
-scores + fp residual). Under a mesh, caches shard batch over (pod, data)
-and the sequence/group axis over model (context-parallel decode).
+* :class:`ServeEngine` — static batching: one shared prefill, lock-step
+  decode, the whole batch stalls until its slowest request finishes. Kept
+  as the baseline (and for single-batch offline use).
+* :class:`ContinuousBatchingEngine` — per-request admission into a paged
+  cache (`core.paged_cache`): requests join mid-flight as slots/pages free
+  up, decode steps batch all active slots at heterogeneous positions, and
+  EOS immediately reclaims pages. All device shapes are static (slots,
+  pages, prompt buckets), so the decode step jits exactly once and prefill
+  jits once per bucket.
+
+Under a mesh, caches shard batch over (pod, data) and the sequence/group
+axis over model (context-parallel decode).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cache_layout import PagedLayout
 from repro.distributed import ctx
 from repro.distributed import sharding as shd
 from repro.models.registry import Model
+from repro.serve.scheduler import Request, Scheduler
+from repro.utils import cdiv, pow2_bucket
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class GenerationConfig:
     max_new_tokens: int = 32
     temperature: float = 0.0      # 0 => greedy
@@ -63,6 +75,16 @@ class ServeEngine:
         Returns dict with generated tokens (B, max_new_tokens) and timings.
         """
         b = batch["tokens"].shape[0]
+        cfg = self.model.cfg
+        if cfg.family in ("dense", "moe", "vlm") and cfg.window == 0:
+            # linear cache: prompt + appended tokens must fit (the last
+            # sampled token is never appended, hence the -1)
+            tp = batch["tokens"].shape[1] + (
+                cfg.frontend_tokens if cfg.family == "vlm" else 0)
+            if tp + gen.max_new_tokens - 1 > self.max_len:
+                raise ValueError(
+                    f"prompt {tp} + max_new_tokens {gen.max_new_tokens} "
+                    f"exceeds cache capacity {self.max_len}")
         key = jax.random.PRNGKey(gen.seed)
         with self._ctx():
             state = self.model.init_decode_state(b, self.max_len)
@@ -72,14 +94,14 @@ class ServeEngine:
             t_prefill = time.monotonic() - t0
 
             toks = []
-            tok = _sample(logits, key, gen)
+            tok = self._sample(logits, key, gen)
             toks.append(tok)
             t0 = time.monotonic()
             done = jnp.zeros((b,), bool)
             for i in range(gen.max_new_tokens - 1):
                 logits, state = self._decode(self.params, state, tok)
                 key, sub = jax.random.split(key)
-                tok = _sample(logits, sub, gen)
+                tok = self._sample(logits, sub, gen)
                 if gen.eos_id >= 0:
                     done = done | (tok == gen.eos_id)
                     tok = jnp.where(done, gen.eos_id, tok)
@@ -101,3 +123,223 @@ def _tree_bytes(tree: Any) -> int:
     return sum(x.size * x.dtype.itemsize
                for x in jax.tree_util.tree_leaves(tree)
                if hasattr(x, "dtype"))
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching over the paged cache
+# ---------------------------------------------------------------------------
+
+
+class ContinuousBatchingEngine:
+    """Continuous-batching serve engine over per-layer paged KV caches.
+
+    ``max_slots`` concurrent requests share ``num_pages`` cache pages of
+    ``group_size`` tokens each (default: fully provisioned,
+    ``max_slots * ceil(max_len/g)``; pass fewer to oversubscribe — slots
+    then stall when the pool runs dry and resume as pages free up).
+
+    ``run()`` drives a whole workload: arrivals (per-request
+    ``arrival_time`` on an engine-relative clock), FCFS admission with
+    per-request prefill into assigned pages, batched decode steps over all
+    active slots, EOS/length completion with immediate page reclamation.
+    The clock advances by measured device time, so reported latencies
+    compose queueing + compute. Call :meth:`warmup` first to take jit
+    compilation out of the measurements.
+    """
+
+    def __init__(self, model: Model, params, *, max_slots: int = 4,
+                 max_len: int = 256, num_pages: Optional[int] = None,
+                 mesh=None, rules: Optional[dict] = None):
+        if model.decode_paged is None:
+            raise ValueError(
+                f"family {model.cfg.family!r} has no paged decode path")
+        self.model = model
+        self.params = params
+        self.mesh = mesh
+        self.rules = rules
+        g = model.cfg.quant.group_size
+        pages_per_slot = cdiv(max_len, g)
+        if num_pages is None:
+            num_pages = max_slots * pages_per_slot
+        self.layout = PagedLayout(page_size=g, num_pages=num_pages,
+                                  slots=max_slots,
+                                  pages_per_slot=pages_per_slot)
+        self._prefill = jax.jit(model.prefill_paged)
+        self._decode = jax.jit(model.decode_paged)
+        self._sample = jax.jit(_sample, static_argnames=("gen",))
+
+    def _ctx(self):
+        if self.mesh is not None and self.rules is not None:
+            return ctx.use_sharding(self.mesh, self.rules)
+        import contextlib
+        return contextlib.nullcontext()
+
+    def _bucket(self, prompt_len: int) -> int:
+        return min(pow2_bucket(prompt_len, self.layout.page_size),
+                   self.layout.tokens_per_slot)
+
+    def warmup(self, prompt_lens: list[int],
+               gen: GenerationConfig = GenerationConfig()) -> None:
+        """Compile prefill buckets + the decode step against throwaway
+        state."""
+        state = self.model.init_paged_state(self.layout)
+        sched = Scheduler(self.layout)
+        key = jax.random.PRNGKey(0)
+        s = self.layout.slots
+        with self._ctx():
+            for tp in sorted({self._bucket(t) for t in prompt_lens}):
+                logits, state = self._prefill(
+                    self.params, jnp.zeros((1, tp), jnp.int32), state,
+                    jnp.zeros((), jnp.int32), sched.alloc.table()[0],
+                    jnp.asarray(tp, jnp.int32))
+                jax.block_until_ready(self._sample(logits, key, gen))
+            logits, state = self._decode(
+                self.params, state, jnp.zeros((s,), jnp.int32),
+                sched.alloc.table(), jnp.zeros((s,), bool))
+            jax.block_until_ready(self._sample(logits, key, gen))
+
+    def run(self, requests: list[Request],
+            gen: GenerationConfig = GenerationConfig()) -> dict:
+        """Serve ``requests`` to completion. Returns aggregate metrics plus
+        the completed request objects (tokens + timestamps filled in)."""
+        sched = Scheduler(self.layout)
+        state = self.model.init_paged_state(self.layout)
+        s = self.layout.slots
+        next_tok = np.zeros((s,), np.int32)
+        lengths = np.zeros((s,), np.int64)
+        eff_max: dict[int, int] = {}
+        admit_seq: dict[int, int] = {}   # slot -> admission order (victim pick)
+        n_admitted = 0
+        clock = 0.0
+        key = jax.random.PRNGKey(gen.seed)
+        arrivals = deque(sorted(requests, key=lambda r: r.arrival_time))
+        completed: list[Request] = []
+        util, active_hist = [], []
+        steps = 0
+
+        def finish(slot: int):
+            req = sched.active[slot]
+            req.t_done = clock
+            eff_max.pop(req.rid, None)
+            completed.append(sched.finish(slot))
+
+        with self._ctx():
+            while arrivals or sched.has_work:
+                while arrivals and arrivals[0].arrival_time <= clock:
+                    sched.submit(arrivals.popleft())
+
+                # idle engine: jump the clock to the next arrival
+                if not sched.has_work:
+                    clock = max(clock, arrivals[0].arrival_time)
+                    continue
+
+                # FCFS admission: prefill each admitted request (a
+                # preempted request resumes by prefilling its full context)
+                while (req := sched.admissible()) is not None:
+                    slot = sched.admit(req)
+                    admit_seq[slot] = n_admitted
+                    n_admitted += 1
+                    ctx_toks = np.concatenate(
+                        [req.prompt,
+                         np.asarray(req.out_tokens, np.int32)])
+                    tl = len(ctx_toks)
+                    eff_max[req.rid] = req.done_tokens + min(
+                        req.max_new_tokens - req.done_tokens,
+                        self.layout.tokens_per_slot - tl + 1)
+                    toks = np.zeros((1, self._bucket(tl)), np.int32)
+                    toks[0, :tl] = ctx_toks
+                    t0 = time.monotonic()
+                    logits, state = self._prefill(
+                        self.params, jnp.asarray(toks), state,
+                        jnp.asarray(slot, jnp.int32),
+                        sched.alloc.table()[slot],
+                        jnp.asarray(tl, jnp.int32))
+                    key, sub = jax.random.split(key)
+                    tok = self._sample(logits, sub, gen)
+                    tok0 = int(jax.block_until_ready(tok)[0])
+                    clock += time.monotonic() - t0
+                    if req.t_admitted is None:
+                        req.t_admitted = req.t_first_token = clock
+                    req.out_tokens.append(tok0)
+                    next_tok[slot] = tok0
+                    lengths[slot] = tl
+                    if (gen.eos_id >= 0 and tok0 == gen.eos_id) or \
+                            req.done_tokens >= eff_max[req.rid]:
+                        finish(slot)
+
+                if not sched.active:
+                    if sched.pending and sched.admissible() is None:
+                        # nothing running and the queue head can't fit:
+                        # future arrivals can't free pages, so either wait
+                        # them out (clock jump) or fail loudly
+                        if arrivals:
+                            clock = max(clock, arrivals[0].arrival_time)
+                            continue
+                        raise RuntimeError(
+                            "pool cannot fit a single pending request "
+                            "(num_pages too small)")
+                    continue
+
+                # batched decode step over non-stalled active slots
+                stalled = set(sched.ensure_pages(lengths))
+                step_slots = [sl for sl in sched.active if sl not in stalled]
+                if not step_slots:
+                    # every slot needs a page and the pool is dry:
+                    # recompute-preempt the most recent admission so the
+                    # rest make progress
+                    victim = max(sched.active, key=admit_seq.__getitem__)
+                    vreq = sched.active[victim]
+                    if vreq.preemptions >= 64:
+                        raise RuntimeError(
+                            "request thrashing on preemption — pool too "
+                            "small to finish any request")
+                    if vreq.out_tokens:
+                        vreq.out_tokens.pop()   # un-fed; re-sampled on resume
+                    eff_max.pop(vreq.rid, None)
+                    sched.preempt(victim)
+                    continue
+                mask = np.zeros((s,), bool)
+                mask[step_slots] = True
+                t0 = time.monotonic()
+                logits, state = self._decode(
+                    self.params, state, jnp.asarray(next_tok),
+                    sched.alloc.table(), jnp.asarray(mask))
+                key, sub = jax.random.split(key)
+                toks = np.asarray(
+                    jax.block_until_ready(self._sample(logits, sub, gen)))
+                clock += time.monotonic() - t0
+                steps += 1
+                util.append(sched.utilization())
+                active_hist.append(len(step_slots))
+
+                for sl in step_slots:
+                    lengths[sl] += 1
+                    req = sched.active[sl]
+                    t = int(toks[sl])
+                    req.out_tokens.append(t)
+                    next_tok[sl] = t
+                    if (gen.eos_id >= 0 and t == gen.eos_id) or \
+                            req.done_tokens >= eff_max[req.rid]:
+                        finish(sl)
+
+        total_tokens = sum(r.done_tokens for r in completed)
+        lats = sorted(r.latency() for r in completed)
+
+        def pct(p):
+            if not lats:
+                return 0.0
+            return lats[min(int(p / 100 * len(lats)), len(lats) - 1)]
+
+        return {
+            "requests": completed,
+            "total_tokens": total_tokens,
+            "wall_s": clock,
+            "tokens_per_s": total_tokens / max(clock, 1e-9),
+            "p50_latency_s": pct(50),
+            "p99_latency_s": pct(99),
+            "decode_steps": steps,
+            "mean_active_slots": float(np.mean(active_hist)) if active_hist
+            else 0.0,
+            "mean_page_utilization": float(np.mean(util)) if util else 0.0,
+            "cache_bytes": _tree_bytes(state),
+        }

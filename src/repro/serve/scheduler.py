@@ -1,0 +1,169 @@
+"""Continuous-batching scheduler state: requests, slots, page accounting.
+
+Host-side only — everything here runs between jitted steps. The scheduler
+owns the slot free-list and the :class:`~repro.core.cache_layout.PageAllocator`
+and decides *which* requests run each step; the engine owns the jitted
+model calls and the clock.
+
+Policies (deliberately simple, vLLM-style FCFS):
+
+* **Admission**: a pending request is admitted when a slot is free AND the
+  pool can cover the pages for its context plus the first decoded token
+  (so an admitted request can always produce at least one token without
+  stalling).
+* **Decode paging**: when a slot's next token starts a new group, one page
+  is allocated on demand. If the pool is empty the slot *stalls* — it is
+  simply excluded from the step's active mask and retried next step. If
+  *every* active slot stalls, the engine recompute-preempts the most
+  recently admitted request (free its pages, requeue, prefill the full
+  context on re-admission) so the rest make progress.
+* **Reclamation**: EOS / length-limit completion frees the slot and all of
+  its pages immediately.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from repro.core.cache_layout import PageAllocator, PagedLayout
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request (host-side bookkeeping)."""
+
+    rid: int
+    prompt: np.ndarray                  # (Tp,) int32
+    max_new_tokens: int = 32
+    arrival_time: float = 0.0           # engine-clock seconds
+
+    # filled in by the engine
+    out_tokens: list = dataclasses.field(default_factory=list)
+    slot: int = -1
+    preemptions: int = 0
+    t_admitted: Optional[float] = None
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+    @property
+    def context_len(self) -> int:
+        """Tokens the cache must hold at (re-)admission: the prompt plus
+        everything already generated (recompute-preemption resumes by
+        prefilling the whole context)."""
+        return self.prompt_len + len(self.out_tokens)
+
+    @property
+    def done_tokens(self) -> int:
+        return len(self.out_tokens)
+
+    def latency(self) -> float:
+        return (self.t_done or 0.0) - self.arrival_time
+
+
+class Scheduler:
+    """Slot + page bookkeeping for one engine."""
+
+    def __init__(self, layout: PagedLayout):
+        self.layout = layout
+        self.alloc = PageAllocator(layout)
+        self.free_slots: deque[int] = deque(range(layout.slots))
+        self.active: dict[int, Request] = {}       # slot -> request
+        self.pending: deque[Request] = deque()
+
+    # --- admission -------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+
+    def admissible(self) -> Optional[Request]:
+        """Next pending request that fits right now (FCFS — head only, to
+        keep arrival-order fairness)."""
+        if not self.pending or not self.free_slots:
+            return None
+        req = self.pending[0]
+        # pages for the context plus the first decode append: a new page is
+        # only needed when the context ends exactly at a page boundary
+        need = self.layout.pages_for(req.context_len + 1)
+        if need > self.layout.pages_per_slot:
+            raise ValueError(
+                f"request {req.rid}: context {req.context_len} needs {need} "
+                f"pages > pages_per_slot {self.layout.pages_per_slot}")
+        if not self.alloc.can_alloc(need):
+            return None
+        return req
+
+    def admit(self, req: Request) -> int:
+        """Assign a slot + pages for context and first decode token.
+        Caller runs the prefill."""
+        assert self.pending and self.pending[0] is req
+        self.pending.popleft()
+        slot = self.free_slots.popleft()
+        ok = self.alloc.alloc(slot, self.layout.pages_for(req.context_len + 1))
+        assert ok, "admissible() guaranteed capacity"
+        req.slot = slot
+        self.active[slot] = req
+        return slot
+
+    # --- decode-step paging ----------------------------------------------
+
+    def ensure_pages(self, lengths: np.ndarray) -> list[int]:
+        """Allocate next-group pages for slots about to cross a page
+        boundary; returns slots that must stall this step (pool empty).
+
+        ``lengths``: (slots,) current per-slot token counts — the next
+        append writes at ``lengths[slot]``.
+        """
+        g = self.layout.page_size
+        stalled = []
+        for slot in self.active:
+            pos = int(lengths[slot])
+            need_page = pos // g
+            if pos % g == 0 and self.alloc.slot_pages(slot) <= need_page:
+                if not self.alloc.alloc(slot, 1):
+                    stalled.append(slot)
+        return stalled
+
+    # --- completion ------------------------------------------------------
+
+    def finish(self, slot: int) -> Request:
+        req = self.active.pop(slot)
+        self.alloc.free_slot(slot)
+        self.free_slots.append(slot)
+        req.slot = -1
+        return req
+
+    def preempt(self, slot: int) -> Request:
+        """Recompute-preemption: free the slot and its pages, requeue the
+        request at the head of the pending queue. The engine drops the
+        latest un-appended token first, so resuming == prefilling
+        ``prompt + out_tokens`` and re-sampling from there. The cache
+        rebuilds bit-identically (streaming-parity invariant), but the
+        resumed token is sampled from fp *prefill* logits rather than
+        quantized-cache *decode* logits, so a resumed greedy sequence may
+        diverge from an uninterrupted run at exactly the resume point —
+        the same numeric boundary every request crosses after its initial
+        prefill."""
+        req = self.finish(slot)
+        req.preemptions += 1
+        self.pending.appendleft(req)
+        return req
+
+    # --- introspection ---------------------------------------------------
+
+    @property
+    def num_active(self) -> int:
+        return len(self.active)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.active or self.pending)
+
+    def utilization(self) -> float:
+        return self.alloc.utilization()

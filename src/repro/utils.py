@@ -37,6 +37,15 @@ def round_up(a: int, b: int) -> int:
     return cdiv(a, b) * b
 
 
+def pow2_bucket(n: int, multiple: int) -> int:
+    """Smallest power-of-two multiple of ``multiple`` that is >= n.
+    Static-shape buckets: one jit per bucket instead of one per length."""
+    b = multiple
+    while b < n:
+        b *= 2
+    return b
+
+
 def tree_bytes(tree: Any) -> int:
     """Total bytes of all arrays (or ShapeDtypeStructs) in a pytree."""
     leaves = jax.tree_util.tree_leaves(tree)

@@ -1,0 +1,46 @@
+"""Optional-hypothesis shim (satellite of the serving PR).
+
+The property tests use hypothesis when it is installed (the ``test`` extra
+in pyproject.toml), but the tier-1 suite must collect and run without it.
+``pytest.importorskip`` at module level would skip the *whole* file —
+including the plain pytest tests — so instead this shim exposes the real
+hypothesis API when available and no-op decorators that mark only the
+property tests as skipped otherwise.
+
+Usage in a test module::
+
+    from hyp_compat import given, settings, st
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised when extra not installed
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def skipped():
+                pass  # property test body requires hypothesis
+
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _Strategy:
+        """Stands in for any strategy object/factory at decoration time."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return _Strategy()
+
+    st = _Strategy()

@@ -64,8 +64,8 @@ def test_elastic_restore_across_shardings(tmp_path):
     offset-keyed shard format is the same code path the 512-way dry-run
     meshes use; per-shard offsets are exercised in the multi-process branch
     of save_checkpoint."""
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
     sharding = jax.NamedSharding(mesh, jax.sharding.PartitionSpec("data"))
     t = {"w": jax.device_put(jnp.arange(32, dtype=jnp.float32), sharding)}
     save_checkpoint(str(tmp_path), 5, t)

@@ -13,8 +13,8 @@ SCRIPT = textwrap.dedent("""
     import jax, jax.numpy as jnp, numpy as np
     from repro.distributed.collectives import ef_allreduce_mean
 
-    mesh = jax.make_mesh((4,), ("dp",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((4,), ("dp",))
     key = jax.random.PRNGKey(0)
     true_acc = np.zeros((64,), np.float32)
     comp_acc = np.zeros((64,), np.float32)

@@ -44,8 +44,8 @@ SCRIPT = textwrap.dedent("""
     from repro.train.train_step import StepConfig
     from repro.configs.base import ShapeConfig
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     shapes = [ShapeConfig("train_4k", 256, 8, "train"),
               ShapeConfig("decode_32k", 512, 8, "decode")]
     for so in shapes:

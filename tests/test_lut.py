@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hyp_compat import given, settings, st
 
 from repro.core.lut import build_angle_table, dequant_qk_scores, lut_qk_scores
 from repro.core.quantizers import QuantConfig, encode_polar_keys

@@ -62,8 +62,12 @@ def test_decode_matches_forward(arch):
     logits (quant='none' isolates the decode-path plumbing)."""
     import dataclasses
     cfg = reduce_for_smoke(get_config(arch))
+    # capacity drops differ between bulk prefill (T tokens compete) and
+    # step decode (1 token, never drops) — that's routing policy, not a
+    # plumbing bug; drop-free capacity isolates the plumbing under test.
     cfg = dataclasses.replace(
-        cfg, quant=dataclasses.replace(cfg.quant, method="none"))
+        cfg, quant=dataclasses.replace(cfg.quant, method="none"),
+        capacity_factor=float(max(cfg.num_experts, 1)))
     m = get_model(cfg)
     key = jax.random.PRNGKey(1)
     params = m.init(key)

@@ -1,0 +1,144 @@
+"""Paged cache: dense-layout parity, page-allocator reuse, masked writes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    QuantConfig, append, decode_attention, init_cache, prefill,
+)
+from repro.core import paged_cache as pg
+from repro.core.cache_layout import LinearLayout, PagedLayout, PageAllocator
+
+B, H, d, g = 1, 2, 32, 16
+LAYOUT = PagedLayout(page_size=g, num_pages=20, slots=4, pages_per_slot=8)
+
+
+def _tokens(seed, t):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return (jax.random.normal(k1, (B, H, t, d)),
+            jax.random.normal(k2, (B, H, t, d)))
+
+
+def _fill_pair(cfg, tp, tdec, slot=2, bucket=48, seed=0):
+    """Same token stream into a dense linear cache and a paged slot."""
+    t = tp + tdec
+    k, v = _tokens(seed, t)
+    cap = LAYOUT.pages_per_slot * g
+
+    dense = prefill(init_cache(cfg, B, H, d, cap, layout=LinearLayout(cap)),
+                    k[:, :, :tp], v[:, :, :tp])
+    for i in range(tp, t):
+        dense = append(dense, k[:, :, i : i + 1], v[:, :, i : i + 1])
+
+    alloc = PageAllocator(LAYOUT)
+    assert alloc.alloc(slot, LAYOUT.pages_for(tp))
+    paged = pg.init_paged_cache(cfg, LAYOUT, H, d)
+    kp = jnp.pad(k[:, :, :tp], ((0, 0), (0, 0), (0, bucket - tp), (0, 0)))
+    vp = jnp.pad(v[:, :, :tp], ((0, 0), (0, 0), (0, bucket - tp), (0, 0)))
+    paged = pg.paged_prefill(paged, jnp.asarray(slot), alloc.table()[slot],
+                             kp, vp, jnp.asarray(tp))
+    ap = jax.jit(pg.paged_append)
+    for i in range(tp, t):
+        ln = int(paged.lengths[slot])
+        if ln % g == 0 and alloc.slot_pages(slot) <= ln // g:
+            assert alloc.alloc(slot, 1)
+        s = LAYOUT.slots
+        kn = jnp.zeros((s, H, 1, d)).at[slot].set(k[0, :, i : i + 1])
+        vn = jnp.zeros((s, H, 1, d)).at[slot].set(v[0, :, i : i + 1])
+        active = jnp.zeros((s,), bool).at[slot].set(True)
+        paged = ap(paged, kn, vn, alloc.table(), active)
+    return dense, paged, alloc, slot, k, v
+
+
+@pytest.mark.parametrize("method,value_bits", [
+    ("polar", 0), ("polar", 4), ("kivi", 0), ("zipcache", 0),
+    ("int", 0), ("none", 0),
+])
+def test_paged_matches_dense(method, value_bits):
+    """Prefill + appends crossing a page boundary: bit-identical codes and
+    matching decode attention between the dense and paged layouts."""
+    cfg = QuantConfig(method=method, group_size=g, key_bits=4,
+                      value_bits=value_bits)
+    # prompt 38 = 2 full groups + 6 residual; 13 appends cross slot 48
+    dense, paged, alloc, slot, _, _ = _fill_pair(cfg, 38, 13)
+
+    view = pg.gather_view(paged, alloc.table())
+    if method in ("polar", "kivi", "zipcache"):
+        nfull = int(dense.length) // g
+        np.testing.assert_array_equal(
+            np.asarray(dense.key_codes)[0, :, :nfull],
+            np.asarray(view.key_codes)[slot, :, :nfull])
+
+    q = jax.random.normal(jax.random.PRNGKey(9), (B, H * 2, d))
+    qs = jnp.zeros((LAYOUT.slots, H * 2, d)).at[slot].set(q[0])
+    o_dense = decode_attention(dense, q)
+    o_paged = pg.paged_decode_attention(paged, qs, alloc.table(),
+                                        backend="jnp")
+    np.testing.assert_allclose(np.asarray(o_dense[0]),
+                               np.asarray(o_paged[slot]),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_paged_prefill_exact_group_multiple():
+    """rem == 0 prefill (empty residual) then appends starting a new group."""
+    cfg = QuantConfig(method="polar", group_size=g)
+    dense, paged, alloc, slot, _, _ = _fill_pair(cfg, 32, 5, bucket=32)
+    q = jax.random.normal(jax.random.PRNGKey(3), (B, H * 2, d))
+    qs = jnp.zeros((LAYOUT.slots, H * 2, d)).at[slot].set(q[0])
+    o_dense = decode_attention(dense, q)
+    o_paged = pg.paged_decode_attention(paged, qs, alloc.table(),
+                                        backend="jnp")
+    np.testing.assert_allclose(np.asarray(o_dense[0]),
+                               np.asarray(o_paged[slot]),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_append_leaves_inactive_slots_untouched():
+    """A fully-masked append may only dirty the scratch page: every real
+    pool page, the residuals, and the lengths are bit-unchanged."""
+    cfg = QuantConfig(method="polar", group_size=g)
+    _, paged, alloc, slot, _, _ = _fill_pair(cfg, 38, 3)
+    s = LAYOUT.slots
+    kn = jax.random.normal(jax.random.PRNGKey(0), (s, H, 1, d))
+    out = pg.paged_append(paged, kn, kn, alloc.table(),
+                          jnp.zeros((s,), bool))
+
+    def real(x):  # strip the scratch page from pool buffers
+        return x[: LAYOUT.num_pages] if x.shape[0] == LAYOUT.pool_pages else x
+
+    before = jax.tree_util.tree_leaves(paged)
+    after = jax.tree_util.tree_leaves(out)
+    for a, b in zip(before, after):
+        np.testing.assert_array_equal(np.asarray(real(a)),
+                                      np.asarray(real(b)))
+
+
+def test_page_allocator_reuse_after_free():
+    """Freed pages go back to the pool and get handed to new requests."""
+    lay = PagedLayout(page_size=16, num_pages=6, slots=3, pages_per_slot=4)
+    alloc = PageAllocator(lay)
+    assert alloc.alloc(0, 3)
+    pages0 = set(alloc.table_np()[0, :3].tolist())
+    assert alloc.alloc(1, 2)
+    assert alloc.used_pages == 5 and alloc.free_pages == 1
+    # all-or-nothing: 2 pages requested, 1 free
+    assert not alloc.alloc(2, 2)
+    assert alloc.used_pages == 5
+
+    assert alloc.free_slot(0) == 3
+    assert (alloc.table_np()[0] == lay.scratch_page).all()
+    assert alloc.free_pages == 4
+
+    assert alloc.alloc(2, 4)
+    pages2 = set(alloc.table_np()[2].tolist())
+    assert pages0 < pages2  # recycled pages reappear in the new request
+    assert alloc.utilization() == 1.0
+
+
+def test_allocator_respects_pages_per_slot():
+    lay = PagedLayout(page_size=16, num_pages=16, slots=2, pages_per_slot=3)
+    alloc = PageAllocator(lay)
+    assert alloc.alloc(0, 3)
+    assert not alloc.alloc(0, 1)   # row full even though the pool isn't
+    assert alloc.free_pages == 13
