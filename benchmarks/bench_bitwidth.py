@@ -1,12 +1,17 @@
-"""Table 6 analog: asymmetric (r, t) bitwidth allocation ablation."""
+"""Table 6 analog: asymmetric (r, t) bitwidth allocation ablation, plus a
+per-layer mixed-policy sweep (KVTuner-style): uniform polar vs
+int8-on-the-first-k-layers mixes, printed as an accuracy-vs-avg-bits
+frontier."""
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import attention_output_error, emit, rope_structured_keys
-from repro.core.quantizers import (QuantConfig, decode_polar_keys,
-                                   encode_polar_keys)
+from repro.core import CachePolicy
+from repro.core.quantizers import (QuantConfig, decode_keys, encode_keys)
 
 
 def run() -> None:
@@ -18,7 +23,7 @@ def run() -> None:
     for r, tb in [(5, 3), (4, 4), (3, 5), (4, 2), (3, 3), (2, 4)]:
         cfg = QuantConfig(method="polar", rho_bits=r, theta_bits=tb,
                           group_size=128)
-        kt = decode_polar_keys(encode_polar_keys(k, cfg))
+        kt = decode_keys(encode_keys(k, cfg))
         rec = float(jnp.linalg.norm(k - kt) / jnp.linalg.norm(k))
         att = attention_output_error(q, k, kt, v)
         emit(f"bitwidth/r{r}t{tb}", 0.0,
@@ -27,12 +32,69 @@ def run() -> None:
     # theta stats (saves 16/g bits/element of overhead) at some error cost
     cfg = QuantConfig(method="polar", rho_bits=4, theta_bits=4,
                       group_size=128, theta_stats="fixed")
-    kt = decode_polar_keys(encode_polar_keys(k, cfg))
+    kt = decode_keys(encode_keys(k, cfg))
     rec = float(jnp.linalg.norm(k - kt) / jnp.linalg.norm(k))
     att = attention_output_error(q, k, kt, v)
     emit("bitwidth/r4t4_fixed_theta", 0.0,
          f"bits=4.0;rec_rel={rec:.4f};attn_rel={att:.4f}")
 
 
+def run_mixed_policies(num_layers: int = 8) -> None:
+    """Accuracy-vs-avg-bits frontier over per-layer CachePolicy mixes.
+
+    Each layer gets its own key distribution (layer-seeded synthetic keys);
+    a policy's "accuracy" proxy is the mean attention-output error across
+    layers under that layer's QuantConfig, and its cost is
+    ``CachePolicy.avg_key_bits`` — the same accounting the serving path
+    reports. Mixes: uniform polar at several (r, t), uniform int8, and
+    int8 on the first k layers (the KVTuner observation that early layers
+    are the sensitive ones) with polar 4+4 on the rest.
+    """
+    b, h, t, d = 2, 4, 1024, 128
+    int8 = QuantConfig(method="int", key_bits=8, group_size=128)
+    polar44 = QuantConfig(method="polar", rho_bits=4, theta_bits=4,
+                          group_size=128)
+    policies: list[tuple[str, CachePolicy]] = [
+        ("uniform_polar33", CachePolicy.uniform(
+            dataclasses.replace(polar44, rho_bits=3, theta_bits=3))),
+        ("uniform_polar44", CachePolicy.uniform(polar44)),
+        ("uniform_polar53", CachePolicy.uniform(
+            dataclasses.replace(polar44, rho_bits=5, theta_bits=3))),
+        ("uniform_int8", CachePolicy.uniform(int8)),
+    ]
+    for kk in (1, 2, 4):
+        policies.append((f"int8_first{kk}_polar44",
+                         CachePolicy.first_k(kk, int8, polar44)))
+
+    # per-layer synthetic keys/queries (distinct outlier structure per layer)
+    layers = []
+    for i in range(num_layers):
+        kl = rope_structured_keys(jax.random.PRNGKey(100 + i), b, h, t, d)
+        ql = jax.random.normal(jax.random.PRNGKey(200 + i), (b, h, 8, d))
+        vl = jax.random.normal(jax.random.PRNGKey(300 + i), (b, h, t, d))
+        layers.append((kl, ql, vl))
+
+    err_cache: dict[tuple, float] = {}
+
+    def layer_err(i: int, qc: QuantConfig) -> float:
+        ck = (i, qc)
+        if ck not in err_cache:
+            kl, ql, vl = layers[i]
+            kt = decode_keys(encode_keys(kl, qc))
+            err_cache[ck] = attention_output_error(ql, kl, kt, vl)
+        return err_cache[ck]
+
+    frontier = []
+    for name, pol in policies:
+        bits = pol.avg_key_bits(num_layers, d)
+        err = sum(layer_err(i, pol.layer_config(i))
+                  for i in range(num_layers)) / num_layers
+        frontier.append((bits, err, name))
+    for bits, err, name in sorted(frontier):
+        emit(f"bitwidth/mixed/{name}", 0.0,
+             f"avg_bits={bits:.3f};attn_rel={err:.4f}")
+
+
 if __name__ == "__main__":
     run()
+    run_mixed_policies()

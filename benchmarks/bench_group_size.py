@@ -22,7 +22,7 @@ def run() -> None:
             rec = float(jnp.linalg.norm(k - kt) / jnp.linalg.norm(k))
             att = attention_output_error(q, k, kt, v)
             emit(f"group_size/{method}/g{g}", 0.0,
-                 f"bits={cfg.key_bits_per_element:.2f};rec_rel={rec:.4f};"
+                 f"bits={cfg.key_bits_per_element(d):.2f};rec_rel={rec:.4f};"
                  f"attn_rel={att:.4f}")
 
 

@@ -60,7 +60,8 @@ def run_static(model, params, requests: list[Request], slots: int,
     simulated clock. Batches are padded to (slots, bucket) so the engine
     compiles once per prompt bucket."""
     eng = ServeEngine(model, params, max_len=max_len)
-    g = model.cfg.quant.group_size
+    # dense caches allow mixed per-layer group sizes; bucket to the largest
+    g = model.cfg.policy.max_group_size()
     queue = sorted(requests, key=lambda r: r.arrival_time)
     buckets = sorted({_bucket(r.prompt_len, g) for r in queue})
 

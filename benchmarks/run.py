@@ -27,6 +27,7 @@ def main() -> None:
         ("throughput(T4)", bench_throughput.run),
         ("group_size(T5)", bench_group_size.run),
         ("bitwidth(T6)", bench_bitwidth.run),
+        ("bitwidth_mixed(KVTuner)", bench_bitwidth.run_mixed_policies),
         ("kv_sensitivity(T7/T9)", bench_kv_sensitivity.run),
         ("eviction(T8)", bench_eviction_compat.run),
         ("roofline(dryrun)", roofline.run),

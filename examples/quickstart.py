@@ -30,7 +30,7 @@ def main():
     pk = encode_polar_keys(k, cfg)
     k_tilde = decode_polar_keys(pk)
     rel = jnp.linalg.norm(k - k_tilde) / jnp.linalg.norm(k)
-    print(f"[1] key reconstruction, {cfg.key_bits_per_element:.2f} bits/elem: "
+    print(f"[1] key reconstruction, {cfg.key_bits_per_element(d):.2f} bits/elem: "
           f"rel err {float(rel):.4f}")
     print(f"    codes: {pk.codes.shape} {pk.codes.dtype} = "
           f"{pk.codes.nbytes * 8 / (T * d * Hkv * B):.1f} bits/elem payload "

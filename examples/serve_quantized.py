@@ -1,8 +1,10 @@
-"""Serve a model with batched requests over the PolarQuant KV cache.
+"""Serve a model with batched requests over pluggable KV-cache codecs.
 
 Trains briefly (so generations are non-trivial), then serves batched
-prompts comparing cache policies: fp16, KIVI-4, PolarQuant_44 (+2-bit
-values) — the paper's Table 4 setting in miniature.
+prompts comparing cache policies through the KeyCodec/CachePolicy API:
+fp16, KIVI-4, PolarQuant_44 (+2-bit values) — the paper's Table 4 setting
+in miniature — plus a KVTuner-style *mixed* per-layer policy (int8 on the
+first layer, polar 4+4 elsewhere) with per-layer cache bytes.
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -13,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, reduce_for_smoke
+from repro.core import CachePolicy
 from repro.data import SyntheticLMDataset
 from repro.models import get_model
 from repro.serve import GenerationConfig, ServeEngine
@@ -34,23 +37,40 @@ def main():
         state, metrics = step(state, batch)
     print(f"trained 120 steps, loss {float(metrics['loss']):.3f}")
 
+    q = cfg.quant
+    int8 = dataclasses.replace(q, method="int", key_bits=8)
+    polar44 = dataclasses.replace(q, method="polar", rho_bits=4, theta_bits=4)
+    policies = [
+        ("fp16", CachePolicy.uniform(dataclasses.replace(q, method="none"))),
+        ("kivi4", CachePolicy.uniform(
+            dataclasses.replace(q, method="kivi", key_bits=4))),
+        ("polar44", CachePolicy.uniform(polar44)),
+        ("polar44+v2", CachePolicy.uniform(
+            dataclasses.replace(polar44, value_bits=2))),
+        # KVTuner-style mix: the sensitive first layer at int8, rest polar
+        ("int8x1+polar44", CachePolicy.first_k(1, int8, polar44)),
+    ]
+
     prompts = {"tokens": np.asarray(ds.local_batch_np(777)["tokens"])[:8, :64]}
     rows = []
-    for name, method, vbits in [("fp16", "none", 0), ("kivi4", "kivi", 0),
-                                ("polar44", "polar", 0),
-                                ("polar44+v2", "polar", 2)]:
-        qc = dataclasses.replace(cfg.quant, method=method, value_bits=vbits)
-        eng = ServeEngine(get_model(dataclasses.replace(cfg, quant=qc)),
-                          state.params, max_len=256)
+    for name, policy in policies:
+        eng = ServeEngine(get_model(dataclasses.replace(
+            cfg, cache_policy=policy)), state.params, max_len=256)
         out = eng.generate(prompts, GenerationConfig(max_new_tokens=24))
         rows.append((name, out))
-        print(f"{name:12s} {out['tokens_per_s']:8.1f} tok/s  "
+        bits = policy.avg_key_bits(cfg.num_layers, cfg.head_dim)
+        print(f"{name:16s} {out['tokens_per_s']:8.1f} tok/s  "
               f"cache {out['cache_bytes'] / 2**20:6.2f} MiB  "
+              f"avg {bits:.2f} key-bits/elem  "
               f"first-gen {out['tokens'][0][:10].tolist()}")
     fp = rows[0][1]["tokens"]
     for name, out in rows[1:]:
         agree = (out["tokens"] == fp).mean()
-        print(f"{name:12s} token agreement vs fp16: {agree * 100:.1f}%")
+        print(f"{name:16s} token agreement vs fp16: {agree * 100:.1f}%")
+    mixed = rows[-1][1]
+    per_layer = [f"{b / 2**20:.2f}" for b in mixed["cache_bytes_per_layer"]]
+    print(f"mixed policy per-layer cache MiB: {per_layer} "
+          "(layer 0 = int8, layers 1-3 = polar 4+4)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Guard the KeyCodec registry as the single quantization-method dispatch
+# point: fail on any new string dispatch over QuantConfig.method (`x.method
+# ==`, `x.method in (...)`, `x.method != ...`) in library code outside
+# core/codecs.py. Cache/model code must branch on codec capabilities
+# (codec.grouped, codec.quantizes, codec.supports_fused_decode) or call
+# codec methods instead.
+set -u
+cd "$(dirname "$0")/.."
+
+matches=$(grep -rnE '\.method *(==|!=| in )' src/repro --include='*.py' \
+    | grep -v 'src/repro/core/codecs.py' || true)
+
+if [ -n "$matches" ]; then
+    echo "ERROR: string dispatch on the quantization method outside" >&2
+    echo "src/repro/core/codecs.py — route through the codec registry:" >&2
+    echo "$matches" >&2
+    exit 1
+fi
+echo "codec dispatch check OK (registry is the single dispatch point)"

@@ -10,6 +10,7 @@ import dataclasses
 from dataclasses import dataclass, field, replace
 from typing import Optional
 
+from repro.core.codecs import CachePolicy
 from repro.core.quantizers import QuantConfig
 
 
@@ -58,7 +59,11 @@ class ModelConfig:
     lru_width: int = 0
     conv1d_width: int = 4
     # --- cache policy ---
+    # `quant` is the uniform default; `cache_policy` (optional) maps layer
+    # index -> QuantConfig for KVTuner-style mixed precision. Read via the
+    # `policy` property, which falls back to a uniform policy over `quant`.
     quant: QuantConfig = field(default_factory=QuantConfig)
+    cache_policy: Optional[CachePolicy] = None
     # decode-attention backend: "jnp" = pure-jnp masked softmax over the
     # cache; "ref"|"interpret"|"pallas" route the polar policy through the
     # fused LUT flash-decode kernel (kernels.ops.polar_decode_attention_full)
@@ -67,6 +72,14 @@ class ModelConfig:
     def __post_init__(self):
         if self.head_dim == 0 and self.num_heads > 0:
             object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    @property
+    def policy(self) -> CachePolicy:
+        """The resolved per-layer cache policy (uniform over ``quant``
+        unless ``cache_policy`` is set)."""
+        if self.cache_policy is not None:
+            return self.cache_policy
+        return CachePolicy(default=self.quant)
 
     @property
     def q_per_kv(self) -> int:
@@ -177,6 +190,9 @@ def reduce_for_smoke(cfg: ModelConfig, **overrides) -> ModelConfig:
         small.update(window=64, lru_width=128,
                      num_layers=len(cfg.block_pattern) + 1)
     small["quant"] = replace(cfg.quant, group_size=32)
+    if cfg.cache_policy is not None:
+        small["cache_policy"] = cfg.cache_policy.map(
+            lambda q: replace(q, group_size=32))
     small.update(overrides)
     return replace(cfg, name=cfg.name + "-smoke", **small)
 

@@ -1,8 +1,13 @@
-"""PolarQuant core: polar transform, quantizers, quantized KV cache, LUT decode."""
+"""PolarQuant core: polar transform, quantizers, codec registry, quantized
+KV cache, LUT decode."""
 from repro.core.quantizers import (  # noqa: F401
     QuantConfig, PolarKeys, ChannelKeys, TokenKeys, ZipKeys, QuantizedValues,
     encode_keys, decode_keys, encode_polar_keys, decode_polar_keys,
     encode_values, decode_values,
+)
+from repro.core.codecs import (  # noqa: F401
+    CachePolicy, CodecKeys, KeyCodec, get_codec, register_codec,
+    registered_codecs,
 )
 from repro.core.kv_cache import (  # noqa: F401
     KVCache, init_cache, append, prefill, decode_attention,

@@ -1,0 +1,474 @@
+"""KeyCodec registry + per-layer CachePolicy: the single dispatch point for
+key-cache quantization methods.
+
+A :class:`KeyCodec` owns everything method-specific about cached keys:
+
+=====================  ======================================================
+Responsibility          Codec method
+=====================  ======================================================
+buffer allocation       :meth:`KeyCodec.init_buffers` (codes + scale dict)
+encode                  :meth:`KeyCodec.encode`  -> ``(codes, scales)``
+decode                  :meth:`KeyCodec.decode`  -> fp keys ``(..., T, d)``
+score path              :meth:`KeyCodec.scores` (LUT for polar, dequant
+                        matmul otherwise)
+bits accounting         :meth:`KeyCodec.bits_per_element` (payload + stats
+                        overhead at the *actual* head_dim)
+fused decode kernel     :meth:`KeyCodec.fused_decode` where
+                        ``supports_fused_decode`` is True
+=====================  ======================================================
+
+The cache layers (``kv_cache.py`` dense/ring, ``paged_cache.py`` pools) own
+only the method-agnostic machinery: token/group placement, the fp residual
+buffer for grouped codecs, value quantization, masks and softmax. They
+branch on two structural codec *capabilities* (``grouped``, ``quantizes``) —
+never on method names; ``scripts/check_codec_dispatch.sh`` enforces that
+this module stays the only string dispatch point.
+
+Buffer-layout contract (``lead`` is the cache's leading dims, e.g. ``(B, H)``
+for dense caches or ``(PP, H)`` for page pools):
+
+* grouped codecs (``grouped = True``): tokens are quantized ``group_size``
+  at a time; ``codes`` is ``(*lead, G, g, ·)`` and every scale array is
+  ``(*lead, G, 1|g, ·)``. The cache owns an fp residual for the trailing
+  partial group.
+* token-wise codecs (``grouped = False``): ``codes`` is ``(*lead, T, ·)``
+  and every scale array is ``(*lead, T, ·)``; each token encodes
+  independently (appends never re-encode old tokens).
+* the fp passthrough ("none") is a token-wise codec whose "codes" buffer
+  simply stores keys in the model dtype with an empty scale dict.
+
+Third-party codecs subclass :class:`KeyCodec` and call
+:func:`register_codec`; ``QuantConfig(method=<name>)`` then works through
+``make_cache`` / paged serving / benchmarks with no further changes.
+
+:class:`CachePolicy` maps layer index -> :class:`QuantConfig` so a model
+can run e.g. its most sensitive layers at int8 and the rest at polar 4+4
+(KVTuner-style mixed precision). Contiguous layers sharing a config form a
+*segment*; model code scans each segment's layers with one stacked cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizers as qz
+from repro.core.quantizers import QuantConfig
+from repro.utils import pytree_dataclass, static_field
+
+Array = jax.Array
+
+
+@pytree_dataclass
+class CodecKeys:
+    """Generic quantized-keys container: raw codec buffers + their config.
+
+    The default :meth:`KeyCodec.container` wraps ``(codes, scales)`` in
+    this, so third-party codecs work through the generic
+    ``quantizers.encode_keys`` / ``decode_keys`` entry points (and every
+    benchmark built on them) without defining a bespoke container pytree.
+    Built-in codecs keep their legacy containers (PolarKeys & co.).
+    """
+
+    codes: Array
+    scales: dict
+    cfg: QuantConfig = static_field(default=None)
+
+    def decode(self, dtype=jnp.float32) -> Array:
+        return self.cfg.codec.decode(self.cfg, self.codes, self.scales,
+                                     dtype)
+
+
+# ---------------------------------------------------------------------------
+# Codec protocol
+# ---------------------------------------------------------------------------
+
+
+class KeyCodec:
+    """Base class for key-cache codecs. Subclasses are stateless singletons
+    (all per-run parameters live in :class:`QuantConfig`)."""
+
+    name: str = ""
+    grouped: bool = False            # codes carry (G, g) axes + fp residual
+    quantizes: bool = True           # False => fp passthrough
+    supports_fused_decode: bool = False
+
+    # -- accounting ---------------------------------------------------------
+
+    def bits_per_element(self, cfg: QuantConfig, head_dim: int) -> float:
+        """Logical key bits/element including quantization-stat overhead."""
+        raise NotImplementedError
+
+    # -- allocation ---------------------------------------------------------
+
+    def init_buffers(self, cfg: QuantConfig, lead: tuple[int, ...],
+                     tokens: int, head_dim: int, dtype
+                     ) -> tuple[Array, dict[str, Array]]:
+        """Zero-filled ``(codes, scales)`` buffers for ``tokens`` tokens.
+
+        ``dtype`` is the model compute dtype (quantized codecs ignore it
+        and use uint8 codes + ``cfg.scale_dtype`` stats)."""
+        raise NotImplementedError
+
+    # -- transform ----------------------------------------------------------
+
+    def encode(self, cfg: QuantConfig, k: Array
+               ) -> tuple[Array, dict[str, Array]]:
+        """Quantize post-RoPE keys ``(*lead, T, d)`` -> ``(codes, scales)``
+        following the buffer-layout contract (grouped codecs require
+        ``T % cfg.group_size == 0``)."""
+        raise NotImplementedError
+
+    def decode(self, cfg: QuantConfig, codes: Array,
+               scales: dict[str, Array], dtype=jnp.float32) -> Array:
+        """Dequantize buffers back to Cartesian keys ``(*lead, T, d)``."""
+        raise NotImplementedError
+
+    def container(self, cfg: QuantConfig, codes: Array,
+                  scales: dict[str, Array]):
+        """Rebuild the quantized-keys pytree from raw cache buffers.
+
+        Built-in codecs return their method-specific
+        ``repro.core.quantizers`` container; the default wraps the raw
+        buffers in :class:`CodecKeys`, which is all ``decode_keys`` needs."""
+        return CodecKeys(codes=codes, scales=scales, cfg=cfg)
+
+    # -- score path ---------------------------------------------------------
+
+    def scores(self, cfg: QuantConfig, q: Array, codes: Array,
+               scales: dict[str, Array], *, use_lut: bool = True) -> Array:
+        """``q . K~`` for every cached token.
+
+        q: ``(*lead, Qh, d)``; returns ``(*lead, Qh, T)`` fp32. The default
+        is dequantize-then-matmul; codecs with a structured decode (polar's
+        angle LUT) override this."""
+        k_tilde = self.decode(cfg, codes, scales)
+        return jnp.einsum("...qd,...td->...qt", q.astype(jnp.float32),
+                          k_tilde)
+
+    # -- fused decode kernel (optional capability) --------------------------
+
+    def fused_decode(self, cache, q: Array, *, scale: Optional[float],
+                     backend: str) -> Array:
+        raise NotImplementedError(
+            f"codec {self.name!r} has no fused decode kernel")
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_CODECS: dict[str, KeyCodec] = {}
+
+
+def register_codec(codec: KeyCodec, *, overwrite: bool = False) -> KeyCodec:
+    """Register ``codec`` under ``codec.name``. Returns the codec so the
+    call composes as a decorator-style one-liner."""
+    if not codec.name:
+        raise ValueError("codec must set a non-empty .name")
+    if codec.name in _CODECS and not overwrite:
+        raise ValueError(f"codec {codec.name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    _CODECS[codec.name] = codec
+    return codec
+
+
+def get_codec(name: str) -> KeyCodec:
+    try:
+        return _CODECS[name]
+    except KeyError:
+        raise KeyError(f"unknown key codec {name!r}; registered: "
+                       f"{sorted(_CODECS)}") from None
+
+
+def registered_codecs() -> dict[str, KeyCodec]:
+    """Snapshot of the registry (name -> codec)."""
+    return dict(_CODECS)
+
+
+# ---------------------------------------------------------------------------
+# Built-in codecs
+# ---------------------------------------------------------------------------
+
+
+class NoneCodec(KeyCodec):
+    """fp passthrough: keys stored unquantized in the model dtype."""
+
+    name = "none"
+    quantizes = False
+
+    def bits_per_element(self, cfg, head_dim):
+        return 16.0
+
+    def init_buffers(self, cfg, lead, tokens, head_dim, dtype):
+        return jnp.zeros((*lead, tokens, head_dim), dtype), {}
+
+    def encode(self, cfg, k):
+        return k, {}
+
+    def decode(self, cfg, codes, scales, dtype=jnp.float32):
+        return codes.astype(dtype)
+
+    def container(self, cfg, codes, scales):
+        return codes
+
+
+class IntCodec(KeyCodec):
+    """Int-N token-wise affine quantization (per-token z, s over d)."""
+
+    name = "int"
+
+    def bits_per_element(self, cfg, head_dim):
+        # per-token fp16 (z, s) amortized over the actual head_dim
+        return float(cfg.key_bits) + 32.0 / head_dim
+
+    def init_buffers(self, cfg, lead, tokens, head_dim, dtype):
+        sdt = jnp.dtype(cfg.scale_dtype)
+        return (jnp.zeros((*lead, tokens, head_dim), jnp.uint8),
+                {"scale": jnp.zeros((*lead, tokens, 1), sdt),
+                 "zero": jnp.zeros((*lead, tokens, 1), sdt)})
+
+    def encode(self, cfg, k):
+        tk = qz.encode_int_keys(k, cfg)
+        return tk.codes, {"scale": tk.scale, "zero": tk.zero}
+
+    def decode(self, cfg, codes, scales, dtype=jnp.float32):
+        return qz.decode_token_keys(self.container(cfg, codes, scales), dtype)
+
+    def container(self, cfg, codes, scales):
+        return qz.TokenKeys(codes=codes, bits=cfg.key_bits, **scales)
+
+
+class _GroupedCodec(KeyCodec):
+    grouped = True
+
+    def _gcount(self, cfg, tokens: int) -> int:
+        if tokens % cfg.group_size:
+            raise ValueError(f"token capacity {tokens} not a multiple of "
+                             f"group size {cfg.group_size}")
+        return tokens // cfg.group_size
+
+
+class KiviCodec(_GroupedCodec):
+    """KIVI channel-wise quantization over token groups."""
+
+    name = "kivi"
+
+    def bits_per_element(self, cfg, head_dim):
+        # per-channel fp16 (z, s) per group -> 32 bits / g tokens
+        return float(cfg.key_bits) + 32.0 / cfg.group_size
+
+    def init_buffers(self, cfg, lead, tokens, head_dim, dtype):
+        gc, g, d = self._gcount(cfg, tokens), cfg.group_size, head_dim
+        sdt = jnp.dtype(cfg.scale_dtype)
+        stat = lambda: jnp.zeros((*lead, gc, 1, d), sdt)
+        return (jnp.zeros((*lead, gc, g, d), jnp.uint8),
+                {"scale": stat(), "zero": stat()})
+
+    def encode(self, cfg, k):
+        ck = qz.encode_kivi_keys(k, cfg)
+        return ck.codes, {"scale": ck.scale, "zero": ck.zero}
+
+    def decode(self, cfg, codes, scales, dtype=jnp.float32):
+        return qz.decode_channel_keys(self.container(cfg, codes, scales),
+                                      dtype)
+
+    def container(self, cfg, codes, scales):
+        return qz.ChannelKeys(codes=codes, bits=cfg.key_bits, **scales)
+
+
+class ZipCacheCodec(_GroupedCodec):
+    """ZipCache channel-separable token-wise quantization."""
+
+    name = "zipcache"
+
+    def bits_per_element(self, cfg, head_dim):
+        # per-token fp16 (z, s) over d channels + fp16 channel_norm per group
+        return (float(cfg.key_bits) + 32.0 / head_dim
+                + 16.0 / cfg.group_size)
+
+    def init_buffers(self, cfg, lead, tokens, head_dim, dtype):
+        gc, g, d = self._gcount(cfg, tokens), cfg.group_size, head_dim
+        sdt = jnp.dtype(cfg.scale_dtype)
+        return (jnp.zeros((*lead, gc, g, d), jnp.uint8),
+                {"token_scale": jnp.zeros((*lead, gc, g, 1), sdt),
+                 "token_zero": jnp.zeros((*lead, gc, g, 1), sdt),
+                 "channel_norm": jnp.zeros((*lead, gc, 1, d), sdt)})
+
+    def encode(self, cfg, k):
+        zk = qz.encode_zipcache_keys(k, cfg)
+        return zk.codes, {"token_scale": zk.token_scale,
+                          "token_zero": zk.token_zero,
+                          "channel_norm": zk.channel_norm}
+
+    def decode(self, cfg, codes, scales, dtype=jnp.float32):
+        return qz.decode_zipcache_keys(self.container(cfg, codes, scales),
+                                       dtype)
+
+    def container(self, cfg, codes, scales):
+        return qz.ZipKeys(codes=codes, bits=cfg.key_bits, **scales)
+
+
+class PolarCodec(_GroupedCodec):
+    """PolarQuant radius/angle quantization with the LUT score path."""
+
+    name = "polar"
+    supports_fused_decode = True
+
+    def bits_per_element(self, cfg, head_dim):
+        payload = (cfg.rho_bits + cfg.theta_bits) / 2.0
+        # rho (z, s) [+ theta (z, s) unless the fixed grid is used]: fp16
+        # stats per channel pair per group over 2*g elements.
+        stats = 2 if cfg.theta_stats == "fixed" else 4
+        return payload + stats * 16.0 / (2.0 * cfg.group_size)
+
+    def init_buffers(self, cfg, lead, tokens, head_dim, dtype):
+        gc, g, p = self._gcount(cfg, tokens), cfg.group_size, head_dim // 2
+        sdt = jnp.dtype(cfg.scale_dtype)
+        stat = lambda: jnp.zeros((*lead, gc, 1, p), sdt)
+        return (jnp.zeros((*lead, gc, g, p), jnp.uint8),
+                {"rho_scale": stat(), "rho_zero": stat(),
+                 "theta_scale": stat(), "theta_zero": stat()})
+
+    def encode(self, cfg, k):
+        pk = qz.encode_polar_keys(k, cfg)
+        return pk.codes, {"rho_scale": pk.rho_scale,
+                          "rho_zero": pk.rho_zero,
+                          "theta_scale": pk.theta_scale,
+                          "theta_zero": pk.theta_zero}
+
+    def decode(self, cfg, codes, scales, dtype=jnp.float32):
+        return qz.decode_polar_keys(self.container(cfg, codes, scales), dtype)
+
+    def container(self, cfg, codes, scales):
+        return qz.PolarKeys(codes=codes, rho_bits=cfg.rho_bits,
+                            theta_bits=cfg.theta_bits, pairing=cfg.pairing,
+                            **scales)
+
+    def scores(self, cfg, q, codes, scales, *, use_lut=True):
+        if not use_lut:
+            return super().scores(cfg, q, codes, scales)
+        from repro.core import lut as lut_mod  # lut imports quantizers only
+        pk = self.container(cfg, codes, scales)
+        # (B, H, G, g, P) -> (B, H, 1, G, g, P): broadcast over the query
+        # heads axis of q (B, H, Qh, d)
+        pk_exp = jax.tree_util.tree_map(lambda a: a[:, :, None], pk)
+        return lut_mod.lut_qk_scores(q, pk_exp, impl=cfg.lut_impl)
+
+    def fused_decode(self, cache, q, *, scale, backend):
+        # function-local import: core is imported by kernels.ref at package
+        # init; importing ops at module scope would cycle.
+        from repro.kernels import ops
+        cfg = cache.cfg
+        sc = cache.key_scales
+        quant_v = cfg.value_bits > 0
+        return ops.polar_decode_attention_full(
+            q, cache.key_codes, sc["rho_scale"], sc["rho_zero"],
+            sc["theta_scale"], sc["theta_zero"], cache.key_residual,
+            cache.value_codes if quant_v else cache.value_fp,
+            cache.value_scale if quant_v else None,
+            cache.value_zero if quant_v else None,
+            cache.length, r_bits=cfg.rho_bits, t_bits=cfg.theta_bits,
+            softmax_scale=scale, backend=backend)
+
+
+register_codec(NoneCodec())
+register_codec(IntCodec())
+register_codec(KiviCodec())
+register_codec(ZipCacheCodec())
+register_codec(PolarCodec())
+
+
+# ---------------------------------------------------------------------------
+# Per-layer cache policy
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CachePolicy:
+    """Layer index -> :class:`QuantConfig` map (hashable, pure-static).
+
+    ``overrides`` lists ``(layer, config)`` pairs; unlisted layers use
+    ``default``. Contiguous layers sharing a config form a *segment* —
+    model code allocates one stacked cache per segment and scans its
+    layers together, so a uniform policy compiles exactly like the
+    pre-policy single-scan path.
+    """
+
+    default: QuantConfig = QuantConfig()
+    overrides: tuple[tuple[int, QuantConfig], ...] = ()
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def uniform(cls, cfg: QuantConfig) -> "CachePolicy":
+        return cls(default=cfg)
+
+    @classmethod
+    def per_layer(cls, overrides: dict[int, QuantConfig],
+                  default: QuantConfig) -> "CachePolicy":
+        return cls(default=default,
+                   overrides=tuple(sorted(overrides.items())))
+
+    @classmethod
+    def first_k(cls, k: int, first: QuantConfig,
+                rest: QuantConfig) -> "CachePolicy":
+        """KVTuner-style split: layers ``[0, k)`` use ``first`` (e.g. int8
+        for the sensitive early layers), the rest use ``rest``."""
+        return cls(default=rest,
+                   overrides=tuple((i, first) for i in range(k)))
+
+    # -- queries ------------------------------------------------------------
+
+    def layer_config(self, layer: int) -> QuantConfig:
+        for i, q in self.overrides:
+            if i == layer:
+                return q
+        return self.default
+
+    @property
+    def is_uniform(self) -> bool:
+        return all(q == self.default for _, q in self.overrides)
+
+    def segments(self, num_layers: int
+                 ) -> tuple[tuple[int, int, QuantConfig], ...]:
+        """Contiguous ``(lo, hi, config)`` runs covering ``[0, num_layers)``."""
+        segs: list[tuple[int, int, QuantConfig]] = []
+        for i in range(num_layers):
+            q = self.layer_config(i)
+            if segs and segs[-1][2] == q:
+                segs[-1] = (segs[-1][0], i + 1, q)
+            else:
+                segs.append((i, i + 1, q))
+        return tuple(segs)
+
+    def avg_key_bits(self, num_layers: int, head_dim: int) -> float:
+        """Mean logical key bits/element across the layer stack."""
+        return sum(
+            self.layer_config(i).key_bits_per_element(head_dim)
+            for i in range(num_layers)) / max(num_layers, 1)
+
+    def max_group_size(self) -> int:
+        """Largest group size across layers — a bucketing multiple for the
+        dense (non-paged) serving path, which allows mixed group sizes."""
+        return max({self.default.group_size}
+                   | {q.group_size for _, q in self.overrides})
+
+    def page_group_size(self) -> int:
+        """The single group size shared by every layer — required by the
+        paged cache, whose page size equals the quantization group size."""
+        sizes = {self.default.group_size} | {
+            q.group_size for _, q in self.overrides}
+        if len(sizes) != 1:
+            raise ValueError(
+                "paged serving requires one group size across all layers "
+                f"(page == group); policy has {sorted(sizes)}")
+        return sizes.pop()
+
+    def map(self, fn: Callable[[QuantConfig], QuantConfig]) -> "CachePolicy":
+        """Apply ``fn`` to every per-layer config (smoke-size reductions)."""
+        return CachePolicy(
+            default=fn(self.default),
+            overrides=tuple((i, fn(q)) for i, q in self.overrides))

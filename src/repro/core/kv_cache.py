@@ -1,16 +1,20 @@
-"""Quantized KV cache with group-wise key quantization and fp residual buffer.
+"""Quantized KV cache over pluggable key codecs (see ``core/codecs.py``).
 
-Layout (all shapes static; ``length`` is the only traced scalar):
+The cache owns placement and the method-agnostic machinery; the resolved
+:class:`~repro.core.codecs.KeyCodec` owns buffer shapes, encode/decode and
+the score path. Layout (all shapes static; ``length`` is the only traced
+scalar):
 
-* grouped key methods (polar / kivi / zipcache):
-    - ``key_codes``   polar: (B, Hkv, G, g, d/2) uint8 (packed rho<<t|theta)
-                      kivi/zipcache: (B, Hkv, G, g, d) uint8
-    - ``key_scales``  dict of per-group stat arrays (method-specific)
+* grouped codecs (polar / kivi / zipcache / any ``codec.grouped``):
+    - ``key_codes``   ``(B, Hkv, G, g, ·)`` uint8 (codec-specific last dim,
+      e.g. packed rho<<t|theta pairs for polar)
+    - ``key_scales``  dict of per-group stat arrays (codec-specific)
     - ``key_residual``(B, Hkv, g, d) fp — tokens of the not-yet-full group
-* token-wise key methods (int) and fp ("none"):
-    - ``key_codes`` (B, Hkv, T, d) uint8 / ``key_fp`` (B, Hkv, T, d)
+* token-wise codecs (int, the fp passthrough "none", third-party):
+    - ``key_codes`` (B, Hkv, T, ·) + per-token ``key_scales`` (``{}`` and a
+      model-dtype codes buffer for the fp passthrough)
 * values: token-wise quantized (``value_bits>0``) or fp, token-major
-  (B, Hkv, T, d) — independent of key grouping.
+  (B, Hkv, T, d) — independent of key codec.
 
 Absolute-position bookkeeping: ``flushed = (length // g) * g`` tokens live in
 quantized groups; positions ``[flushed, length)`` live in the residual. The
@@ -28,7 +32,6 @@ import jax.numpy as jnp
 
 from repro.utils import pytree_dataclass, static_field
 from repro.core import quantizers as qz
-from repro.core import lut as lut_mod
 from repro.core.cache_layout import (
     LinearLayout, RingLayout, ring_segments as _ring_segments,
 )
@@ -40,10 +43,9 @@ NEG_INF = -1e30
 
 @pytree_dataclass
 class KVCache:
-    key_codes: Any          # Array or None
-    key_scales: Any         # dict[str, Array] or None
-    key_residual: Any       # Array or None
-    key_fp: Any             # Array or None
+    key_codes: Array        # codec codes (fp keys for the passthrough codec)
+    key_scales: Any         # dict[str, Array] (codec-specific; may be {})
+    key_residual: Any       # Array or None (grouped codecs only)
     value_codes: Any        # Array or None
     value_scale: Any
     value_zero: Any
@@ -55,55 +57,30 @@ class KVCache:
 
     @property
     def batch(self) -> int:
-        return self._kv_leaf().shape[0]
+        return self.key_codes.shape[0]
 
     @property
     def num_kv_heads(self) -> int:
-        return self._kv_leaf().shape[1]
+        return self.key_codes.shape[1]
 
     @property
     def head_dim(self) -> int:
         v = self.value_codes if self.value_codes is not None else self.value_fp
         return v.shape[-1]
 
-    def _kv_leaf(self) -> Array:
-        for leaf in (self.key_codes, self.key_fp):
-            if leaf is not None:
-                return leaf
-        raise ValueError("empty cache")
+    @property
+    def codec(self):
+        return self.cfg.codec
 
     @property
     def grouped(self) -> bool:
-        return self.cfg.method in ("polar", "kivi", "zipcache")
+        return self.cfg.codec.grouped
 
     @property
     def lay(self):
         """Placement layout; pre-layout caches default to ring arithmetic
         (slot = pos % capacity), of which linear is the degenerate case."""
         return self.layout if self.layout is not None else RingLayout(self.max_len)
-
-
-def _grouped_key_buffers(cfg: QuantConfig, b: int, h: int, d: int, gcount: int,
-                         sdt) -> tuple[Array, dict[str, Array]]:
-    g = cfg.group_size
-    if cfg.method == "polar":
-        p = d // 2
-        codes = jnp.zeros((b, h, gcount, g, p), jnp.uint8)
-        stat = lambda: jnp.zeros((b, h, gcount, 1, p), sdt)
-        scales = {"rho_scale": stat(), "rho_zero": stat(),
-                  "theta_scale": stat(), "theta_zero": stat()}
-    elif cfg.method == "kivi":
-        codes = jnp.zeros((b, h, gcount, g, d), jnp.uint8)
-        stat = lambda: jnp.zeros((b, h, gcount, 1, d), sdt)
-        scales = {"scale": stat(), "zero": stat()}
-    elif cfg.method == "zipcache":
-        codes = jnp.zeros((b, h, gcount, g, d), jnp.uint8)
-        scales = {"token_scale": jnp.zeros((b, h, gcount, g, 1), sdt),
-                  "token_zero": jnp.zeros((b, h, gcount, g, 1), sdt),
-                  "channel_norm": jnp.zeros((b, h, gcount, 1, d), sdt)}
-    else:
-        raise ValueError(cfg.method)
-    return codes, scales
 
 
 def init_cache(cfg: QuantConfig, batch: int, num_kv_heads: int, head_dim: int,
@@ -113,26 +90,16 @@ def init_cache(cfg: QuantConfig, batch: int, num_kv_heads: int, head_dim: int,
     ``layout`` picks the placement policy (default: ring arithmetic over
     ``max_len`` slots, which is also correct for linear use since positions
     then never wrap). Quantization policy and placement are independent —
-    any ``cfg.method`` composes with any layout."""
+    any registered codec composes with any layout."""
     b, h, d = batch, num_kv_heads, head_dim
-    g = cfg.group_size
-    sdt = jnp.dtype(cfg.scale_dtype)
-    rdt = jnp.dtype(cfg.residual_dtype)
-    key_codes = key_scales = key_residual = key_fp = None
-    if cfg.method in ("polar", "kivi", "zipcache"):
-        if max_len % g:
-            raise ValueError(f"max_len {max_len} must be a multiple of group {g}")
-        key_codes, key_scales = _grouped_key_buffers(cfg, b, h, d, max_len // g, sdt)
-        key_residual = jnp.zeros((b, h, g, d), rdt)
-    elif cfg.method == "int":
-        key_codes = jnp.zeros((b, h, max_len, d), jnp.uint8)
-        key_scales = {"scale": jnp.zeros((b, h, max_len, 1), sdt),
-                      "zero": jnp.zeros((b, h, max_len, 1), sdt)}
-    elif cfg.method == "none":
-        key_fp = jnp.zeros((b, h, max_len, d), dtype)
-    else:
-        raise ValueError(cfg.method)
+    codec = cfg.codec
+    key_codes, key_scales = codec.init_buffers(cfg, (b, h), max_len, d, dtype)
+    key_residual = None
+    if codec.grouped:
+        key_residual = jnp.zeros((b, h, cfg.group_size, d),
+                                 jnp.dtype(cfg.residual_dtype))
 
+    sdt = jnp.dtype(cfg.scale_dtype)
     value_codes = value_scale = value_zero = value_fp = None
     if cfg.value_bits > 0:
         value_codes = jnp.zeros((b, h, max_len, d), jnp.uint8)
@@ -142,7 +109,7 @@ def init_cache(cfg: QuantConfig, batch: int, num_kv_heads: int, head_dim: int,
         value_fp = jnp.zeros((b, h, max_len, d), dtype)
 
     return KVCache(key_codes=key_codes, key_scales=key_scales,
-                   key_residual=key_residual, key_fp=key_fp,
+                   key_residual=key_residual,
                    value_codes=value_codes, value_scale=value_scale,
                    value_zero=value_zero, value_fp=value_fp,
                    length=jnp.zeros((), jnp.int32), cfg=cfg, max_len=max_len,
@@ -150,23 +117,8 @@ def init_cache(cfg: QuantConfig, batch: int, num_kv_heads: int, head_dim: int,
 
 
 # ---------------------------------------------------------------------------
-# Encoding helpers shared by append/prefill
+# Update helpers shared by append/prefill
 # ---------------------------------------------------------------------------
-
-
-def _encode_group(k_tokens: Array, cfg: QuantConfig) -> tuple[Array, dict[str, Array]]:
-    """Quantize (..., T, d) with T a multiple of g -> (codes, scales), where
-    codes: (..., G, g, ·) and scales: (..., G, 1|g, ·)."""
-    qk = qz.encode_keys(k_tokens, cfg)
-    if cfg.method == "polar":
-        return qk.codes, {"rho_scale": qk.rho_scale, "rho_zero": qk.rho_zero,
-                          "theta_scale": qk.theta_scale, "theta_zero": qk.theta_zero}
-    if cfg.method == "kivi":
-        return qk.codes, {"scale": qk.scale, "zero": qk.zero}
-    if cfg.method == "zipcache":
-        return qk.codes, {"token_scale": qk.token_scale, "token_zero": qk.token_zero,
-                          "channel_norm": qk.channel_norm}
-    raise ValueError(cfg.method)
 
 
 def _dus(buf: Array, update: Array, axis: int, index: Array) -> Array:
@@ -187,6 +139,7 @@ def append(cache: KVCache, k_new: Array, v_new: Array) -> KVCache:
     serves unbounded (linear) caches and ring (local-window) caches.
     """
     cfg = cache.cfg
+    codec = cache.codec
     lay = cache.lay
     pos = cache.length
     tok_slot = lay.token_slot(pos)
@@ -202,14 +155,12 @@ def append(cache: KVCache, k_new: Array, v_new: Array) -> KVCache:
         updates["value_fp"] = _dus(cache.value_fp, v_new, 2, tok_slot)
 
     # --- keys ---
-    if cfg.method == "none":
-        updates["key_fp"] = _dus(cache.key_fp, k_new, 2, tok_slot)
-    elif cfg.method == "int":
-        qk = qz.encode_int_keys(k_new, cfg)
-        updates["key_codes"] = _dus(cache.key_codes, qk.codes, 2, tok_slot)
+    if not codec.grouped:
+        codes, scales = codec.encode(cfg, k_new)
+        updates["key_codes"] = _dus(cache.key_codes, codes, 2, tok_slot)
         updates["key_scales"] = {
-            "scale": _dus(cache.key_scales["scale"], qk.scale, 2, tok_slot),
-            "zero": _dus(cache.key_scales["zero"], qk.zero, 2, tok_slot)}
+            k: _dus(cache.key_scales[k], scales[k], 2, tok_slot)
+            for k in cache.key_scales}
     else:
         g = cfg.group_size
         slot = pos % g
@@ -218,7 +169,7 @@ def append(cache: KVCache, k_new: Array, v_new: Array) -> KVCache:
         def flush(args):
             codes_buf, scales_buf, res = args
             # res (B,H,g,d) -> codes (B,H,1,g,*) / scales (B,H,1,1|g,*)
-            codes, scales = _encode_group(res, cfg)
+            codes, scales = codec.encode(cfg, res)
             gidx = lay.group_slot(pos // g, codes_buf.shape[2])
             codes_buf = _dus(codes_buf, codes, 2, gidx)
             scales_buf = {k: _dus(scales_buf[k], scales[k], 2, gidx)
@@ -254,10 +205,10 @@ def prefill(cache: KVCache, k: Array, v: Array) -> KVCache:
     (see ``position_masks``).
     """
     cfg = cache.cfg
+    codec = cache.codec
     lay = cache.lay
     b, h, t, d = k.shape
     cap = cache.max_len
-    g = cfg.group_size if cache.grouped else 1
     off = lay.prefill_offset(t)    # tokens before `off` fall out of the ring
     segs = lay.copy_segments(t)
     updates: dict[str, Any] = {}
@@ -276,15 +227,14 @@ def prefill(cache: KVCache, k: Array, v: Array) -> KVCache:
     else:
         updates["value_fp"] = write_tok(cache.value_fp, v[:, :, off:])
 
-    if cfg.method == "none":
-        updates["key_fp"] = write_tok(cache.key_fp, k[:, :, off:])
-    elif cfg.method == "int":
-        qk = qz.encode_int_keys(k[:, :, off:], cfg)
-        updates["key_codes"] = write_tok(cache.key_codes, qk.codes)
+    if not codec.grouped:
+        codes, scales = codec.encode(cfg, k[:, :, off:])
+        updates["key_codes"] = write_tok(cache.key_codes, codes)
         updates["key_scales"] = {
-            "scale": write_tok(cache.key_scales["scale"], qk.scale),
-            "zero": write_tok(cache.key_scales["zero"], qk.zero)}
+            key: write_tok(cache.key_scales[key], scales[key])
+            for key in cache.key_scales}
     else:
+        g = cfg.group_size
         nfull = t // g
         goff = max(0, nfull - cap // g)   # group ring offset (group units)
         rem = t - nfull * g
@@ -294,7 +244,7 @@ def prefill(cache: KVCache, k: Array, v: Array) -> KVCache:
         # append produce bit-identical codes (streaming parity invariant).
         k_rdt = k[:, :, goff * g :].astype(jnp.dtype(cfg.residual_dtype))
         if nfull > goff:
-            codes, scales = _encode_group(k_rdt[:, :, : (nfull - goff) * g], cfg)
+            codes, scales = codec.encode(cfg, k_rdt[:, :, : (nfull - goff) * g])
             for lo, hi, dst in _ring_segments(nfull, cap // g):
                 n = hi - lo
                 codes_buf = codes_buf.at[:, :, dst : dst + n].set(
@@ -319,39 +269,11 @@ def prefill(cache: KVCache, k: Array, v: Array) -> KVCache:
 # ---------------------------------------------------------------------------
 
 
-def _grouped_container(cache: KVCache):
-    """Rebuild the method-specific quantized-keys container from cache buffers."""
-    cfg = cache.cfg
-    if cfg.method == "polar":
-        return qz.PolarKeys(codes=cache.key_codes, rho_bits=cfg.rho_bits,
-                            theta_bits=cfg.theta_bits, pairing=cfg.pairing,
-                            **cache.key_scales)
-    if cfg.method == "kivi":
-        return qz.ChannelKeys(codes=cache.key_codes, bits=cfg.key_bits,
-                              **cache.key_scales)
-    if cfg.method == "zipcache":
-        return qz.ZipKeys(codes=cache.key_codes, bits=cfg.key_bits,
-                          **cache.key_scales)
-    raise ValueError(cfg.method)
-
-
-def grouped_scores(cache: KVCache, q: Array, use_lut: bool = True) -> Array:
-    """Scores of q against all quantized groups. q: (B, Hkv, Qh, d) ->
-    (B, Hkv, Qh, max_len)."""
-    cfg = cache.cfg
-    if cfg.method == "polar" and use_lut:
-        pk = _grouped_container(cache)
-        pk_exp = jax.tree_util.tree_map(lambda a: a[:, :, None], pk)
-        return lut_mod.lut_qk_scores(q, pk_exp, impl=cfg.lut_impl)
-    if cfg.method in ("polar", "kivi", "zipcache"):
-        k_tilde = qz.decode_keys(_grouped_container(cache))  # (B,H,T,d)
-    elif cfg.method == "int":
-        k_tilde = qz.decode_token_keys(
-            qz.TokenKeys(codes=cache.key_codes, bits=cfg.key_bits,
-                         **cache.key_scales))
-    else:
-        k_tilde = cache.key_fp.astype(jnp.float32)
-    return jnp.einsum("bhqd,bhtd->bhqt", q.astype(jnp.float32), k_tilde)
+def key_scores(cache: KVCache, q: Array, use_lut: bool = True) -> Array:
+    """Scores of q against all stored keys via the codec's score path.
+    q: (B, Hkv, Qh, d) -> (B, Hkv, Qh, max_len)."""
+    return cache.codec.scores(cache.cfg, q, cache.key_codes,
+                              cache.key_scales, use_lut=use_lut)
 
 
 def position_masks(t_cap: int, g: int, length: Array, window: int):
@@ -391,9 +313,10 @@ def decode_attention(cache: KVCache, q: Array, scale: float | None = None,
     """Single-step attention of query q (B, Hq, d) over the cache.
 
     Returns (B, Hq, d) in q.dtype. Handles GQA by folding query heads onto
-    their KV head. Scores over quantized groups use the LUT path (polar);
-    residual tokens are attended at full precision. ``window > 0`` applies
-    ring-buffer local-attention semantics (capacity must equal window).
+    their KV head. Scores over stored keys come from the codec's score path
+    (angle LUT for polar); residual tokens are attended at full precision.
+    ``window > 0`` applies ring-buffer local-attention semantics (capacity
+    must equal window).
     """
     cfg = cache.cfg
     b, hq, d = q.shape
@@ -410,7 +333,7 @@ def decode_attention(cache: KVCache, q: Array, scale: float | None = None,
     if cache.grouped:
         g = cfg.group_size
         valid_g, in_res, _ = position_masks(t_cap, g, length, window)
-        s_grouped = grouped_scores(cache, q4, use_lut)             # (B,Hkv,Qh,T)
+        s_grouped = key_scores(cache, q4, use_lut)                 # (B,Hkv,Qh,T)
         res = cache.key_residual.astype(jnp.float32)               # (B,Hkv,g,d)
         s_res = jnp.einsum("bhqd,bhgd->bhqg", q4, res)             # (B,Hkv,Qh,g)
         s_res_tiled = jnp.tile(s_res, (1, 1, 1, t_cap // g))       # slot % g trick
@@ -418,7 +341,7 @@ def decode_attention(cache: KVCache, q: Array, scale: float | None = None,
                            jnp.where(bc(valid_g), s_grouped, NEG_INF))
     else:
         valid_g, in_res, _ = position_masks(t_cap, 1, length, window)
-        scores = grouped_scores(cache, q4, use_lut)
+        scores = key_scores(cache, q4, use_lut)
         scores = jnp.where(bc(valid_g | in_res), scores, NEG_INF)
 
     probs = jax.nn.softmax(scores, axis=-1)                        # fp32
@@ -435,40 +358,28 @@ def decode_attention(cache: KVCache, q: Array, scale: float | None = None,
 def fused_decode_attention(cache: KVCache, q: Array,
                            scale: float | None = None,
                            backend: str = "ref") -> Array:
-    """Single-step decode attention via the fused flash-decode kernel
-    (:func:`repro.kernels.ops.polar_decode_attention_full`).
+    """Single-step decode attention via the codec's fused flash-decode
+    kernel (polar: :func:`repro.kernels.ops.polar_decode_attention_full`).
 
     Semantically equivalent to :func:`decode_attention` for a *linear*
-    polar cache (no ring wrap, no window) — the kernel consumes the cache
+    cache (no ring wrap, no window) — the kernel consumes the cache
     buffers directly: LUT scores over quantized groups fused with the
     value matmul, exact online-softmax merge with the fp residual.
     ``cache.length`` may be () or (B,) (heterogeneous slot lengths).
     ``backend``: ref | interpret | pallas (see kernels.ops).
     """
-    cfg = cache.cfg
-    if cfg.method != "polar":
-        raise ValueError("fused decode path requires the polar policy, "
-                         f"got {cfg.method!r}")
+    codec = cache.codec
+    if not codec.supports_fused_decode:
+        raise ValueError("fused decode path requires a codec with a fused "
+                         f"kernel, got {codec.name!r}")
     if not isinstance(cache.layout, LinearLayout):
         # ring (and layout-less, which defaults to ring arithmetic) caches
         # can wrap: the kernel's pos < flushed mask would validate
         # overwritten slots
         raise ValueError("fused decode path requires a linear layout")
-    # function-local import: core is imported by kernels.ref at package
-    # init; importing ops at module scope would cycle.
-    from repro.kernels import ops
-    sc = cache.key_scales
-    quant_v = cfg.value_bits > 0
-    return ops.polar_decode_attention_full(
-        q, cache.key_codes, sc["rho_scale"], sc["rho_zero"],
-        sc["theta_scale"], sc["theta_zero"], cache.key_residual,
-        cache.value_codes if quant_v else cache.value_fp,
-        cache.value_scale if quant_v else None,
-        cache.value_zero if quant_v else None,
-        cache.length, r_bits=cfg.rho_bits, t_bits=cfg.theta_bits,
-        softmax_scale=scale, backend=backend)
+    return codec.fused_decode(cache, q, scale=scale, backend=backend)
 
 
 def cache_logical_bits(cache: KVCache) -> float:
     """Logical bits/key-element of this cache's policy (paper's accounting)."""
-    return cache.cfg.key_bits_per_element
+    return cache.cfg.key_bits_per_element(cache.head_dim)

@@ -6,16 +6,18 @@ own pages through a host-managed page table (see
 ``cache_layout.PageAllocator``); admission and reclamation are free-list
 bookkeeping — no buffer copies, no recompiles (all shapes static).
 
-Buffer shapes (``PP = num_pages + 1``: last page is the masked-write
-scratch page, ``S`` = slots, ``N`` = pages_per_slot, ``g`` = page size):
+Key buffers come from the resolved :class:`~repro.core.codecs.KeyCodec`
+(see ``core/codecs.py``). Buffer shapes (``PP = num_pages + 1``: last page
+is the masked-write scratch page, ``S`` = slots, ``N`` = pages_per_slot,
+``g`` = page size):
 
-* grouped key methods (polar / kivi / zipcache):
-    - ``key_codes``    (PP, H, g, d/2|d) uint8 page pool
+* grouped codecs (polar / kivi / zipcache / third-party):
+    - ``key_codes``    (PP, H, g, ·) uint8 page pool
     - ``key_scales``   dict of (PP, H, 1|g, ·) stat pools
     - ``key_residual`` (S, H, g, d) per-slot fp not-yet-full group
-* token-wise keys (int): ``key_codes`` (PP, H, g, d) + per-token stats
-* fp keys ("none"): ``key_fp`` (PP, H, g, d)
-* values (all methods): token-major page rows, quantized or fp
+* token-wise codecs (int / fp passthrough): ``key_codes`` (PP, H, g, ·)
+  token-major page rows + per-token ``key_scales`` pools
+* values (all codecs): token-major page rows, quantized or fp
 * ``lengths`` (S,) int32 per-slot token counts
 
 The invariant mirrors the dense cache: value rows for positions
@@ -42,7 +44,6 @@ from repro.utils import pytree_dataclass, static_field
 from repro.core import kv_cache as kvc
 from repro.core import quantizers as qz
 from repro.core.cache_layout import LinearLayout, PagedLayout
-from repro.core.kv_cache import _encode_group, _grouped_key_buffers
 from repro.core.quantizers import QuantConfig
 
 Array = jax.Array
@@ -50,10 +51,9 @@ Array = jax.Array
 
 @pytree_dataclass
 class PagedKVCache:
-    key_codes: Any          # page pool or None
-    key_scales: Any         # dict of stat pools or None
-    key_residual: Any       # (S, H, g, d) or None
-    key_fp: Any             # (PP, H, g, d) or None
+    key_codes: Array        # codec page pool (fp rows for the passthrough)
+    key_scales: Any         # dict of stat pools (codec-specific; may be {})
+    key_residual: Any       # (S, H, g, d) or None (grouped codecs only)
     value_codes: Any
     value_scale: Any
     value_zero: Any
@@ -64,10 +64,7 @@ class PagedKVCache:
 
     @property
     def num_kv_heads(self) -> int:
-        for leaf in (self.key_codes, self.key_fp):
-            if leaf is not None:
-                return leaf.shape[1]
-        raise ValueError("empty cache")
+        return self.key_codes.shape[1]
 
     @property
     def head_dim(self) -> int:
@@ -75,39 +72,35 @@ class PagedKVCache:
         return v.shape[-1]
 
     @property
+    def codec(self):
+        return self.cfg.codec
+
+    @property
     def grouped(self) -> bool:
-        return self.cfg.method in ("polar", "kivi", "zipcache")
+        return self.cfg.codec.grouped
 
 
 def init_paged_cache(cfg: QuantConfig, layout: PagedLayout,
                      num_kv_heads: int, head_dim: int,
                      dtype=jnp.bfloat16) -> PagedKVCache:
     """Allocate empty page pools for ``layout`` under policy ``cfg``."""
-    if layout.page_size != cfg.group_size and cfg.method in (
-            "polar", "kivi", "zipcache"):
+    codec = cfg.codec
+    if codec.grouped and layout.page_size != cfg.group_size:
         raise ValueError(
             f"page_size {layout.page_size} must equal group_size "
             f"{cfg.group_size} (one page == one quantization group)")
     pp, s = layout.pool_pages, layout.slots
     h, d, g = num_kv_heads, head_dim, layout.page_size
-    sdt = jnp.dtype(cfg.scale_dtype)
-    rdt = jnp.dtype(cfg.residual_dtype)
-    key_codes = key_scales = key_residual = key_fp = None
-    if cfg.method in ("polar", "kivi", "zipcache"):
-        # one group per page: build (PP, H, 1, g, ·) buffers, drop the G axis
-        codes, scales = _grouped_key_buffers(cfg, pp, h, d, 1, sdt)
-        key_codes = codes[:, :, 0]
-        key_scales = {k: v[:, :, 0] for k, v in scales.items()}
-        key_residual = jnp.zeros((s, h, g, d), rdt)
-    elif cfg.method == "int":
-        key_codes = jnp.zeros((pp, h, g, d), jnp.uint8)
-        key_scales = {"scale": jnp.zeros((pp, h, g, 1), sdt),
-                      "zero": jnp.zeros((pp, h, g, 1), sdt)}
-    elif cfg.method == "none":
-        key_fp = jnp.zeros((pp, h, g, d), dtype)
-    else:
-        raise ValueError(cfg.method)
+    key_codes, key_scales = codec.init_buffers(cfg, (pp, h), g, d, dtype)
+    key_residual = None
+    if codec.grouped:
+        # one group per page: codec buffers are (PP, H, 1, g, ·) — drop the
+        # G axis so the pool indexes pages directly
+        key_codes = key_codes[:, :, 0]
+        key_scales = {k: v[:, :, 0] for k, v in key_scales.items()}
+        key_residual = jnp.zeros((s, h, g, d), jnp.dtype(cfg.residual_dtype))
 
+    sdt = jnp.dtype(cfg.scale_dtype)
     value_codes = value_scale = value_zero = value_fp = None
     if cfg.value_bits > 0:
         value_codes = jnp.zeros((pp, h, g, d), jnp.uint8)
@@ -117,7 +110,7 @@ def init_paged_cache(cfg: QuantConfig, layout: PagedLayout,
         value_fp = jnp.zeros((pp, h, g, d), dtype)
 
     return PagedKVCache(key_codes=key_codes, key_scales=key_scales,
-                        key_residual=key_residual, key_fp=key_fp,
+                        key_residual=key_residual,
                         value_codes=value_codes, value_scale=value_scale,
                         value_zero=value_zero, value_fp=value_fp,
                         lengths=jnp.zeros((s,), jnp.int32), cfg=cfg,
@@ -167,6 +160,7 @@ def paged_prefill(cache: PagedKVCache, slot: Array, page_row: Array,
     page, so padding never pollutes the pool.
     """
     cfg = cache.cfg
+    codec = cache.codec
     lay = cache.layout
     _, h, tp, d = k.shape
     g = lay.page_size
@@ -201,24 +195,20 @@ def paged_prefill(cache: PagedKVCache, slot: Array, page_row: Array,
             cache.value_fp, vpages(), to_pages(v))
 
     # --- keys ---
-    if cfg.method == "none":
-        updates["key_fp"] = _scatter_pages(
-            cache.key_fp, vpages(), to_pages(k))
-    elif cfg.method == "int":
-        qk = qz.encode_int_keys(k, cfg)
+    if not codec.grouped:
+        codes, scales = codec.encode(cfg, k)
         updates["key_codes"] = _scatter_pages(
-            cache.key_codes, vpages(), to_pages(qk.codes))
+            cache.key_codes, vpages(), to_pages(codes))
         updates["key_scales"] = {
-            "scale": _scatter_pages(cache.key_scales["scale"], vpages(),
-                                    to_pages(qk.scale)),
-            "zero": _scatter_pages(cache.key_scales["zero"], vpages(),
-                                   to_pages(qk.zero))}
+            key: _scatter_pages(cache.key_scales[key], vpages(),
+                                to_pages(scales[key]))
+            for key in cache.key_scales}
     else:
         kpages = jnp.where(gi < nfull, row_pages, scratch)
         # round through the residual dtype: streaming-parity invariant with
         # the dense cache and with later token-by-token appends
         k_rdt = k.astype(jnp.dtype(cfg.residual_dtype))
-        codes, scales = _encode_group(k_rdt, cfg)   # (1,H,G,g,·)/(1,H,G,1|g,·)
+        codes, scales = codec.encode(cfg, k_rdt)    # (1,H,G,g,·)/(1,H,G,1|g,·)
         updates["key_codes"] = _scatter_pages(
             cache.key_codes, kpages, codes[0].transpose(1, 0, 2, 3))
         updates["key_scales"] = {
@@ -256,6 +246,7 @@ def paged_append(cache: PagedKVCache, k_new: Array, v_new: Array,
     scatter target.
     """
     cfg = cache.cfg
+    codec = cache.codec
     lay = cache.layout
     s, h, _, d = k_new.shape
     g = lay.page_size
@@ -282,25 +273,21 @@ def paged_append(cache: PagedKVCache, k_new: Array, v_new: Array,
             cache.value_fp, page, row, v_new[:, :, 0])
 
     # --- keys ---
-    if cfg.method == "none":
-        updates["key_fp"] = _scatter_rows(
-            cache.key_fp, page, row, k_new[:, :, 0])
-    elif cfg.method == "int":
-        qk = qz.encode_int_keys(k_new, cfg)
+    if not codec.grouped:
+        codes, scales = codec.encode(cfg, k_new)
         updates["key_codes"] = _scatter_rows(
-            cache.key_codes, page, row, qk.codes[:, :, 0])
+            cache.key_codes, page, row, codes[:, :, 0])
         updates["key_scales"] = {
-            "scale": _scatter_rows(cache.key_scales["scale"], page, row,
-                                   qk.scale[:, :, 0]),
-            "zero": _scatter_rows(cache.key_scales["zero"], page, row,
-                                  qk.zero[:, :, 0])}
+            key: _scatter_rows(cache.key_scales[key], page, row,
+                               scales[key][:, :, 0])
+            for key in cache.key_scales}
     else:
         written = cache.key_residual.at[sid, :, row].set(
             k_new[:, :, 0].astype(cache.key_residual.dtype))
         residual = jnp.where(active[:, None, None, None], written,
                              cache.key_residual)
         flush = active & (row == g - 1)
-        codes, scales = _encode_group(residual, cfg)  # (S,H,1,g,·)
+        codes, scales = codec.encode(cfg, residual)   # (S,H,1,g,·)
         fpage = jnp.where(flush, page, scratch)
         updates["key_codes"] = _scatter_pages(
             cache.key_codes, fpage, codes[:, :, 0])
@@ -333,7 +320,7 @@ def gather_view(cache: PagedKVCache, page_table: Array) -> kvc.KVCache:
     s, n = page_table.shape
     g = lay.page_size
     t_cap = n * g
-    key_codes = key_scales = key_residual = key_fp = None
+    key_residual = None
 
     def flat_tokens(x):  # (S, H, N, g, ·) -> (S, H, N*g, ·)
         return x.reshape(x.shape[0], x.shape[1], t_cap, x.shape[-1])
@@ -343,12 +330,10 @@ def gather_view(cache: PagedKVCache, page_table: Array) -> kvc.KVCache:
         key_scales = {k: _gather_pages(v, page_table)
                       for k, v in cache.key_scales.items()}
         key_residual = cache.key_residual
-    elif cfg.method == "int":
+    else:
         key_codes = flat_tokens(_gather_pages(cache.key_codes, page_table))
         key_scales = {k: flat_tokens(_gather_pages(v, page_table))
                       for k, v in cache.key_scales.items()}
-    else:
-        key_fp = flat_tokens(_gather_pages(cache.key_fp, page_table))
 
     value_codes = value_scale = value_zero = value_fp = None
     if cfg.value_bits > 0:
@@ -359,7 +344,7 @@ def gather_view(cache: PagedKVCache, page_table: Array) -> kvc.KVCache:
         value_fp = flat_tokens(_gather_pages(cache.value_fp, page_table))
 
     return kvc.KVCache(key_codes=key_codes, key_scales=key_scales,
-                       key_residual=key_residual, key_fp=key_fp,
+                       key_residual=key_residual,
                        value_codes=value_codes, value_scale=value_scale,
                        value_zero=value_zero, value_fp=value_fp,
                        length=cache.lengths, cfg=cfg, max_len=t_cap,
@@ -372,10 +357,10 @@ def paged_decode_attention(cache: PagedKVCache, q: Array, page_table: Array,
     """Single-step attention of q (S, Hq, d) over all slots' pages.
 
     ``backend="jnp"`` uses the pure-jnp masked-softmax path;
-    ``ref|interpret|pallas`` route the polar policy through the fused
-    flash-decode kernel (per-slot lengths).
+    ``ref|interpret|pallas`` route codecs with a fused kernel (polar)
+    through the fused flash-decode path (per-slot lengths).
     """
     view = gather_view(cache, page_table)
-    if backend == "jnp" or cache.cfg.method != "polar":
+    if backend == "jnp" or not cache.codec.supports_fused_decode:
         return kvc.decode_attention(view, q, scale=scale)
     return kvc.fused_decode_attention(view, q, scale=scale, backend=backend)

@@ -1,4 +1,12 @@
-"""KV-cache quantizers: PolarQuant + the paper's baselines (Int-N, KIVI, ZipCache).
+"""KV-cache quantizer math: PolarQuant + the paper's baselines (Int-N, KIVI,
+ZipCache).
+
+This module holds the *numerics* — affine helpers, the per-method
+encode/decode functions and their quantized-key containers, plus the
+serializable :class:`QuantConfig` description. Method *dispatch* lives in
+:mod:`repro.core.codecs`: ``QuantConfig.codec`` resolves the ``method``
+string once to a registered :class:`~repro.core.codecs.KeyCodec`, and the
+cache layers call codec methods instead of branching on method names.
 
 All quantizers operate on tensors shaped ``(..., T, d)`` — arbitrary leading
 batch/head dims, a token axis ``T`` and a head dim ``d``. Group-wise methods
@@ -50,26 +58,21 @@ class QuantConfig:
     lut_impl: str = static_field(default="select")    # select|gather (§Perf A/B)
 
     @property
-    def quantizes_keys(self) -> bool:
-        return self.method != "none"
+    def codec(self):
+        """The registered :class:`~repro.core.codecs.KeyCodec` for
+        ``method`` — the one resolution point from string to behavior."""
+        from repro.core.codecs import get_codec  # codecs imports this module
+        return get_codec(self.method)
 
     @property
-    def key_bits_per_element(self) -> float:
-        """Logical key bits/element incl. quantization-parameter overhead."""
-        if self.method == "none":
-            return 16.0
-        if self.method == "polar":
-            payload = (self.rho_bits + self.theta_bits) / 2.0
-            # rho (z,s) + theta (z,s): 4 fp16 params per channel-pair per
-            # group => 4*16 bits / (2 dims * g tokens) = 32/g per element.
-            overhead = 64.0 / (2.0 * self.group_size)
-        elif self.method == "int":
-            payload = float(self.key_bits)
-            overhead = 32.0 / 128.0  # per-token z,s over d=128 (paper §B.1)
-        else:  # kivi / zipcache
-            payload = float(self.key_bits)
-            overhead = 32.0 / self.group_size
-        return payload + overhead
+    def quantizes_keys(self) -> bool:
+        return self.codec.quantizes
+
+    def key_bits_per_element(self, head_dim: int) -> float:
+        """Logical key bits/element incl. quantization-parameter overhead,
+        at the cache's actual ``head_dim`` (token-wise stats amortize over
+        it; the codec owns the accounting)."""
+        return self.codec.bits_per_element(self, head_dim)
 
     @property
     def lut_states(self) -> int:
@@ -300,15 +303,8 @@ def decode_values(qv: QuantizedValues, dtype: jnp.dtype = jnp.float32) -> Array:
 
 
 # ---------------------------------------------------------------------------
-# Dispatch
+# Generic entry points (dispatch via the codec registry / container type)
 # ---------------------------------------------------------------------------
-
-KEY_ENCODERS = {
-    "polar": encode_polar_keys,
-    "kivi": encode_kivi_keys,
-    "int": encode_int_keys,
-    "zipcache": encode_zipcache_keys,
-}
 
 KEY_DECODERS = {
     PolarKeys: decode_polar_keys,
@@ -319,12 +315,17 @@ KEY_DECODERS = {
 
 
 def encode_keys(k: Array, cfg: QuantConfig):
-    if cfg.method == "none":
-        return k
-    return KEY_ENCODERS[cfg.method](k, cfg)
+    """Quantize keys via the registered codec; returns the method-specific
+    container (or ``k`` unchanged for the fp passthrough)."""
+    codec = cfg.codec
+    return codec.container(cfg, *codec.encode(cfg, k))
 
 
 def decode_keys(qk, dtype: jnp.dtype = jnp.float32) -> Array:
     if isinstance(qk, jax.Array):
         return qk.astype(dtype)
-    return KEY_DECODERS[type(qk)](qk, dtype)
+    decoder = KEY_DECODERS.get(type(qk))
+    if decoder is not None:
+        return decoder(qk, dtype)
+    # generic container of a third-party codec (see codecs.CodecKeys)
+    return qk.decode(dtype)

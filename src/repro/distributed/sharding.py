@@ -146,19 +146,6 @@ def batch_pspecs(batch_specs: dict, mesh: Mesh, global_batch: int) -> dict:
 # Decode-state sharding
 # ---------------------------------------------------------------------------
 
-_SEQ_AXIS_BY_FIELD = {
-    # KVCache buffers (stacked: leading L axis): (batch_axis, seq_axis)
-    "key_codes": (2, 4),       # (L,B,H,G,g,P) -> G over model
-    "key_scales": (2, 4),      # (L,B,H,G,1,P)
-    "value_codes": (2, 4),     # (L,B,H,T,1|d)
-    "value_scale": (2, 4),
-    "value_zero": (2, 4),
-    "value_fp": (2, 4),
-    "key_fp": (2, 4),
-    "key_residual": (2, None),  # (L,B,H,g,d)
-}
-
-
 def decode_state_pspec(path: str, shape: tuple[int, ...], mesh: Mesh,
                        global_batch: int) -> P:
     """Generic decode-state resolver: batch axis over (pod,data); the

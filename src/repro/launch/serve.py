@@ -32,6 +32,9 @@ def main(argv=None) -> int:
     ap.add_argument("--value-bits", type=int, default=0)
     ap.add_argument("--group-size", type=int, default=0,
                     help="0 = keep config default")
+    ap.add_argument("--int8-layers", type=int, default=0,
+                    help="mixed policy: run the first N layers at int8 "
+                         "(KVTuner-style) and the rest at --quant")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -43,8 +46,15 @@ def main(argv=None) -> int:
                theta_bits=args.theta_bits, value_bits=args.value_bits)
     if args.group_size:
         qkw["group_size"] = args.group_size
-    cfg = dataclasses.replace(cfg,
-                              quant=dataclasses.replace(cfg.quant, **qkw))
+    quant = dataclasses.replace(cfg.quant, **qkw)
+    policy = None
+    if args.int8_layers > 0:
+        from repro.core import CachePolicy
+        policy = CachePolicy.first_k(
+            args.int8_layers,
+            dataclasses.replace(quant, method="int", key_bits=8),
+            quant)
+    cfg = dataclasses.replace(cfg, quant=quant, cache_policy=policy)
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
 
@@ -61,8 +71,8 @@ def main(argv=None) -> int:
     eng = ServeEngine(model, params, max_len=args.max_len)
     out = eng.generate(batch, GenerationConfig(
         max_new_tokens=args.gen, temperature=args.temperature, seed=args.seed))
-    print(f"[serve] {cfg.name} quant={args.quant} "
-          f"bits/key-elem={cfg.quant.key_bits_per_element:.2f}")
+    print(f"[serve] {cfg.name} quant={args.quant} bits/key-elem="
+          f"{cfg.policy.avg_key_bits(cfg.num_layers, cfg.head_dim):.2f}")
     print(f"[serve] prefill {out['prefill_s'] * 1e3:.1f}ms  "
           f"decode {out['tokens_per_s']:.1f} tok/s  "
           f"cache {out['cache_bytes'] / 2**20:.2f} MiB")

@@ -124,7 +124,7 @@ def attention_decode(params: Params, x: Array, cfg: ModelConfig,
     q = L.apply_rope(q, pos, cfg.rope_base, cfg.rope_ntk_scale)
     k = L.apply_rope(k, pos, cfg.rope_base, cfg.rope_ntk_scale)
     cache = kvc.append(cache, k, v)
-    if (cfg.decode_backend != "jnp" and cfg.quant.method == "polar"
+    if (cfg.decode_backend != "jnp" and cache.codec.supports_fused_decode
             and window == 0):
         # fused kernel assumes linear placement — ring windows stay on the
         # jnp path
@@ -173,19 +173,24 @@ def attention_decode_paged(params: Params, x: Array, cfg: ModelConfig,
     q = L.apply_rope(q, pos, cfg.rope_base, cfg.rope_ntk_scale)
     k = L.apply_rope(k, pos, cfg.rope_base, cfg.rope_ntk_scale)
     cache = pgc.paged_append(cache, k, v, page_table, active)
-    backend = cfg.decode_backend if cfg.quant.method == "polar" else "jnp"
+    backend = (cfg.decode_backend if cache.codec.supports_fused_decode
+               else "jnp")
     out = pgc.paged_decode_attention(cache, q[:, :, 0], page_table,
                                      backend=backend)
     return L.linear(out.reshape(s, 1, -1), params["wo"]), cache
 
 
-def make_cache(cfg: ModelConfig, batch: int, max_len: int) -> kvc.KVCache:
+def make_cache(cfg: ModelConfig, batch: int, max_len: int,
+               layer: int = 0) -> kvc.KVCache:
+    """Allocate one layer's cache under ``cfg.policy.layer_config(layer)``
+    (layer 0 == the uniform default for models without per-layer mixing)."""
     from repro.core.cache_layout import LinearLayout, RingLayout
+    quant = cfg.policy.layer_config(layer)
     cap = max_len
     if cfg.window:
         cap = min(cap, cfg.window)
-    g = cfg.quant.group_size
+    g = quant.group_size
     cap = -(-cap // g) * g  # round up to a group multiple
     layout = RingLayout(cap) if cfg.window else LinearLayout(cap)
-    return kvc.init_cache(cfg.quant, batch, cfg.num_kv_heads, cfg.head_dim,
+    return kvc.init_cache(quant, batch, cfg.num_kv_heads, cfg.head_dim,
                           cap, dtype=jnp.dtype(cfg.dtype), layout=layout)

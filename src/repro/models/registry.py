@@ -40,12 +40,15 @@ class Model:
     decode: Callable[[dict, Any, Array], tuple[Array, Any]]
     input_specs: Callable[[ShapeConfig], dict]
     # --- continuous batching over paged caches (None where unsupported) ---
-    # init_paged_state(layout) -> stacked per-layer PagedKVCache
+    # init_paged_state(layout) -> per-segment stacked PagedKVCaches
     # prefill_paged(params, tokens (1,Tp), state, slot, page_row, true_len)
     # decode_paged(params, state, token (S,), page_table, active)
     init_paged_state: Callable[..., Any] | None = None
     prefill_paged: Callable[..., Any] | None = None
     decode_paged: Callable[..., Any] | None = None
+    # cache_layer_bytes(state) -> physical cache bytes per layer (None for
+    # families without per-layer KV caches)
+    cache_layer_bytes: Callable[[Any], list[int]] | None = None
 
     def decode_state_specs(self, shape: ShapeConfig):
         """ShapeDtypeStructs of the decode state (no allocation)."""
@@ -83,6 +86,11 @@ def _token_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
 
 def get_model(cfg: ModelConfig) -> Model:
     specs = functools.partial(_token_specs, cfg)
+    if cfg.family not in ("dense", "moe", "vlm") and not cfg.policy.is_uniform:
+        raise ValueError(
+            f"per-layer cache policies are not supported for the "
+            f"{cfg.family!r} family (its decode state stacks one cache "
+            "shape across layers)")
     if cfg.family in ("dense", "moe", "vlm"):
         paged = {}
         # vlm prefill needs the patch frontend; the paged attention path
@@ -105,6 +113,8 @@ def get_model(cfg: ModelConfig) -> Model:
             prefill=lambda p, b, s: TF.prefill_fn(p, b, cfg, s),
             decode=lambda p, s, t: TF.decode_fn(p, s, t, cfg),
             input_specs=specs,
+            cache_layer_bytes=lambda state: TF.per_layer_cache_bytes(
+                cfg, state),
             **paged,
         )
     if cfg.family == "encdec":

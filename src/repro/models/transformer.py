@@ -197,23 +197,62 @@ def lm_loss(params: Params, batch: dict, cfg: ModelConfig,
 
 
 # ---------------------------------------------------------------------------
-# Serving: prefill + decode over stacked caches
+# Serving: prefill + decode over per-segment stacked caches
+#
+# cfg.policy partitions the layer stack into contiguous segments of equal
+# QuantConfig; each segment gets one stacked cache and one lax.scan over its
+# layers (a uniform policy => a single segment, i.e. the classic one-scan
+# stack). Mixed policies pay one scan per segment — HLO stays O(#segments),
+# not O(depth).
 # ---------------------------------------------------------------------------
 
 
-def init_decode_caches(cfg: ModelConfig, batch: int, max_len: int):
-    single = AB.make_cache(cfg, batch, max_len)
+def _stack_layers(n: int, tree):
     return jax.tree_util.tree_map(
-        lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), single)
+        lambda a: jnp.zeros((n,) + a.shape, a.dtype), tree)
+
+
+def _segment_params(layers, lo: int, hi: int):
+    return jax.tree_util.tree_map(lambda a: a[lo:hi], layers)
+
+
+def init_decode_caches(cfg: ModelConfig, batch: int, max_len: int):
+    """Tuple of per-segment stacked caches (see segment note above)."""
+    return tuple(
+        _stack_layers(hi - lo, AB.make_cache(cfg, batch, max_len, layer=lo))
+        for lo, hi, _ in cfg.policy.segments(cfg.num_layers))
 
 
 def init_paged_caches(cfg: ModelConfig, layout):
-    """Stacked per-layer paged caches sharing one page-table numbering."""
+    """Per-segment stacked paged caches sharing one page-table numbering."""
     from repro.core import paged_cache as pgc
-    single = pgc.init_paged_cache(cfg.quant, layout, cfg.num_kv_heads,
-                                  cfg.head_dim, dtype=jnp.dtype(cfg.dtype))
-    return jax.tree_util.tree_map(
-        lambda a: jnp.zeros((cfg.num_layers,) + a.shape, a.dtype), single)
+    return tuple(
+        _stack_layers(hi - lo, pgc.init_paged_cache(
+            quant, layout, cfg.num_kv_heads, cfg.head_dim,
+            dtype=jnp.dtype(cfg.dtype)))
+        for lo, hi, quant in cfg.policy.segments(cfg.num_layers))
+
+
+def _scan_segments(params: Params, x: Array, caches, cfg: ModelConfig, body):
+    """Run ``body`` over every layer, one lax.scan per policy segment."""
+    out = []
+    for (lo, hi, _), cache in zip(cfg.policy.segments(cfg.num_layers),
+                                  caches):
+        lp = _segment_params(params["layers"], lo, hi)
+        x, cache = jax.lax.scan(body, x, (lp, cache))
+        out.append(cache)
+    return x, tuple(out)
+
+
+def per_layer_cache_bytes(cfg: ModelConfig, caches) -> list[int]:
+    """Physical cache bytes per layer, reported segment-by-segment (paged
+    segments report each layer's share of its page pool)."""
+    from repro.utils import tree_bytes
+    out: list[int] = []
+    for (lo, hi, _), cache in zip(cfg.policy.segments(cfg.num_layers),
+                                  caches):
+        out.extend([tree_bytes(cache) // (hi - lo)] * (hi - lo))
+    return out
 
 
 def prefill_fn(params: Params, batch: dict, cfg: ModelConfig, caches):
@@ -233,7 +272,7 @@ def prefill_fn(params: Params, batch: dict, cfg: ModelConfig, caches):
                                  prefix_len=prefix_len, window=cfg.window)
         return h, cache
 
-    x, caches = jax.lax.scan(body, x, (params["layers"], caches))
+    x, caches = _scan_segments(params, x, caches, cfg, body)
     logits = lm_logits(params, x[:, -1:], cfg)
     return logits[:, 0], caches
 
@@ -247,7 +286,7 @@ def decode_fn(params: Params, caches, token: Array, cfg: ModelConfig):
         h, cache = block_decode(lp, h, cfg, cache, window=cfg.window)
         return h, cache
 
-    x, caches = jax.lax.scan(body, x, (params["layers"], caches))
+    x, caches = _scan_segments(params, x, caches, cfg, body)
     logits = lm_logits(params, x, cfg)
     return logits[:, 0], caches
 
@@ -297,7 +336,7 @@ def prefill_paged_fn(params: Params, tokens: Array, cfg: ModelConfig,
                                         page_row=page_row, true_len=true_len)
         return h, cache
 
-    x, caches = jax.lax.scan(body, x, (params["layers"], caches))
+    x, caches = _scan_segments(params, x, caches, cfg, body)
     last = jax.lax.dynamic_slice_in_dim(x, true_len - 1, 1, axis=1)
     logits = lm_logits(params, last, cfg)
     return logits[:, 0], caches
@@ -316,6 +355,6 @@ def decode_paged_fn(params: Params, caches, token: Array, page_table: Array,
                                        page_table=page_table, active=active)
         return h, cache
 
-    x, caches = jax.lax.scan(body, x, (params["layers"], caches))
+    x, caches = _scan_segments(params, x, caches, cfg, body)
     logits = lm_logits(params, x, cfg)
     return logits[:, 0], caches

@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,7 +29,7 @@ from repro.distributed import ctx
 from repro.distributed import sharding as shd
 from repro.models.registry import Model
 from repro.serve.scheduler import Request, Scheduler
-from repro.utils import cdiv, pow2_bucket
+from repro.utils import cdiv, pow2_bucket, tree_bytes as _tree_bytes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,13 +116,11 @@ class ServeEngine:
             "decode_s": t_decode,
             "tokens_per_s": b * n_dec / max(t_decode, 1e-9),
             "cache_bytes": _tree_bytes(state),
+            "cache_bytes_per_layer": (
+                self.model.cache_layer_bytes(state)
+                if self.model.cache_layer_bytes else None),
         }
 
-
-def _tree_bytes(tree: Any) -> int:
-    return sum(x.size * x.dtype.itemsize
-               for x in jax.tree_util.tree_leaves(tree)
-               if hasattr(x, "dtype"))
 
 
 # ---------------------------------------------------------------------------
@@ -157,7 +155,9 @@ class ContinuousBatchingEngine:
         self.params = params
         self.mesh = mesh
         self.rules = rules
-        g = model.cfg.quant.group_size
+        # page == quantization group: every layer of the policy must agree
+        # on the group size (bit-widths/methods may differ per layer)
+        g = model.cfg.policy.page_group_size()
         pages_per_slot = cdiv(max_len, g)
         if num_pages is None:
             num_pages = max_slots * pages_per_slot
@@ -342,4 +342,7 @@ class ContinuousBatchingEngine:
             else 0.0,
             "mean_page_utilization": float(np.mean(util)) if util else 0.0,
             "cache_bytes": _tree_bytes(state),
+            "cache_bytes_per_layer": (
+                self.model.cache_layer_bytes(state)
+                if self.model.cache_layer_bytes else None),
         }

@@ -1,11 +1,15 @@
 """Continuous-batching engine: staggered admission, EOS reclamation,
-greedy parity with the static engine, oversubscription + preemption."""
+greedy parity with the static engine, oversubscription + preemption,
+per-layer mixed-precision cache policies."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import get_config, reduce_for_smoke
+from repro.core import CachePolicy
 from repro.models import get_model
 from repro.serve import (
     ContinuousBatchingEngine, GenerationConfig, Request, ServeEngine,
@@ -96,6 +100,48 @@ def test_page_reuse_across_requests(smoke_model):
     out = eng.run(reqs, GenerationConfig())
     assert len(out["requests"]) == 5
     assert all(r.done_tokens == r.max_new_tokens for r in out["requests"])
+
+
+def test_mixed_policy_generates_with_per_layer_bytes(smoke_model):
+    """KVTuner-style mixed precision (layer 0 at int8, rest at polar 4+4)
+    generates end-to-end under continuous batching; the engine reports
+    per-layer cache bytes from the segmented paged state."""
+    cfg, m, params = smoke_model
+    policy = CachePolicy.first_k(
+        1, dataclasses.replace(cfg.quant, method="int", key_bits=8),
+        dataclasses.replace(cfg.quant, method="polar", rho_bits=4,
+                            theta_bits=4))
+    cfg_m = dataclasses.replace(cfg, cache_policy=policy)
+    # params are policy-independent: reuse the smoke model's weights
+    eng = ContinuousBatchingEngine(get_model(cfg_m), params, max_slots=2,
+                                   max_len=128)
+    reqs = _requests(cfg, 4)
+    out = eng.run(reqs, GenerationConfig())
+    assert len(out["requests"]) == 4
+    assert all(r.done_tokens == r.max_new_tokens for r in out["requests"])
+    per_layer = out["cache_bytes_per_layer"]
+    assert len(per_layer) == cfg.num_layers
+    # the int8 layer's pool is laid out differently from the polar layers'
+    assert per_layer[0] != per_layer[1]
+    assert sum(per_layer) == out["cache_bytes"]
+
+
+def test_uniform_policy_matches_plain_quant(smoke_model):
+    """An explicit uniform CachePolicy is the same engine configuration as
+    the classic cfg.quant path (greedy token parity)."""
+    cfg, m, params = smoke_model
+    cfg_p = dataclasses.replace(cfg,
+                                cache_policy=CachePolicy.uniform(cfg.quant))
+    rng = np.random.default_rng(7)
+    prompt = rng.integers(0, cfg.vocab_size, (21,)).astype(np.int32)
+    outs = []
+    for model in (m, get_model(cfg_p)):
+        eng = ContinuousBatchingEngine(model, params, max_slots=2,
+                                       max_len=128)
+        out = eng.run([Request(rid=0, prompt=prompt, max_new_tokens=8)],
+                      GenerationConfig(max_new_tokens=8))
+        outs.append(out["requests"][0].out_tokens)
+    assert outs[0] == outs[1]
 
 
 def test_oversubscribed_pool_preempts_and_completes(smoke_model):

@@ -96,7 +96,7 @@ def test_cache_memory_footprint():
     B, H, d, T = 4, 4, 128, 4096
     c_fp = init_cache(QuantConfig(method="none"), B, H, d, T)
     c_pq = init_cache(QuantConfig(method="polar", group_size=128), B, H, d, T)
-    key_fp = c_fp.key_fp.size * 2
+    key_fp = c_fp.key_codes.size * 2  # fp passthrough stores keys in key_codes
     key_pq = (c_pq.key_codes.size
               + sum(a.size * 4 for a in c_pq.key_scales.values())
               + c_pq.key_residual.size * 2)

@@ -162,13 +162,30 @@ def test_values_roundtrip():
 
 def test_bits_accounting():
     cfg = QuantConfig(method="polar", rho_bits=4, theta_bits=4, group_size=128)
-    assert abs(cfg.key_bits_per_element - 4.25) < 1e-6
+    assert abs(cfg.key_bits_per_element(128) - 4.25) < 1e-6
     cfg33 = QuantConfig(method="polar", rho_bits=3, theta_bits=3, group_size=128)
-    assert abs(cfg33.key_bits_per_element - 3.25) < 1e-6
+    assert abs(cfg33.key_bits_per_element(128) - 3.25) < 1e-6
     kivi = QuantConfig(method="kivi", key_bits=4, group_size=128)
-    assert abs(kivi.key_bits_per_element - 4.25) < 1e-6
+    assert abs(kivi.key_bits_per_element(128) - 4.25) < 1e-6
     kivi32 = QuantConfig(method="kivi", key_bits=4, group_size=32)
-    assert abs(kivi32.key_bits_per_element - 5.0) < 1e-6
+    assert abs(kivi32.key_bits_per_element(32) - 5.0) < 1e-6
+
+
+def test_bits_accounting_uses_actual_head_dim():
+    """Int-N per-token stats amortize over the real head_dim, not a
+    hardcoded d=128 (the seed bug)."""
+    cfg = QuantConfig(method="int", key_bits=4)
+    assert abs(cfg.key_bits_per_element(128) - (4 + 32 / 128)) < 1e-6
+    assert abs(cfg.key_bits_per_element(64) - (4 + 32 / 64)) < 1e-6
+    assert abs(cfg.key_bits_per_element(32) - 5.0) < 1e-6
+    # grouped stats don't depend on head_dim
+    polar = QuantConfig(method="polar", rho_bits=4, theta_bits=4,
+                        group_size=128)
+    assert polar.key_bits_per_element(32) == polar.key_bits_per_element(128)
+    # the fixed theta grid drops the per-group theta stats
+    fixed = QuantConfig(method="polar", rho_bits=4, theta_bits=4,
+                        group_size=128, theta_stats="fixed")
+    assert fixed.key_bits_per_element(128) < polar.key_bits_per_element(128)
 
 
 @settings(max_examples=25, deadline=None)
