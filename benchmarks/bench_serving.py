@@ -20,6 +20,7 @@ Run (CPU):  PYTHONPATH=src python benchmarks/bench_serving.py
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -101,7 +102,53 @@ def run_static(model, params, requests: list[Request], slots: int,
             "p50_latency_s": pct(50), "p99_latency_s": pct(99)}
 
 
-def main():
+def _strip_requests(r: dict) -> dict:
+    """JSON-serializable copy of an engine result dict (drops the Request
+    objects; everything else is plain numbers/lists)."""
+    return {k: v for k, v in r.items() if k != "requests"}
+
+
+def run_cb(cfg, params, args, *, backend: str, max_len: int,
+           table_slicing: bool = True) -> dict:
+    """One continuous-batching arm at a decode backend + pool capacity."""
+    model = get_model(dataclasses.replace(cfg, decode_backend=backend))
+    eng = ContinuousBatchingEngine(
+        model, params, max_slots=args.slots, max_len=max_len,
+        num_pages=args.num_pages or None, table_slicing=table_slicing)
+    wl = make_workload(args.requests, args.rate, args.seed,
+                       args.prompt_lo, args.prompt_hi,
+                       args.out_lo, args.out_hi)
+    # include the capacity bucket: preemption-resume prefills the full
+    # context, which can land above any prompt bucket
+    eng.warmup([r.prompt_len for r in wl] + [max_len])
+    res = eng.run(wl, GenerationConfig())
+    res["max_len"] = max_len
+    res["table_slicing"] = table_slicing
+    return res
+
+
+def run_context_sweep(cfg, params, args) -> list[dict]:
+    """Decode-step latency vs pool capacity: the gathered baseline
+    (PR-2 formulation: full-width table + gather_view copy) against the
+    page-native path. The workload's live context is fixed, so a flat
+    paged-fused line across the sweep is the "no full-cache gather"
+    signature; the gathered baseline grows with capacity."""
+    arms = []
+    for max_len in args.sweep:
+        for backend, slicing in (("gathered", False), ("paged_fused", True)):
+            r = run_cb(cfg, params, args, backend=backend, max_len=max_len,
+                       table_slicing=slicing)
+            arm = _strip_requests(r)
+            arm["arm"] = ("gathered_baseline" if backend == "gathered"
+                          else "paged_fused")
+            arms.append(arm)
+            print(f"  sweep max_len={max_len:5d} {arm['arm']:17s} "
+                  f"decode_step={r['decode_step_s_mean'] * 1e3:8.2f}ms "
+                  f"tok/s={r['tokens_per_s']:8.1f}")
+    return arms
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--requests", type=int, default=24)
@@ -116,42 +163,50 @@ def main():
     ap.add_argument("--out-lo", type=int, default=4)
     ap.add_argument("--out-hi", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--backend", default="jnp",
+    ap.add_argument("--backend", default="paged_fused",
                     help="decode backend for the paged path "
-                         "(jnp|ref|interpret|pallas)")
-    args = ap.parse_args()
+                         "(jnp|gathered|paged_fused|ref|interpret|pallas)")
+    ap.add_argument("--sweep", default="",
+                    help="comma-separated max_len sweep for the "
+                         "decode-step-vs-context scaling arms (e.g. "
+                         "'512,2048,4096'; empty = skip)")
+    ap.add_argument("--json", default="",
+                    help="write machine-readable results to this path")
+    args = ap.parse_args(argv)
+    args.sweep = [int(x) for x in args.sweep.split(",") if x]
 
-    import dataclasses
     cfg = reduce_for_smoke(get_config(args.arch))
-    cfg = dataclasses.replace(cfg, decode_backend=args.backend)
-    model = get_model(cfg)
+    # the static arm shares the requested backend (dense path normalizes
+    # the paged dispatch names), keeping the cb-vs-static speedup apples
+    # to apples
+    model = get_model(dataclasses.replace(cfg, decode_backend=args.backend))
     params = model.init(jax.random.PRNGKey(0))
-
-    def fresh():
-        return make_workload(args.requests, args.rate, args.seed,
-                             args.prompt_lo, args.prompt_hi,
-                             args.out_lo, args.out_hi)
 
     print(f"# arch={cfg.name} quant={cfg.quant.method} "
           f"backend={args.backend} slots={args.slots} "
           f"requests={args.requests} rate={args.rate}/s")
 
-    # --- continuous batching ---
-    cb = ContinuousBatchingEngine(
-        model, params, max_slots=args.slots, max_len=args.max_len,
-        num_pages=args.num_pages or None)
-    wl = fresh()
-    cb.warmup([r.prompt_len for r in wl] + [args.max_len])
-    res_cb = cb.run(wl, GenerationConfig())
+    # --- continuous batching (requested backend + gathered baseline) ---
+    res_cb = run_cb(cfg, params, args, backend=args.backend,
+                    max_len=args.max_len)
+    # the PR-2 formulation: gather_view copy + dense fused kernel over the
+    # full-width table — isolates the structural gather-removal win
+    res_base = run_cb(cfg, params, args, backend="gathered",
+                      max_len=args.max_len, table_slicing=False)
 
     # --- static baseline ---
-    res_st = run_static(model, params, fresh(), args.slots, args.max_len)
+    res_st = run_static(model, params,
+                        make_workload(args.requests, args.rate, args.seed,
+                                      args.prompt_lo, args.prompt_hi,
+                                      args.out_lo, args.out_hi),
+                        args.slots, args.max_len)
 
     def row(name, r):
         extra = ""
         if "mean_page_utilization" in r:
             extra = (f" util={r['mean_page_utilization']:.2f}"
                      f" active={r['mean_active_slots']:.2f}"
+                     f" dstep={r['decode_step_s_mean'] * 1e3:.2f}ms"
                      f" preempt={sum(q.preemptions for q in r['requests'])}")
         print(f"{name:12s} tokens={r['total_tokens']:5d} "
               f"wall={r['wall_s']:7.3f}s "
@@ -159,10 +214,40 @@ def main():
               f"p50={r['p50_latency_s']:6.3f}s "
               f"p99={r['p99_latency_s']:6.3f}s{extra}")
 
-    row("continuous", res_cb)
+    row(f"cb/{args.backend}", res_cb)
+    row("cb/gathered", res_base)
     row("static", res_st)
     speedup = res_cb["tokens_per_s"] / max(res_st["tokens_per_s"], 1e-9)
-    print(f"speedup(tokens/s) = {speedup:.2f}x")
+    print(f"speedup(tokens/s cb vs static) = {speedup:.2f}x")
+    fused_speedup = res_cb["tokens_per_s"] / max(res_base["tokens_per_s"],
+                                                 1e-9)
+    print(f"speedup(tokens/s {args.backend} vs gathered) = "
+          f"{fused_speedup:.2f}x")
+
+    sweep = run_context_sweep(cfg, params, args) if args.sweep else []
+
+    if args.json:
+        import json
+        payload = {
+            "arch": cfg.name,
+            "quant": cfg.quant.method,
+            "backend": args.backend,
+            "workload": {
+                "requests": args.requests, "rate": args.rate,
+                "slots": args.slots, "max_len": args.max_len,
+                "prompt": [args.prompt_lo, args.prompt_hi],
+                "out": [args.out_lo, args.out_hi], "seed": args.seed,
+            },
+            "continuous": _strip_requests(res_cb),
+            "gathered_baseline": _strip_requests(res_base),
+            "static": _strip_requests(res_st),
+            "speedup_cb_vs_static": speedup,
+            "speedup_fused_vs_gathered": fused_speedup,
+            "context_sweep": sweep,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
     return 0 if speedup > 1.0 else 1
 
 

@@ -18,7 +18,18 @@ def main() -> None:
     from benchmarks import (bench_bitwidth, bench_eviction_compat,
                             bench_group_size, bench_kernel_latency,
                             bench_kv_sensitivity, bench_quant_error,
-                            bench_throughput, roofline)
+                            bench_serving, bench_throughput, roofline)
+
+    def serving_json():
+        """Small serving run + context sweep -> BENCH_serving.json, so the
+        decode-step perf trajectory is tracked across PRs."""
+        rc = bench_serving.main([
+            "--requests", "10", "--slots", "3", "--max-len", "192",
+            "--out-lo", "4", "--out-hi", "24",
+            "--sweep", "192,512,2048", "--json", "BENCH_serving.json"])
+        if rc:
+            raise RuntimeError(
+                "continuous batching lost to the static baseline")
 
     suites = [
         ("quant_error(T1)", bench_quant_error.run),
@@ -30,6 +41,7 @@ def main() -> None:
         ("bitwidth_mixed(KVTuner)", bench_bitwidth.run_mixed_policies),
         ("kv_sensitivity(T7/T9)", bench_kv_sensitivity.run),
         ("eviction(T8)", bench_eviction_compat.run),
+        ("serving(CB/paged-fused)", serving_json),
         ("roofline(dryrun)", roofline.run),
     ]
     failures = 0

@@ -1,0 +1,44 @@
+#!/usr/bin/env bash
+# Guard the serve decode hot path against regressing to the gathered
+# formulation. `gather_view` re-materializes a dense O(capacity) copy of
+# every slot's cache — it is kept ONLY as the parity reference and the
+# fallback for codecs without a page-native kernel. The hot path must go
+# through codec.paged_decode (kernels/paged_decode.py walks the page
+# table in place), so:
+#
+#   * kernels/, models/, serve/, launch/ must not reference gather_view
+#     at all (they dispatch through paged_decode_attention);
+#   * inside core/, gather_view may only be *called* from its own
+#     definition or the explicitly-named gathered fallback
+#     (gathered_decode_attention).
+set -u
+cd "$(dirname "$0")/.."
+
+fail=0
+
+hot=$(grep -rn 'gather_view(' src/repro/kernels src/repro/models \
+      src/repro/serve src/repro/launch --include='*.py' 2>/dev/null || true)
+if [ -n "$hot" ]; then
+    echo "ERROR: serve decode hot path references gather_view — route" >&2
+    echo "through paged_decode_attention / codec.paged_decode instead:" >&2
+    echo "$hot" >&2
+    fail=1
+fi
+
+core=$(awk '
+    FNR == 1 { fn = "" }
+    /^[ \t]*def [A-Za-z_]+/ { fn = $2; sub(/\(.*/, "", fn) }
+    /gather_view\(/ {
+        if (fn !~ /^(gather_view|gathered_decode_attention)$/)
+            print FILENAME ":" FNR ": " $0
+    }
+' src/repro/core/*.py)
+if [ -n "$core" ]; then
+    echo "ERROR: gather_view called outside its definition or the" >&2
+    echo "designated gathered_decode_attention fallback:" >&2
+    echo "$core" >&2
+    fail=1
+fi
+
+[ "$fail" -eq 0 ] || exit 1
+echo "no-gather decode hot path check OK (page-native dispatch intact)"

@@ -66,7 +66,13 @@ class ModelConfig:
     cache_policy: Optional[CachePolicy] = None
     # decode-attention backend: "jnp" = pure-jnp masked softmax over the
     # cache; "ref"|"interpret"|"pallas" route the polar policy through the
-    # fused LUT flash-decode kernel (kernels.ops.polar_decode_attention_full)
+    # fused LUT flash-decode kernels at that execution mode. Paged decode
+    # additionally accepts "paged_fused" (page-native: walk the page table
+    # and read quantized pages in place — the serving hot path; resolved in
+    # paged_cache.paged_decode_attention to the Pallas grid on TPU and the
+    # jitted jnp page walk elsewhere) and "gathered" (dense gather_view +
+    # fused kernel, the pre-page-native formulation kept for A/B). See
+    # core.paged_cache.PAGED_BACKENDS.
     decode_backend: str = "jnp"
 
     def __post_init__(self):

@@ -17,8 +17,9 @@ from repro.core.cache_layout import (  # noqa: F401
     LinearLayout, RingLayout, PagedLayout, PageAllocator,
 )
 from repro.core.paged_cache import (  # noqa: F401
-    PagedKVCache, init_paged_cache, paged_prefill, paged_append,
-    gather_view, paged_decode_attention,
+    PAGED_BACKENDS, PagedKVCache, init_paged_cache, paged_prefill,
+    paged_append, gather_view, gathered_decode_attention,
+    paged_decode_attention,
 )
 from repro.core.attention import flash_attention, reference_attention  # noqa: F401
 from repro.core.lut import lut_qk_scores, dequant_qk_scores, build_angle_table  # noqa: F401

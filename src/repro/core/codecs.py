@@ -15,6 +15,9 @@ bits accounting         :meth:`KeyCodec.bits_per_element` (payload + stats
                         overhead at the *actual* head_dim)
 fused decode kernel     :meth:`KeyCodec.fused_decode` where
                         ``supports_fused_decode`` is True
+paged fused decode      :meth:`KeyCodec.paged_decode` — page-native kernel
+                        where ``supports_paged_decode`` is True, gathered
+                        fallback otherwise
 =====================  ======================================================
 
 The cache layers (``kv_cache.py`` dense/ring, ``paged_cache.py`` pools) own
@@ -94,6 +97,7 @@ class KeyCodec:
     grouped: bool = False            # codes carry (G, g) axes + fp residual
     quantizes: bool = True           # False => fp passthrough
     supports_fused_decode: bool = False
+    supports_paged_decode: bool = False   # page-native fused decode kernel
 
     # -- accounting ---------------------------------------------------------
 
@@ -154,6 +158,21 @@ class KeyCodec:
                      backend: str) -> Array:
         raise NotImplementedError(
             f"codec {self.name!r} has no fused decode kernel")
+
+    # -- paged fused decode (optional capability) ---------------------------
+
+    def paged_decode(self, cache, q: Array, page_table: Array, *,
+                     scale: Optional[float], backend: str) -> Array:
+        """Decode attention of q (S, Hq, d) straight off a paged cache.
+
+        Codecs with a page-table-walking kernel (``supports_paged_decode``)
+        override this to read quantized pages in place. The default is the
+        gathered fallback: materialize the dense per-slot view and reuse
+        the dense decode path (the pre-page-native formulation, kept as
+        the reference)."""
+        from repro.core import paged_cache as pgc  # cache layer; no cycle
+        return pgc.gathered_decode_attention(cache, q, page_table,
+                                             scale=scale, backend=backend)
 
 
 # ---------------------------------------------------------------------------
@@ -316,6 +335,7 @@ class PolarCodec(_GroupedCodec):
 
     name = "polar"
     supports_fused_decode = True
+    supports_paged_decode = True
 
     def bits_per_element(self, cfg, head_dim):
         payload = (cfg.rho_bits + cfg.theta_bits) / 2.0
@@ -372,6 +392,22 @@ class PolarCodec(_GroupedCodec):
             cache.value_zero if quant_v else None,
             cache.length, r_bits=cfg.rho_bits, t_bits=cfg.theta_bits,
             softmax_scale=scale, backend=backend)
+
+    def paged_decode(self, cache, q, page_table, *, scale, backend):
+        # page-native hot path: the kernel walks the page table and reads
+        # codes/stats/values in place — no gathered dense copy
+        from repro.kernels import ops
+        cfg = cache.cfg
+        sc = cache.key_scales
+        quant_v = cfg.value_bits > 0
+        return ops.polar_paged_decode_attention_full(
+            q, cache.key_codes, sc["rho_scale"], sc["rho_zero"],
+            sc["theta_scale"], sc["theta_zero"], cache.key_residual,
+            cache.value_codes if quant_v else cache.value_fp,
+            cache.value_scale if quant_v else None,
+            cache.value_zero if quant_v else None,
+            page_table, cache.lengths, r_bits=cfg.rho_bits,
+            t_bits=cfg.theta_bits, softmax_scale=scale, backend=backend)
 
 
 register_codec(NoneCodec())

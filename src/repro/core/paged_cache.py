@@ -23,10 +23,14 @@ is the masked-write scratch page, ``S`` = slots, ``N`` = pages_per_slot,
 The invariant mirrors the dense cache: value rows for positions
 ``[0, len)`` live in pages (row ``pos % g`` of page ``table[pos // g]``),
 key codes for ``[0, flushed)`` live in pages, and keys of the partial
-group ``[flushed, len)`` live in the per-slot residual. ``gather_view``
-materializes a per-slot dense :class:`~repro.core.kv_cache.KVCache` view
-from the page table, so decode attention reuses the existing machinery —
-including the fused LUT flash-decode kernel — with per-slot lengths.
+group ``[flushed, len)`` live in the per-slot residual. Decode attention
+(``paged_decode_attention``) dispatches per codec: codecs with a
+page-native kernel (``supports_paged_decode``, e.g. polar) read their
+pages *in place* through the page table (``kernels/paged_decode.py``);
+the rest fall back to ``gather_view``, which materializes a per-slot
+dense :class:`~repro.core.kv_cache.KVCache` view so the dense decode
+machinery is reused unchanged — also the reference path the kernel is
+parity-tested against.
 
 Streaming parity: prefill rounds keys through ``cfg.residual_dtype``
 exactly like the dense cache, so paged and dense caches produce
@@ -252,7 +256,10 @@ def paged_append(cache: PagedKVCache, k_new: Array, v_new: Array,
     g = lay.page_size
     scratch = lay.scratch_page
     pos = cache.lengths                       # (S,)
-    gidx = jnp.minimum(pos // g, lay.pages_per_slot - 1)
+    # clamp to the table width: the engines may pass a width-sliced table
+    # covering only the live pages; inactive slots whose stale position
+    # exceeds it are redirected to scratch below anyway
+    gidx = jnp.minimum(pos // g, page_table.shape[1] - 1)
     page = jnp.take_along_axis(page_table, gidx[:, None], axis=1)[:, 0]
     page = jnp.where(active, page, scratch)   # (S,)
     row = pos % g                             # (S,)
@@ -312,8 +319,12 @@ def gather_view(cache: PagedKVCache, page_table: Array) -> kvc.KVCache:
     Returns a :class:`KVCache` with batch == slots, ``length`` (S,) —
     consumable by ``kv_cache.decode_attention`` (batched masks) and
     ``kv_cache.fused_decode_attention`` (per-slot kernel lengths).
-    Unassigned table entries gather the scratch page; their tokens sit
-    beyond the slot's length and are masked out.
+    Unassigned table entries (pointing at the scratch page, or out of
+    pool range) are masked at *page* granularity: their gathered pages
+    are zeroed before any scoring, so stale masked-write garbage on the
+    scratch page can never leak through a zero-probability lane
+    (``0 * NaN``) — length masking downstream stays a correctness
+    guarantee, not the only line of defense.
     """
     cfg = cache.cfg
     lay = cache.layout
@@ -321,27 +332,33 @@ def gather_view(cache: PagedKVCache, page_table: Array) -> kvc.KVCache:
     g = lay.page_size
     t_cap = n * g
     key_residual = None
+    # (S, N) page-validity mask: real pool pages only
+    pvalid = (page_table >= 0) & (page_table < lay.num_pages)
+
+    def masked(x):  # zero gathered pages of unassigned table entries
+        gathered = _gather_pages(x, page_table)        # (S, H, N, a, b)
+        return jnp.where(pvalid[:, None, :, None, None], gathered,
+                         jnp.zeros((), x.dtype))
 
     def flat_tokens(x):  # (S, H, N, g, ·) -> (S, H, N*g, ·)
         return x.reshape(x.shape[0], x.shape[1], t_cap, x.shape[-1])
 
     if cache.grouped:
-        key_codes = _gather_pages(cache.key_codes, page_table)
-        key_scales = {k: _gather_pages(v, page_table)
-                      for k, v in cache.key_scales.items()}
+        key_codes = masked(cache.key_codes)
+        key_scales = {k: masked(v) for k, v in cache.key_scales.items()}
         key_residual = cache.key_residual
     else:
-        key_codes = flat_tokens(_gather_pages(cache.key_codes, page_table))
-        key_scales = {k: flat_tokens(_gather_pages(v, page_table))
+        key_codes = flat_tokens(masked(cache.key_codes))
+        key_scales = {k: flat_tokens(masked(v))
                       for k, v in cache.key_scales.items()}
 
     value_codes = value_scale = value_zero = value_fp = None
     if cfg.value_bits > 0:
-        value_codes = flat_tokens(_gather_pages(cache.value_codes, page_table))
-        value_scale = flat_tokens(_gather_pages(cache.value_scale, page_table))
-        value_zero = flat_tokens(_gather_pages(cache.value_zero, page_table))
+        value_codes = flat_tokens(masked(cache.value_codes))
+        value_scale = flat_tokens(masked(cache.value_scale))
+        value_zero = flat_tokens(masked(cache.value_zero))
     else:
-        value_fp = flat_tokens(_gather_pages(cache.value_fp, page_table))
+        value_fp = flat_tokens(masked(cache.value_fp))
 
     return kvc.KVCache(key_codes=key_codes, key_scales=key_scales,
                        key_residual=key_residual,
@@ -351,16 +368,68 @@ def gather_view(cache: PagedKVCache, page_table: Array) -> kvc.KVCache:
                        layout=LinearLayout(t_cap))
 
 
-def paged_decode_attention(cache: PagedKVCache, q: Array, page_table: Array,
-                           scale: float | None = None,
-                           backend: str = "jnp") -> Array:
-    """Single-step attention of q (S, Hq, d) over all slots' pages.
+# Decode backends over a paged cache. "jnp" and "gathered" are the
+# reference formulations (dense per-slot copy via gather_view); the rest
+# run page-native where the codec supports it ("paged_fused" picks the
+# pure-jnp page walk — the fast jitted path on CPU; "ref"/"interpret"/
+# "pallas" select the kernel execution mode explicitly).
+PAGED_BACKENDS = ("jnp", "gathered", "paged_fused", "ref", "interpret",
+                  "pallas")
 
-    ``backend="jnp"`` uses the pure-jnp masked-softmax path;
-    ``ref|interpret|pallas`` route codecs with a fused kernel (polar)
-    through the fused flash-decode path (per-slot lengths).
+
+def gathered_decode_attention(cache: PagedKVCache, q: Array,
+                              page_table: Array, *,
+                              scale: float | None = None,
+                              backend: str = "jnp") -> Array:
+    """Reference/fallback decode path: materialize the dense per-slot view
+    (O(capacity) HBM copy) and reuse the dense decode machinery.
+
+    This is the pre-page-native formulation — kept as the parity oracle
+    for the page-walking kernel and as the fallback for codecs without a
+    page-native ``paged_decode``.
     """
     view = gather_view(cache, page_table)
     if backend == "jnp" or not cache.codec.supports_fused_decode:
         return kvc.decode_attention(view, q, scale=scale)
     return kvc.fused_decode_attention(view, q, scale=scale, backend=backend)
+
+
+def paged_decode_attention(cache: PagedKVCache, q: Array, page_table: Array,
+                           scale: float | None = None,
+                           backend: str = "jnp") -> Array:
+    """Single-step attention of q (S, Hq, d) over all slots' pages.
+
+    ``backend`` (see :data:`PAGED_BACKENDS`):
+
+    * ``"jnp"`` — gathered dense view + pure-jnp masked softmax (the
+      reference path).
+    * ``"gathered"`` — gathered dense view + the dense fused kernel
+      (the PR-2 hot path, kept for A/B benchmarking).
+    * ``"paged_fused"`` | ``"ref"`` | ``"interpret"`` | ``"pallas"`` —
+      page-native: the codec's ``paged_decode`` walks the page table and
+      reads quantized pages in place (``paged_fused`` resolves to the
+      jitted pure-jnp page walk; the others pick the kernel execution
+      mode). Codecs without the capability fall back to the gathered
+      reference automatically, so mixed per-layer policies take the fast
+      path segment by segment.
+
+    ``page_table`` may be width-sliced to the live pages (the engines
+    bucket it), shrinking the per-step read volume from O(capacity) to
+    O(live tokens).
+    """
+    if backend not in PAGED_BACKENDS:
+        raise ValueError(f"unknown paged decode backend {backend!r}; "
+                         f"expected one of {PAGED_BACKENDS}")
+    # platform-resolved execution mode for the dispatch names: the real
+    # Pallas kernels on TPU, the jitted jnp oracles elsewhere (interpret
+    # mode is far slower than the oracle on CPU and exists for kernel-body
+    # CI coverage) — both arms resolve the same way so A/B stays fair
+    resolved = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if backend in ("jnp", "gathered"):
+        kb = "jnp" if backend == "jnp" else resolved
+        return gathered_decode_attention(cache, q, page_table, scale=scale,
+                                         backend=kb)
+    if backend == "paged_fused":
+        backend = resolved
+    return cache.codec.paged_decode(cache, q, page_table, scale=scale,
+                                    backend=backend)

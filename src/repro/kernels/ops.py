@@ -24,6 +24,9 @@ from repro.kernels.polar_encode import polar_encode as _encode_pallas
 from repro.kernels.polar_attention import (
     polar_decode_attention_grouped as _attn_pallas,
 )
+from repro.kernels.paged_decode import (
+    polar_paged_decode_grouped as _paged_attn_pallas,
+)
 
 Array = jax.Array
 NEG_INF = -1e30
@@ -78,6 +81,23 @@ def polar_decode_attention_grouped(q, codes, rs, rz, ts, tz, values, vscale,
                         interpret=(backend == "interpret"))
 
 
+def polar_paged_decode_attention_grouped(q, codes, rs, rz, ts, tz, values,
+                                         vscale, vzero, page_table, flushed,
+                                         *, r_bits=4, t_bits=4,
+                                         backend: str = DEFAULT_BACKEND):
+    """Page-native fused flash-decode over the grouped segment: pool
+    buffers + page table in, flash partials out (no dense gather copy)."""
+    _check_backend(backend)
+    if backend == "ref":
+        return ref_mod.ref_polar_paged_decode_attention(
+            q, codes, rs, rz, ts, tz, values, vscale, vzero, page_table,
+            flushed, r_bits=r_bits, t_bits=t_bits)
+    return _paged_attn_pallas(q, codes, rs, rz, ts, tz, values, vscale,
+                              vzero, page_table, flushed, r_bits=r_bits,
+                              t_bits=t_bits,
+                              interpret=(backend == "interpret"))
+
+
 def merge_softmax_partials(parts: list[tuple[Array, Array, Array]]) -> Array:
     """Exactly merge flash partials [(acc, m, l), ...] -> normalized output.
 
@@ -92,6 +112,33 @@ def merge_softmax_partials(parts: list[tuple[Array, Array, Array]]) -> Array:
         acc_tot = acc_tot + acc * corr[..., None]
     l_safe = jnp.where(l_tot == 0.0, 1.0, l_tot)
     return acc_tot / l_safe[..., None]
+
+
+def _residual_flash_partials(q4: Array, key_residual: Array, n_res: Array,
+                             v_res: Array):
+    """Flash partials of the fp residual segment, shared by the dense and
+    paged full-decode entries.
+
+    q4: (B, Hkv, Qh, d) ALREADY scaled; key_residual: (B, Hkv, g, d);
+    n_res: (B,) tokens in the residual window; v_res: (B, Hkv, g, d) fp32
+    value rows for positions [flushed, flushed + g) — dead rows may hold
+    garbage (clamped gathers, scratch pages) and are zeroed under the
+    mask here, so ``p == 0`` lanes can never contribute ``0 * NaN``.
+    Returns (acc_r, m_r, l_r).
+    """
+    res = key_residual.astype(jnp.float32)
+    g = res.shape[2]
+    s_res = jnp.einsum("bhqd,bhgd->bhqg", q4, res)
+    slot = jnp.arange(g, dtype=jnp.int32)
+    mask = slot[None, None, None, :] < n_res[:, None, None, None]
+    s_res = jnp.where(mask, s_res, NEG_INF)
+    m_r = jnp.max(s_res, axis=-1)
+    p_r = jnp.where(mask, jnp.exp(s_res - m_r[..., None]), 0.0)
+    l_r = jnp.sum(p_r, axis=-1)
+    row_live = slot[None, :] < n_res[:, None]
+    v_res = jnp.where(row_live[:, None, :, None], v_res, 0.0)
+    acc_r = jnp.einsum("bhqg,bhgd->bhqd", p_r, v_res)
+    return acc_r, m_r, l_r
 
 
 def polar_decode_attention_full(
@@ -121,31 +168,66 @@ def polar_decode_attention_full(
         r_bits=r_bits, t_bits=t_bits, backend=backend,
         block_groups=block_groups)
 
-    # --- fp residual segment (positions [flushed, length)) ---
-    res = key_residual.astype(jnp.float32)                       # (B,Hkv,g,d)
-    s_res = jnp.einsum("bhqd,bhgd->bhqg", q4, res)
-    slot = jnp.arange(g, dtype=jnp.int32)
-    n_res = len_b - flushed                                      # (B,)
-    mask = slot[None, None, None, :] < n_res[:, None, None, None]
-    s_res = jnp.where(mask, s_res, NEG_INF)
-    m_r = jnp.max(s_res, axis=-1)
-    p_r = jnp.where(mask, jnp.exp(s_res - m_r[..., None]), 0.0)
-    l_r = jnp.sum(p_r, axis=-1)
     # residual V rows live token-major at [flushed, flushed + g) — gathered
     # per sequence (flushed differs across slots; clamp keeps the gather in
     # bounds when a full cache leaves no residual rows to read)
     t_cap = values.shape[2]
+    slot = jnp.arange(g, dtype=jnp.int32)
     rows = jnp.minimum(flushed[:, None] + slot[None, :], t_cap - 1)
     idx = rows[:, None, :, None]                                 # (B,1,g,1)
-    v_res = jnp.take_along_axis(values, idx, axis=2)
+    v_res = jnp.take_along_axis(values, idx, axis=2).astype(jnp.float32)
     if vscale is not None:
         vs_res = jnp.take_along_axis(vscale, idx, axis=2)
         vz_res = jnp.take_along_axis(vzero, idx, axis=2)
-        v_res = (v_res.astype(jnp.float32) * vs_res.astype(jnp.float32)
+        v_res = (v_res * vs_res.astype(jnp.float32)
                  + vz_res.astype(jnp.float32))
-    else:
-        v_res = v_res.astype(jnp.float32)
-    acc_r = jnp.einsum("bhqg,bhgd->bhqd", p_r, v_res)
+    acc_r, m_r, l_r = _residual_flash_partials(q4, key_residual,
+                                               len_b - flushed, v_res)
 
     out = merge_softmax_partials([(acc_g, m_g, l_g), (acc_r, m_r, l_r)])
     return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def polar_paged_decode_attention_full(
+    q: Array, codes, rs, rz, ts, tz, key_residual, values, vscale, vzero,
+    page_table: Array, lengths: Array, *, r_bits=4, t_bits=4,
+    softmax_scale: float | None = None, backend: str = DEFAULT_BACKEND,
+) -> Array:
+    """End-to-end page-native decode attention: grouped segment via the
+    page-table-walking kernel + fp residual segment, merged exactly.
+
+    q: (S, Hq, d); pools as in :func:`polar_paged_decode_attention_grouped`;
+    key_residual: (S, Hkv, g, d) per-slot partial group; page_table: (S, N)
+    int32 (N may be width-sliced to the live pages); lengths: (S,) int32
+    total tokens per slot. The residual's value rows live in the one page
+    currently being filled (``table[s, flushed // g]``, rows
+    ``[0, lengths - flushed)``), so the merge reads a single page per slot
+    instead of a dense token-major copy. Returns (S, Hq, d) in q.dtype.
+    """
+    s, hq, d = q.shape
+    hkv = codes.shape[1]
+    g = codes.shape[2]
+    qpk = hq // hkv
+    scale = d ** -0.5 if softmax_scale is None else softmax_scale
+    q4 = (q.astype(jnp.float32) * scale).reshape(s, hkv, qpk, d)
+    len_b = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (s,))
+    flushed = (len_b // g) * g                                   # (S,)
+
+    acc_g, m_g, l_g = polar_paged_decode_attention_grouped(
+        q4, codes, rs, rz, ts, tz, values, vscale, vzero, page_table,
+        flushed, r_bits=r_bits, t_bits=t_bits, backend=backend)
+
+    # residual V rows sit in the page being filled; empty slots clamp to
+    # table entry 0 (possibly scratch) and every row is masked below
+    gidx = jnp.minimum(flushed // g, page_table.shape[1] - 1)
+    pv = jnp.take_along_axis(page_table.astype(jnp.int32),
+                             gidx[:, None], axis=1)[:, 0]        # (S,)
+    v_res = values[pv].astype(jnp.float32)                       # (S,H,g,d)
+    if vscale is not None:
+        v_res = (v_res * vscale[pv].astype(jnp.float32)
+                 + vzero[pv].astype(jnp.float32))
+    acc_r, m_r, l_r = _residual_flash_partials(q4, key_residual,
+                                               len_b - flushed, v_res)
+
+    out = merge_softmax_partials([(acc_g, m_g, l_g), (acc_r, m_r, l_r)])
+    return out.reshape(s, hq, d).astype(q.dtype)

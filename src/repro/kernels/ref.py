@@ -74,5 +74,39 @@ def ref_polar_decode_attention(q, codes, rs, rz, ts, tz, values, length, *,
     p = jnp.exp(s - m[..., None])
     p = jnp.where(valid, p, 0.0)  # kill exp(NEG_INF - NEG_INF) rows
     l = jnp.sum(p, axis=-1)
-    out = jnp.einsum("bhqt,bhtd->bhqd", p, values.astype(jnp.float32))
+    # zero dead value rows too: p is exactly 0 there, but 0 * NaN (stale
+    # scratch-page garbage in gathered paged views) would poison the matmul
+    vmask = pos[None, :] < len_b[:, None]
+    values = jnp.where(vmask[:, None, :, None], values.astype(jnp.float32),
+                       0.0)
+    out = jnp.einsum("bhqt,bhtd->bhqd", p, values)
     return out, m, l
+
+
+def ref_polar_paged_decode_attention(q, codes, rs, rz, ts, tz, values,
+                                     vscale, vzero, page_table, flushed, *,
+                                     r_bits: int, t_bits: int):
+    """Page-native fused decode oracle: pool buffers + page table in,
+    flash partials out — same semantics as the Pallas page-walking kernel.
+
+    q: (S, Hkv, Qh, d) ALREADY scaled; codes: (PP, Hkv, g, P) page pool
+    with stats (PP, Hkv, 1, P); values: (PP, Hkv, g, d) fp rows or uint8
+    codes with vscale/vzero (PP, Hkv, g, 1); page_table: (S, N) int32
+    (possibly width-sliced); flushed: (S,) int32 grouped tokens per slot.
+
+    The oracle reads exactly the pages named by the table (a gather in
+    jnp, in-place block loads in the kernel) — never a dense copy of the
+    whole pool.
+    """
+    def pages(x):  # (PP, H, a, b) -> (S, H, N, a, b)
+        return x[page_table].transpose(0, 2, 1, 3, 4)
+
+    v = pages(values).astype(jnp.float32)
+    if vscale is not None:
+        v = v * pages(vscale).astype(jnp.float32) \
+            + pages(vzero).astype(jnp.float32)
+    s_, h = v.shape[:2]
+    v = v.reshape(s_, h, -1, v.shape[-1])                  # (S, H, N*g, d)
+    return ref_polar_decode_attention(
+        q, pages(codes), pages(rs), pages(rz), pages(ts), pages(tz), v,
+        flushed, r_bits=r_bits, t_bits=t_bits, softmax_scale=1.0)

@@ -35,6 +35,11 @@ def main(argv=None) -> int:
     ap.add_argument("--int8-layers", type=int, default=0,
                     help="mixed policy: run the first N layers at int8 "
                          "(KVTuner-style) and the rest at --quant")
+    ap.add_argument("--decode-backend", default="jnp",
+                    choices=["jnp", "gathered", "paged_fused", "ref",
+                             "interpret", "pallas"],
+                    help="decode-attention backend (paged_fused = "
+                         "page-native fused kernel on the paged path)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -54,7 +59,8 @@ def main(argv=None) -> int:
             args.int8_layers,
             dataclasses.replace(quant, method="int", key_bits=8),
             quant)
-    cfg = dataclasses.replace(cfg, quant=quant, cache_policy=policy)
+    cfg = dataclasses.replace(cfg, quant=quant, cache_policy=policy,
+                              decode_backend=args.decode_backend)
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
 

@@ -24,6 +24,13 @@ Array = jax.Array
 Params = dict
 
 
+def _dense_kernel_backend(backend: str) -> str:
+    """Map cfg.decode_backend onto a dense-path kernel backend: the paged
+    dispatch names ("paged_fused", "gathered") mean "the fast fused path"
+    there, which for the dense cache is the ref (pure-jnp) kernel."""
+    return "ref" if backend in ("paged_fused", "gathered") else backend
+
+
 def init_attention(key, cfg: ModelConfig, cross: bool = False) -> Params:
     d, hd = cfg.d_model, cfg.head_dim
     k1, k2, k3, k4 = jax.random.split(key, 4)
@@ -128,8 +135,9 @@ def attention_decode(params: Params, x: Array, cfg: ModelConfig,
             and window == 0):
         # fused kernel assumes linear placement — ring windows stay on the
         # jnp path
-        out = kvc.fused_decode_attention(cache, q[:, :, 0],
-                                         backend=cfg.decode_backend)
+        out = kvc.fused_decode_attention(
+            cache, q[:, :, 0],
+            backend=_dense_kernel_backend(cfg.decode_backend))
     else:
         out = kvc.decode_attention(cache, q[:, :, 0], window=window)
     return L.linear(out.reshape(b, 1, -1), params["wo"]), cache
@@ -173,10 +181,11 @@ def attention_decode_paged(params: Params, x: Array, cfg: ModelConfig,
     q = L.apply_rope(q, pos, cfg.rope_base, cfg.rope_ntk_scale)
     k = L.apply_rope(k, pos, cfg.rope_base, cfg.rope_ntk_scale)
     cache = pgc.paged_append(cache, k, v, page_table, active)
-    backend = (cfg.decode_backend if cache.codec.supports_fused_decode
-               else "jnp")
+    # codec-capability fallback happens inside paged_decode_attention:
+    # page-native where the codec supports it, gathered reference otherwise
+    # — so mixed per-layer policies pick the fast path per segment
     out = pgc.paged_decode_attention(cache, q[:, :, 0], page_table,
-                                     backend=backend)
+                                     backend=cfg.decode_backend)
     return L.linear(out.reshape(s, 1, -1), params["wo"]), cache
 
 

@@ -346,7 +346,13 @@ def decode_paged_fn(params: Params, caches, token: Array, page_table: Array,
                     active: Array, cfg: ModelConfig):
     """Batched decode step over all slots. token: (S,) int32 ->
     (logits (S, V), caches). Inactive slots produce don't-care logits and
-    leave their cache state untouched (lengths included)."""
+    leave their cache state untouched (lengths included).
+
+    ``page_table`` may be width-sliced to the live pages (the engine's
+    pow2 buckets): every layer segment — whichever codec its policy
+    assigns — addresses pages through the same sliced table, and each
+    segment's codec picks its own decode path (page-native where
+    supported, gathered fallback otherwise)."""
     x = embed_tokens(params, token[:, None], cfg)
 
     def body(h, xs):

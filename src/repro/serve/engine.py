@@ -60,7 +60,9 @@ class ServeEngine:
         self.mesh = mesh
         self.rules = rules
         self._prefill = jax.jit(model.prefill)
-        self._decode = jax.jit(model.decode)
+        # donate the decode state: cache buffers update in place instead of
+        # being copied every step (the state is rebound to the result)
+        self._decode = jax.jit(model.decode, donate_argnums=(1,))
         self._sample = jax.jit(_sample, static_argnames=("gen",))
 
     def _ctx(self):
@@ -143,11 +145,18 @@ class ContinuousBatchingEngine:
     The clock advances by measured device time, so reported latencies
     compose queueing + compute. Call :meth:`warmup` first to take jit
     compilation out of the measurements.
+
+    Decode-step cost scales with the *live* context, not the pool: the
+    page table ships width-sliced to the smallest pow2 bucket covering the
+    step's live pages (one compile per bucket, see :meth:`_step_width`),
+    and the decode state is donated so page pools update in place instead
+    of being copied every step.
     """
 
     def __init__(self, model: Model, params, *, max_slots: int = 4,
                  max_len: int = 256, num_pages: Optional[int] = None,
-                 mesh=None, rules: Optional[dict] = None):
+                 mesh=None, rules: Optional[dict] = None,
+                 table_slicing: bool = True):
         if model.decode_paged is None:
             raise ValueError(
                 f"family {model.cfg.family!r} has no paged decode path")
@@ -155,6 +164,10 @@ class ContinuousBatchingEngine:
         self.params = params
         self.mesh = mesh
         self.rules = rules
+        # table_slicing=False ships the full (S, pages_per_slot) table every
+        # step — the pre-width-bucketing behavior, kept as a benchmark
+        # baseline (decode cost then scales with pool capacity)
+        self.table_slicing = table_slicing
         # page == quantization group: every layer of the policy must agree
         # on the group size (bit-widths/methods may differ per layer)
         g = model.cfg.policy.page_group_size()
@@ -165,8 +178,35 @@ class ContinuousBatchingEngine:
                                   slots=max_slots,
                                   pages_per_slot=pages_per_slot)
         self._prefill = jax.jit(model.prefill_paged)
-        self._decode = jax.jit(model.decode_paged)
+        # donate the paged state: page pools update in place each step
+        self._decode = jax.jit(model.decode_paged, donate_argnums=(1,))
         self._sample = jax.jit(_sample, static_argnames=("gen",))
+
+    def _decode_widths(self) -> list[int]:
+        """Page-table width buckets the decode step compiles against:
+        powers of two capped at ``pages_per_slot``."""
+        n = self.layout.pages_per_slot
+        if not self.table_slicing:
+            return [n]
+        widths, w = [], 1
+        while w < n:
+            widths.append(w)
+            w *= 2
+        widths.append(n)
+        return widths
+
+    def _step_width(self, pages_needed: int) -> int:
+        """Smallest width bucket covering ``pages_needed`` live pages.
+
+        The decode step reads the page table only up to this width, so its
+        per-step cost scales with the *live* context of the current batch
+        — O(max live tokens) — instead of the pool capacity."""
+        if not self.table_slicing:
+            return self.layout.pages_per_slot
+        for w in self._decode_widths():
+            if w >= pages_needed:
+                return w
+        return self.layout.pages_per_slot
 
     def _ctx(self):
         if self.mesh is not None and self.rules is not None:
@@ -193,10 +233,11 @@ class ContinuousBatchingEngine:
                     jnp.zeros((), jnp.int32), sched.alloc.table()[0],
                     jnp.asarray(tp, jnp.int32))
                 jax.block_until_ready(self._sample(logits, key, gen))
-            logits, state = self._decode(
-                self.params, state, jnp.zeros((s,), jnp.int32),
-                sched.alloc.table(), jnp.zeros((s,), bool))
-            jax.block_until_ready(self._sample(logits, key, gen))
+            for w in self._decode_widths():
+                logits, state = self._decode(
+                    self.params, state, jnp.zeros((s,), jnp.int32),
+                    sched.alloc.table()[:, :w], jnp.zeros((s,), bool))
+                jax.block_until_ready(self._sample(logits, key, gen))
 
     def run(self, requests: list[Request],
             gen: GenerationConfig = GenerationConfig()) -> dict:
@@ -214,7 +255,7 @@ class ContinuousBatchingEngine:
         key = jax.random.PRNGKey(gen.seed)
         arrivals = deque(sorted(requests, key=lambda r: r.arrival_time))
         completed: list[Request] = []
-        util, active_hist = [], []
+        util, active_hist, step_times = [], [], []
         steps = 0
 
         def finish(slot: int):
@@ -300,15 +341,23 @@ class ContinuousBatchingEngine:
                     continue
                 mask = np.zeros((s,), bool)
                 mask[step_slots] = True
+                # width-slice the page table to the live pages of this
+                # step's batch: the decode step then reads O(live tokens)
+                # instead of O(pool capacity) (one compile per pow2 bucket)
+                w = self._step_width(
+                    max(int(lengths[sl]) // self.layout.page_size + 1
+                        for sl in step_slots))
                 t0 = time.monotonic()
                 logits, state = self._decode(
                     self.params, state, jnp.asarray(next_tok),
-                    sched.alloc.table(), jnp.asarray(mask))
+                    sched.alloc.table()[:, :w], jnp.asarray(mask))
                 key, sub = jax.random.split(key)
                 toks = np.asarray(
                     jax.block_until_ready(self._sample(logits, sub, gen)))
-                clock += time.monotonic() - t0
+                step_s = time.monotonic() - t0
+                clock += step_s
                 steps += 1
+                step_times.append(step_s)
                 util.append(sched.utilization())
                 active_hist.append(len(step_slots))
 
@@ -338,6 +387,11 @@ class ContinuousBatchingEngine:
             "p50_latency_s": pct(50),
             "p99_latency_s": pct(99),
             "decode_steps": steps,
+            "decode_step_s_mean": float(np.mean(step_times)) if step_times
+            else 0.0,
+            "decode_step_s_p50": float(np.median(step_times)) if step_times
+            else 0.0,
+            "decode_backend": self.model.cfg.decode_backend,
             "mean_active_slots": float(np.mean(active_hist)) if active_hist
             else 0.0,
             "mean_page_utilization": float(np.mean(util)) if util else 0.0,
