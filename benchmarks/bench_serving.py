@@ -55,6 +55,29 @@ def make_workload(n: int, rate: float, seed: int, prompt_lo: int,
     return reqs
 
 
+def make_shared_prefix_workload(n: int, rate: float, seed: int,
+                                prefix_len: int, suffix_lo: int,
+                                suffix_hi: int, out_lo: int,
+                                out_hi: int) -> list[Request]:
+    """The system-prompt workload: every request shares a ``prefix_len``
+    token prefix (one system prompt for the whole fleet) followed by a
+    short random user suffix — the regime where shared-prefix page reuse
+    converts the prompt-heavy part of prefill into free page adoption."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, 512, (prefix_len,)).astype(np.int32)
+    t = 0.0
+    reqs = []
+    for i in range(n):
+        t += rng.exponential(1.0 / rate)
+        suffix = rng.integers(0, 512, (int(rng.integers(
+            suffix_lo, suffix_hi + 1)),)).astype(np.int32)
+        reqs.append(Request(
+            rid=i, prompt=np.concatenate([shared, suffix]),
+            max_new_tokens=int(rng.integers(out_lo, out_hi + 1)),
+            arrival_time=t))
+    return reqs
+
+
 def run_static(model, params, requests: list[Request], slots: int,
                max_len: int) -> dict:
     """FCFS static batching on the dense-cache ServeEngine under the same
@@ -127,6 +150,53 @@ def run_cb(cfg, params, args, *, backend: str, max_len: int,
     return res
 
 
+def run_shared_prefix(cfg, params, args) -> dict:
+    """Shared-system-prompt A/B: prefix-cache reuse vs the no-reuse chunked
+    baseline on the same workload.
+
+    Both arms run identical chunked prefill (same chunk size), so reuse
+    must produce *bit-identical* greedy outputs — adopted pages hold the
+    same encoded bytes the baseline recomputes — while skipping the shared
+    prompt's prefill work and pool pages (the acceptance check for
+    DESIGN.md §12)."""
+    model = get_model(dataclasses.replace(cfg, decode_backend=args.backend))
+    wl = lambda: make_shared_prefix_workload(
+        args.requests, args.rate, args.seed, args.shared_prefix,
+        args.suffix_lo, args.suffix_hi, args.out_lo, args.out_hi)
+    arms = {}
+    for name, reuse in (("baseline", False), ("reuse", True)):
+        eng = ContinuousBatchingEngine(
+            model, params, max_slots=args.slots, max_len=args.max_len,
+            num_pages=args.num_pages or None, prefix_cache=reuse,
+            prefill_chunk=args.prefill_chunk)
+        eng.warmup([args.max_len])
+        arms[name] = eng.run(wl(), GenerationConfig())
+    base, reuse = arms["baseline"], arms["reuse"]
+    out_of = lambda r: {q.rid: list(q.out_tokens) for q in r["requests"]}
+    identical = out_of(base) == out_of(reuse)
+    saved_pages = reuse["adopted_pages"]
+    per_req_base = base["fresh_pages"] / max(args.requests, 1)
+    per_req_reuse = reuse["fresh_pages"] / max(args.requests, 1)
+    print(f"shared-prefix({args.shared_prefix} tok) "
+          f"hit={reuse['prefix_hit_rate'] * 100:5.1f}% "
+          f"skipped={reuse['prefill_tokens_skipped']:5d} tok "
+          f"pages/req {per_req_base:.1f}->{per_req_reuse:.1f} "
+          f"bytes-shared={reuse['prefix_pool_bytes_saved'] / 2**20:.2f}MiB "
+          f"bit-identical={identical}")
+    return {
+        "prefix_len": args.shared_prefix,
+        "prefill_chunk": reuse["prefill_chunk"],
+        "baseline": _strip_requests(base),
+        "reuse": _strip_requests(reuse),
+        "outputs_bit_identical": identical,
+        "prefill_tokens_skipped": reuse["prefill_tokens_skipped"],
+        "adopted_pages": saved_pages,
+        "prefix_pool_bytes_saved": reuse["prefix_pool_bytes_saved"],
+        "fresh_pages_per_request_baseline": per_req_base,
+        "fresh_pages_per_request_reuse": per_req_reuse,
+    }
+
+
 def run_context_sweep(cfg, params, args) -> list[dict]:
     """Decode-step latency vs pool capacity: the gathered baseline
     (PR-2 formulation: full-width table + gather_view copy) against the
@@ -170,6 +240,13 @@ def main(argv=None):
                     help="comma-separated max_len sweep for the "
                          "decode-step-vs-context scaling arms (e.g. "
                          "'512,2048,4096'; empty = skip)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="shared system-prompt length for the prefix-cache "
+                         "A/B arm (0 = skip)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="chunked-prefill size for the shared-prefix arms")
+    ap.add_argument("--suffix-lo", type=int, default=8)
+    ap.add_argument("--suffix-hi", type=int, default=32)
     ap.add_argument("--json", default="",
                     help="write machine-readable results to this path")
     args = ap.parse_args(argv)
@@ -225,6 +302,8 @@ def main(argv=None):
           f"{fused_speedup:.2f}x")
 
     sweep = run_context_sweep(cfg, params, args) if args.sweep else []
+    shared = (run_shared_prefix(cfg, params, args)
+              if args.shared_prefix else None)
 
     if args.json:
         import json
@@ -244,10 +323,13 @@ def main(argv=None):
             "speedup_cb_vs_static": speedup,
             "speedup_fused_vs_gathered": fused_speedup,
             "context_sweep": sweep,
+            "shared_prefix": shared,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"wrote {args.json}")
+    if shared is not None and not shared["outputs_bit_identical"]:
+        return 1   # prefix reuse must never change greedy outputs
     return 0 if speedup > 1.0 else 1
 
 

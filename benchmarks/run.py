@@ -26,10 +26,12 @@ def main() -> None:
         rc = bench_serving.main([
             "--requests", "10", "--slots", "3", "--max-len", "192",
             "--out-lo", "4", "--out-hi", "24",
-            "--sweep", "192,512,2048", "--json", "BENCH_serving.json"])
+            "--sweep", "192,512,2048", "--shared-prefix", "96",
+            "--json", "BENCH_serving.json"])
         if rc:
             raise RuntimeError(
-                "continuous batching lost to the static baseline")
+                "serving regression: continuous batching lost to the "
+                "static baseline, or prefix reuse changed greedy outputs")
 
     suites = [
         ("quant_error(T1)", bench_quant_error.run),

@@ -14,12 +14,13 @@ from repro.core.kv_cache import (  # noqa: F401
     fused_decode_attention,
 )
 from repro.core.cache_layout import (  # noqa: F401
-    LinearLayout, RingLayout, PagedLayout, PageAllocator,
+    LinearLayout, RingLayout, PagedLayout, PageAllocator, PrefixIndex,
+    token_page_hashes,
 )
 from repro.core.paged_cache import (  # noqa: F401
     PAGED_BACKENDS, PagedKVCache, init_paged_cache, paged_prefill,
-    paged_append, gather_view, gathered_decode_attention,
-    paged_decode_attention,
+    paged_append, chunk_prefill_attention, copy_pool_pages, gather_view,
+    gathered_decode_attention, paged_decode_attention, pool_page_bytes,
 )
 from repro.core.attention import flash_attention, reference_attention  # noqa: F401
 from repro.core.lut import lut_qk_scores, dequant_qk_scores, build_angle_table  # noqa: F401

@@ -26,11 +26,20 @@ steps and ships the updated page table to the device as a plain int32
 array. Unassigned entries point at the pool's *scratch page* (index
 ``num_pages``) so masked-out lanes of batched scatters land harmlessly
 there — no -1 special-casing inside kernels.
+
+Pages are *refcounted* (DESIGN.md §12): a page may be mapped into several
+slots' table rows at once (shared-prefix reuse — the encoded bytes are
+shared verbatim, never re-encoded) and additionally referenced by the
+:class:`PrefixIndex`, which keeps reclaimed prompt pages alive for future
+admissions. A page returns to the free list only when its last reference
+drops; writers must go through :meth:`PageAllocator.cow` (copy-on-write)
+before mutating a page whose refcount exceeds one.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
+import hashlib
+from collections import OrderedDict, deque
 
 import jax.numpy as jnp
 import numpy as np
@@ -131,15 +140,23 @@ class PagedLayout:
 
 
 class PageAllocator:
-    """Host-side free-list allocator over a :class:`PagedLayout`.
+    """Host-side refcounting free-list allocator over a :class:`PagedLayout`.
 
     Not a pytree: lives in the serving scheduler, mutates numpy state
     between jitted steps, and exposes the device-ready ``table``.
+
+    Reference semantics (DESIGN.md §12): every mapping of a page into a
+    slot's table row holds one reference, and external holders (the
+    :class:`PrefixIndex`) take references through :meth:`incref`. A page is
+    free iff its refcount is zero — :meth:`free_slot` *decrefs* rather than
+    frees, so pages shared with other slots or pinned by the prefix index
+    survive slot reclamation with their encoded bytes intact.
     """
 
     def __init__(self, layout: PagedLayout):
         self.layout = layout
         self._free: deque[int] = deque(range(layout.num_pages))
+        self._ref = np.zeros((layout.num_pages,), np.int32)
         self._table = np.full((layout.slots, layout.pages_per_slot),
                               layout.scratch_page, np.int32)
         self._owned: list[list[int]] = [[] for _ in range(layout.slots)]
@@ -158,13 +175,43 @@ class PageAllocator:
     def slot_pages(self, slot: int) -> int:
         return len(self._owned[slot])
 
+    def slot_page_ids(self, slot: int) -> list[int]:
+        """The slot's owned pages in table-row order (copy)."""
+        return list(self._owned[slot])
+
+    def page_at(self, slot: int, idx: int) -> int:
+        return self._owned[slot][idx]
+
     def can_alloc(self, count: int) -> bool:
         return len(self._free) >= count
 
+    def refcount(self, page: int) -> int:
+        return int(self._ref[page])
+
+    def incref(self, page: int) -> int:
+        """Take an external reference on an *allocated* page (prefix-index
+        pin). Returns the new count."""
+        if not 0 <= page < self.layout.num_pages:
+            raise ValueError(f"page {page} out of pool range")
+        if self._ref[page] == 0:
+            raise ValueError(f"incref on free page {page}")
+        self._ref[page] += 1
+        return int(self._ref[page])
+
+    def decref(self, page: int) -> int:
+        """Drop one reference; the page returns to the free list when the
+        count reaches zero. Returns the new count."""
+        if self._ref[page] <= 0:
+            raise ValueError(f"decref on free page {page} (double free)")
+        self._ref[page] -= 1
+        if self._ref[page] == 0:
+            self._free.append(page)
+        return int(self._ref[page])
+
     def alloc(self, slot: int, count: int = 1) -> bool:
-        """Append ``count`` pages to ``slot``'s table row. All-or-nothing:
-        returns False (state unchanged) when the pool or the slot's row
-        can't fit them."""
+        """Append ``count`` fresh pages (refcount 1) to ``slot``'s table
+        row. All-or-nothing: returns False (state unchanged) when the pool
+        or the slot's row can't fit them."""
         owned = self._owned[slot]
         if count > len(self._free):
             return False
@@ -172,16 +219,53 @@ class PageAllocator:
             return False
         for _ in range(count):
             page = self._free.popleft()
+            self._ref[page] = 1
             self._table[slot, len(owned)] = page
             owned.append(page)
         return True
 
-    def free_slot(self, slot: int) -> int:
-        """Return all of ``slot``'s pages to the free list; returns the
-        number reclaimed."""
+    def adopt(self, slot: int, pages: list[int]) -> bool:
+        """Map already-allocated ``pages`` into ``slot``'s table row at
+        refcount+1 (shared-prefix hit: the encoded bytes are shared
+        verbatim). All-or-nothing on row capacity; the pages must be live."""
         owned = self._owned[slot]
-        n = len(owned)
-        self._free.extend(owned)
+        if len(owned) + len(pages) > self.layout.pages_per_slot:
+            return False
+        for page in pages:
+            self.incref(page)
+            self._table[slot, len(owned)] = page
+            owned.append(page)
+        return True
+
+    def cow(self, slot: int, idx: int) -> tuple[int, int] | None:
+        """Copy-on-write split of ``slot``'s ``idx``-th page.
+
+        If the page is shared (refcount > 1), remap the row entry to a
+        fresh page and drop the old reference, returning ``(old, new)`` so
+        the caller can copy the pool bytes device-side before writing.
+        Returns None when the page is exclusively owned (no split needed).
+        Raises when the pool is dry — callers must check :meth:`can_alloc`
+        / reclaim first."""
+        page = self._owned[slot][idx]
+        if self._ref[page] <= 1:
+            return None
+        if not self._free:
+            raise RuntimeError("COW split with an empty pool")
+        new = self._free.popleft()
+        self._ref[new] = 1
+        self._owned[slot][idx] = new
+        self._table[slot, idx] = new
+        self.decref(page)
+        return page, new
+
+    def free_slot(self, slot: int) -> int:
+        """Drop ``slot``'s references; returns the number of pages whose
+        last reference this was (i.e. actually reclaimed)."""
+        owned = self._owned[slot]
+        n = 0
+        for page in owned:
+            if self.decref(page) == 0:
+                n += 1
         self._owned[slot] = []
         self._table[slot, :] = self.layout.scratch_page
         return n
@@ -192,3 +276,149 @@ class PageAllocator:
 
     def table_np(self) -> np.ndarray:
         return self._table.copy()
+
+
+# ---------------------------------------------------------------------------
+# Shared-prefix page index
+# ---------------------------------------------------------------------------
+
+
+def token_page_hashes(tokens: np.ndarray, page_size: int) -> list[bytes]:
+    """Chain hashes of ``tokens``, one per *full* page.
+
+    ``h[i]`` digests every token in ``[0, (i+1)*page_size)`` — not just
+    page ``i``'s own tokens — because a page's encoded bytes depend on the
+    whole token prefix through the transformer (causal attention below the
+    key projection). Two prompts may share page ``i`` only when they agree
+    on all tokens up to the end of that page, which the chain encodes.
+    """
+    toks = np.ascontiguousarray(np.asarray(tokens, np.int32))
+    out: list[bytes] = []
+    h = hashlib.sha1(str(page_size).encode())
+    for i in range(len(toks) // page_size):
+        h = h.copy()
+        h.update(toks[i * page_size:(i + 1) * page_size].tobytes())
+        out.append(h.digest())
+    return out
+
+
+class PrefixIndex:
+    """Content-hash index over encoded prompt pages (DESIGN.md §12).
+
+    Maps the chain hash of a token prefix (page granularity, see
+    :func:`token_page_hashes`) to the pool page holding that group's
+    encoded keys and value rows. Entries form a trie over chains: each
+    entry records its parent hash so eviction can stay *leaf-first* and
+    never strand reachable descendants.
+
+    The index holds one allocator reference per entry (taken via
+    ``alloc.incref`` at :meth:`register`), which is what keeps a finished
+    request's prompt pages alive for future admissions. Under pool
+    pressure :meth:`evict` drops least-recently-used leaf entries whose
+    page has no other holder (refcount == 1).
+
+    Page bytes are deterministic in (token prefix, group size, prefill
+    chunking): the index is built per engine run for one
+    ``(page_size, chunk_tokens)`` pair, so entries never mix encodings
+    from different chunk schedules or group sizes.
+    """
+
+    def __init__(self, layout: PagedLayout, chunk_tokens: int = 0):
+        self.layout = layout
+        self.chunk_tokens = int(chunk_tokens)
+        # hash -> (page, parent_hash | None); order == LRU (oldest first)
+        self._entries: "OrderedDict[bytes, tuple[int, bytes | None]]" = \
+            OrderedDict()
+        self._children: dict[bytes, int] = {}   # hash -> live child count
+        self.hits = 0
+        self.queries = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def pages(self) -> list[int]:
+        return [p for p, _ in self._entries.values()]
+
+    def match(self, tokens: np.ndarray, count: bool = True) -> list[int]:
+        """Pages of the longest indexed prefix of ``tokens`` (whole pages,
+        in position order; empty on a first-page miss). Touches matched
+        entries for LRU recency. ``count=False`` skips the query/hit
+        stats (repeated admission polls of the same queue head)."""
+        return self.match_hashes(
+            token_page_hashes(tokens, self.layout.page_size), count=count)
+
+    def match_hashes(self, hashes: list[bytes],
+                     count: bool = True) -> list[int]:
+        """:meth:`match` on precomputed chain hashes — callers that poll
+        repeatedly (the scheduler's admission loop) memoize the hashes,
+        which are pure in the tokens, while the page walk itself always
+        runs against the live index (eviction may drop entries between
+        polls)."""
+        if count:
+            self.queries += 1
+        pages: list[int] = []
+        for h in hashes:
+            ent = self._entries.get(h)
+            if ent is None:
+                break
+            pages.append(ent[0])
+            self._entries.move_to_end(h)
+        if count:
+            self.hits += bool(pages)
+        return pages
+
+    def register(self, tokens: np.ndarray, pages: list[int],
+                 alloc: PageAllocator) -> int:
+        """Index ``pages`` (the slot's table row prefix) under the chain
+        hashes of ``tokens``; takes one allocator reference per *newly*
+        indexed page. Existing entries win (first writer keeps the page —
+        equal chain hash means bit-identical bytes, so either copy serves).
+        Returns the number of new entries."""
+        new = 0
+        parent: bytes | None = None
+        for h, page in zip(token_page_hashes(tokens, self.layout.page_size),
+                           pages):
+            if h not in self._entries:
+                alloc.incref(page)
+                self._entries[h] = (page, parent)
+                self._children.setdefault(h, 0)
+                if parent is not None:
+                    self._children[parent] += 1
+                new += 1
+            self._entries.move_to_end(h)
+            parent = h
+        return new
+
+    def _drop(self, h: bytes, alloc: PageAllocator) -> None:
+        page, parent = self._entries.pop(h)
+        del self._children[h]
+        if parent is not None and parent in self._children:
+            self._children[parent] -= 1
+        alloc.decref(page)
+        self.evictions += 1
+
+    def drop_all(self, alloc: PageAllocator) -> None:
+        for h in list(self._entries):
+            self._drop(h, alloc)
+
+    def evict(self, alloc: PageAllocator, need: int,
+              keep: set[int] | None = None) -> int:
+        """Free up to ``need`` pages by dropping LRU *leaf* entries whose
+        page has no holder besides the index (refcount == 1) and is not in
+        ``keep`` (pages about to be adopted). Returns pages freed."""
+        keep = keep or set()
+        freed = 0
+        while freed < need:
+            victim = None
+            for h, (page, _) in self._entries.items():   # oldest first
+                if (self._children.get(h, 0) == 0 and page not in keep
+                        and alloc.refcount(page) == 1):
+                    victim = h
+                    break
+            if victim is None:
+                break
+            self._drop(victim, alloc)
+            freed += 1
+        return freed

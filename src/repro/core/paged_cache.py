@@ -152,16 +152,24 @@ def _scatter_rows(pool: Array, pages: Array, rows: Array,
 
 
 def paged_prefill(cache: PagedKVCache, slot: Array, page_row: Array,
-                  k: Array, v: Array, true_len: Array) -> PagedKVCache:
-    """Write one request's prompt into its assigned pages.
+                  k: Array, v: Array, true_len: Array,
+                  start: Array | int = 0) -> PagedKVCache:
+    """Write one request's prompt (or one prefill *chunk* of it) into its
+    assigned pages.
 
     k/v: (1, Hkv, Tp, d) post-RoPE, ``Tp`` a *static* bucket length
-    (multiple of the page size; the real prompt occupies the first
-    ``true_len`` tokens, the tail is padding). ``slot``: () int32 slot id;
+    (multiple of the page size; the real tokens occupy the first
+    ``true_len`` of it, the tail is padding). ``slot``: () int32 slot id;
     ``page_row``: (N,) int32 page-table row for the slot (entries beyond
-    the prompt's pages may be scratch). Pages whose group index is not
+    the written pages may be scratch). Pages whose group index is not
     fully/partially covered by real tokens are redirected to the scratch
     page, so padding never pollutes the pool.
+
+    ``start`` (page-aligned) writes the tokens at absolute positions
+    ``[start, start + true_len)`` — the chunked-prefill path: pages come
+    from ``page_row[start//g:]`` and the slot length lands at
+    ``start + true_len``. Callers must RoPE ``k`` at the absolute
+    positions. The classic whole-prompt call is ``start == 0``.
     """
     cfg = cache.cfg
     codec = cache.codec
@@ -173,10 +181,19 @@ def paged_prefill(cache: PagedKVCache, slot: Array, page_row: Array,
     npage = tp // g
     gi = jnp.arange(npage, dtype=jnp.int32)
     true_len = jnp.asarray(true_len, jnp.int32)
+    start = jnp.asarray(start, jnp.int32)
     nfull = true_len // g                     # fully-real key groups
     ntouch = -(-true_len // g)                # pages holding any real value
-    row_pages = page_row[:npage]
     scratch = lay.scratch_page
+    # pad with scratch before slicing: dynamic_slice CLAMPS an
+    # out-of-range start, so without padding a final chunk whose static
+    # window [start//g, start//g + npage) overruns the row would silently
+    # shift onto (and overwrite) earlier context pages. Real tokens never
+    # extend past the row — admission bounds the context — so the padded
+    # entries are only ever scratch-redirect targets.
+    padded_row = jnp.concatenate(
+        [page_row, jnp.full((max(npage - 1, 0),), scratch, page_row.dtype)])
+    row_pages = jax.lax.dynamic_slice_in_dim(padded_row, start // g, npage)
     updates: dict[str, Any] = {}
 
     # --- values: token-major rows of every touched page ---
@@ -222,15 +239,148 @@ def paged_prefill(cache: PagedKVCache, slot: Array, page_row: Array,
         # partial group -> per-slot residual. The clamp binds only when
         # nfull*g == Tp, i.e. rem == 0: the slice is then misaligned
         # garbage, but every residual read is masked by lengths and later
-        # appends overwrite row (pos % g) before it can become visible.
-        start = jnp.minimum(nfull * g, tp - g)
-        k_res = jax.lax.dynamic_slice_in_dim(k_rdt, start, g, axis=2)[0]
+        # appends (or the next prefill chunk) overwrite row (pos % g)
+        # before it can become visible.
+        res_lo = jnp.minimum(nfull * g, tp - g)
+        k_res = jax.lax.dynamic_slice_in_dim(k_rdt, res_lo, g, axis=2)[0]
         residual = cache.key_residual.at[slot].set(
             k_res.astype(cache.key_residual.dtype))
         updates["key_residual"] = residual
 
-    lengths = cache.lengths.at[slot].set(true_len)
+    lengths = cache.lengths.at[slot].set(start + true_len)
     return dataclasses.replace(cache, lengths=lengths, **updates)
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill: attention of one chunk over the cached prefix
+# ---------------------------------------------------------------------------
+
+
+def chunk_prefill_attention(cache: PagedKVCache, q: Array, k_chunk: Array,
+                            v_chunk: Array, page_row: Array, start: Array,
+                            chunk_len: Array,
+                            scale: float | None = None) -> Array:
+    """Attention of one prefill chunk over the slot's cached prefix.
+
+    q: (1, Hq, Tc, d) post-RoPE queries at absolute positions
+    ``start + [0, Tc)``; k_chunk/v_chunk: (1, Hkv, Tc, d) the chunk's own
+    fp keys/values (real tokens = first ``chunk_len``). ``page_row``: the
+    slot's (N,) table row; ``start`` must be page-aligned, so the cached
+    prefix ``[0, start)`` is fully flushed into pages (no residual term).
+
+    Scores over the prefix go through the codec score path (the polar
+    angle LUT) against the *encoded* page bytes — the same numeric path
+    decode uses — while within-chunk attention is fp causal. Both the
+    shared-prefix and the from-scratch chunked prefill run this exact
+    function, which is what makes prefix reuse bit-identical to the
+    unshared chunked baseline (DESIGN.md §12).
+    """
+    cfg = cache.cfg
+    codec = cache.codec
+    lay = cache.layout
+    _, hq, tc, d = q.shape
+    hkv = cache.num_kv_heads
+    qpk = hq // hkv
+    n = page_row.shape[0]
+    g = lay.page_size
+    t_cap = n * g
+    scale = scale if scale is not None else d ** -0.5
+    start = jnp.asarray(start, jnp.int32)
+    chunk_len = jnp.asarray(chunk_len, jnp.int32)
+    pvalid = (page_row >= 0) & (page_row < lay.num_pages)
+
+    def gat(pool):  # (PP, H, a, b) -> (1, H, N, a, b), invalid pages zeroed
+        x = pool[page_row]
+        x = jnp.where(pvalid[:, None, None, None], x, jnp.zeros((), x.dtype))
+        return x.transpose(1, 0, 2, 3)[None]
+
+    def flat(x):  # (1, H, N, g, ·) -> (1, H, N*g, ·)
+        return x.reshape(1, hkv, t_cap, x.shape[-1])
+
+    q4 = (q.astype(jnp.float32) * scale).reshape(1, hkv, qpk, tc, d)
+
+    # --- prefix scores: codec score path over the gathered page bytes,
+    # chunk queries folded onto the query-head axis ---
+    key_codes = gat(cache.key_codes)
+    key_scales = {kk: gat(vv) for kk, vv in cache.key_scales.items()}
+    if not cache.grouped:
+        key_codes = flat(key_codes)
+        key_scales = {kk: flat(vv) for kk, vv in key_scales.items()}
+    qf = q4.reshape(1, hkv, qpk * tc, d)
+    s_prefix = codec.scores(cfg, qf, key_codes, key_scales)
+    s_prefix = s_prefix.reshape(1, hkv, qpk, tc, t_cap)
+    pos = jnp.arange(t_cap, dtype=jnp.int32)
+    s_prefix = jnp.where((pos < start)[None, None, None, None, :],
+                         s_prefix, kvc.NEG_INF)
+
+    # --- within-chunk fp causal scores ---
+    kf = k_chunk.astype(jnp.float32)                       # (1, Hkv, Tc, d)
+    s_chunk = jnp.einsum("bhqtd,bhsd->bhqts", q4, kf)
+    i = jnp.arange(tc, dtype=jnp.int32)
+    cmask = (i[:, None] >= i[None, :]) & (i[None, :] < chunk_len)
+    s_chunk = jnp.where(cmask[None, None, None], s_chunk, kvc.NEG_INF)
+
+    probs = jax.nn.softmax(
+        jnp.concatenate([s_prefix, s_chunk], axis=-1), axis=-1)
+
+    # --- values: dequantized prefix rows + the chunk's own fp rows ---
+    if cfg.value_bits > 0:
+        v_tilde = qz.decode_values(qz.QuantizedValues(
+            codes=flat(gat(cache.value_codes)),
+            scale=flat(gat(cache.value_scale)),
+            zero=flat(gat(cache.value_zero)), bits=cfg.value_bits))
+    else:
+        v_tilde = flat(gat(cache.value_fp)).astype(jnp.float32)
+    v_all = jnp.concatenate([v_tilde, v_chunk.astype(jnp.float32)], axis=2)
+    out = jnp.einsum("bhqts,bhsd->bhqtd", probs, v_all)
+    return out.reshape(1, hq, tc, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Copy-on-write page copy (device half of PageAllocator.cow)
+# ---------------------------------------------------------------------------
+
+
+def copy_pool_pages(cache: PagedKVCache, src: Array, dst: Array
+                    ) -> PagedKVCache:
+    """Copy whole pool pages ``src`` -> ``dst`` (scalar ids) in every
+    page-indexed buffer — the device half of a COW split.
+
+    Works on both a bare cache and a per-segment *stacked* cache (leading
+    layer axis): pool buffers are ``(..., PP, H, a, b)`` so the page axis
+    is located from the right. Slot-indexed state (``key_residual``,
+    ``lengths``) is untouched — COW only duplicates pool bytes.
+    """
+    def cp(buf):
+        if buf is None:
+            return None
+        b0 = jnp.moveaxis(buf, buf.ndim - 4, 0)
+        b0 = b0.at[dst].set(b0[src])
+        return jnp.moveaxis(b0, 0, buf.ndim - 4)
+
+    return dataclasses.replace(
+        cache,
+        key_codes=cp(cache.key_codes),
+        key_scales={kk: cp(vv) for kk, vv in cache.key_scales.items()},
+        value_codes=cp(cache.value_codes),
+        value_scale=cp(cache.value_scale),
+        value_zero=cp(cache.value_zero),
+        value_fp=cp(cache.value_fp),
+    )
+
+
+def pool_page_bytes(cache: PagedKVCache) -> int:
+    """Physical bytes one pool page occupies across this (possibly
+    stacked) cache's page-indexed buffers — the unit of the shared-prefix
+    memory win (one adopted page saves this many bytes)."""
+    total = 0
+    for buf in (cache.key_codes, *cache.key_scales.values(),
+                cache.value_codes, cache.value_scale, cache.value_zero,
+                cache.value_fp):
+        if buf is not None:
+            pp = buf.shape[buf.ndim - 4]
+            total += buf.size * buf.dtype.itemsize // pp
+    return total
 
 
 # ---------------------------------------------------------------------------

@@ -161,6 +161,29 @@ def attention_prefill_paged(params: Params, x: Array, cfg: ModelConfig,
     return L.linear(L.merge_heads(out), params["wo"]), cache
 
 
+def attention_prefill_chunk(params: Params, x: Array, cfg: ModelConfig,
+                            cache: pgc.PagedKVCache, *, slot: Array,
+                            page_row: Array, start: Array, chunk_len: Array):
+    """One prefill *chunk*'s attention + paged cache fill at offset
+    ``start`` (page-aligned).
+
+    x: (1, Tc, D) with Tc the static chunk bucket; real tokens occupy
+    ``[0, chunk_len)``, the tail is padding. RoPE runs at the absolute
+    positions ``start + i``; queries attend to the slot's cached
+    (quantized) prefix ``[0, start)`` through the codec score path plus fp
+    causal attention within the chunk (``pgc.chunk_prefill_attention``).
+    Returns (y (1, Tc, D), cache).
+    """
+    b, t, _ = x.shape
+    positions = start + jnp.arange(t, dtype=jnp.int32)
+    q, k, v = _qkv(params, x, cfg, positions, rope=True)
+    cache = pgc.paged_prefill(cache, slot, page_row, k, v, chunk_len,
+                              start=start)
+    out = pgc.chunk_prefill_attention(cache, q, k, v, page_row, start,
+                                      chunk_len)
+    return L.linear(L.merge_heads(out), params["wo"]), cache
+
+
 def attention_decode_paged(params: Params, x: Array, cfg: ModelConfig,
                            cache: pgc.PagedKVCache, *, page_table: Array,
                            active: Array):

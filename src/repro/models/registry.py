@@ -42,10 +42,15 @@ class Model:
     # --- continuous batching over paged caches (None where unsupported) ---
     # init_paged_state(layout) -> per-segment stacked PagedKVCaches
     # prefill_paged(params, tokens (1,Tp), state, slot, page_row, true_len)
+    # prefill_paged_chunk(params, tokens (1,Tc), state, slot, page_row,
+    #                     start, chunk_len) — chunked prefill at an offset
     # decode_paged(params, state, token (S,), page_table, active)
+    # copy_pages(state, src, dst) — COW page copy across segment pools
     init_paged_state: Callable[..., Any] | None = None
     prefill_paged: Callable[..., Any] | None = None
+    prefill_paged_chunk: Callable[..., Any] | None = None
     decode_paged: Callable[..., Any] | None = None
+    copy_pages: Callable[..., Any] | None = None
     # cache_layer_bytes(state) -> physical cache bytes per layer (None for
     # families without per-layer KV caches)
     cache_layer_bytes: Callable[[Any], list[int]] | None = None
@@ -101,8 +106,12 @@ def get_model(cfg: ModelConfig) -> Model:
                     cfg, layout),
                 prefill_paged=lambda p, toks, s, slot, row, tl:
                     TF.prefill_paged_fn(p, toks, cfg, s, slot, row, tl),
+                prefill_paged_chunk=lambda p, toks, s, slot, row, start, cl:
+                    TF.prefill_paged_chunk_fn(p, toks, cfg, s, slot, row,
+                                              start, cl),
                 decode_paged=lambda p, s, t, table, active:
                     TF.decode_paged_fn(p, s, t, table, active, cfg),
+                copy_pages=TF.copy_state_pages,
             )
         return Model(
             cfg=cfg,

@@ -342,6 +342,52 @@ def prefill_paged_fn(params: Params, tokens: Array, cfg: ModelConfig,
     return logits[:, 0], caches
 
 
+def _block_prefill_chunk(bp: Params, x: Array, cfg: ModelConfig, cache, *,
+                         slot, page_row, start, chunk_len):
+    h = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+    y, cache = AB.attention_prefill_chunk(bp["attn"], h, cfg, cache,
+                                          slot=slot, page_row=page_row,
+                                          start=start, chunk_len=chunk_len)
+    x = x + y
+    h = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+    f, _ = _ffn_apply(bp, h, cfg)
+    return x + f, cache
+
+
+def prefill_paged_chunk_fn(params: Params, tokens: Array, cfg: ModelConfig,
+                           caches, slot: Array, page_row: Array,
+                           start: Array, chunk_len: Array):
+    """Prefill ONE fixed-size chunk of one request at absolute offset
+    ``start`` (page-aligned; the engine drives chunks front to back).
+
+    tokens: (1, Tc) int32, Tc the static chunk bucket (real tokens = first
+    ``chunk_len``). Compiles once for the whole workload — every chunk of
+    every prompt reuses the same (1, Tc) shape, unlike the per-bucket
+    one-shot prefill. Returns (last-real-token logits (1, V), caches);
+    the logits are meaningful only on a request's final chunk.
+    """
+    x = embed_tokens(params, tokens, cfg)
+
+    def body(h, xs):
+        lp, cache = xs
+        h, cache = _block_prefill_chunk(lp, h, cfg, cache, slot=slot,
+                                        page_row=page_row, start=start,
+                                        chunk_len=chunk_len)
+        return h, cache
+
+    x, caches = _scan_segments(params, x, caches, cfg, body)
+    last = jax.lax.dynamic_slice_in_dim(x, chunk_len - 1, 1, axis=1)
+    logits = lm_logits(params, last, cfg)
+    return logits[:, 0], caches
+
+
+def copy_state_pages(caches, src: Array, dst: Array):
+    """Copy pool page ``src`` -> ``dst`` across every segment's stacked
+    page pools — the device half of a COW split (DESIGN.md §12)."""
+    from repro.core import paged_cache as pgc
+    return tuple(pgc.copy_pool_pages(c, src, dst) for c in caches)
+
+
 def decode_paged_fn(params: Params, caches, token: Array, page_table: Array,
                     active: Array, cfg: ModelConfig):
     """Batched decode step over all slots. token: (S,) int32 ->

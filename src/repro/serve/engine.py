@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cache_layout import PagedLayout
+from repro.core.cache_layout import PagedLayout, PrefixIndex
 from repro.distributed import ctx
 from repro.distributed import sharding as shd
 from repro.models.registry import Model
@@ -151,12 +151,35 @@ class ContinuousBatchingEngine:
     step's live pages (one compile per bucket, see :meth:`_step_width`),
     and the decode state is donated so page pools update in place instead
     of being copied every step.
+
+    **Chunked prefill** (``prefill_chunk > 0``): prompts are prefilled in
+    fixed-size page-aligned chunks through the model's
+    ``prefill_paged_chunk`` path (each chunk attends to the slot's cached
+    quantized prefix plus fp causal within the chunk), *interleaved* with
+    decode steps under a per-engine-step token budget
+    (``prefill_budget``, default one chunk) — long prompts no longer
+    stall decode latency for everyone else. One compile covers every
+    chunk of every prompt. ``prefill_chunk=0`` keeps the classic one-shot
+    prefill (per-bucket compiles, whole prompt before the next step).
+
+    **Shared-prefix page reuse** (``prefix_cache=True``, implies chunked
+    prefill): completed prompt prefills register their full-chunk pages
+    in a content-hash :class:`~repro.core.cache_layout.PrefixIndex`;
+    admissions matching an indexed prefix adopt those pages at
+    refcount+1 — the encoded bytes are shared verbatim, no re-encode —
+    and only prefill the tail. Adoption is chunk-aligned and the final
+    chunk is always recomputed, which makes a shared-prefix run
+    bit-identical to the unshared chunked baseline (greedy sampling).
+    A copy-on-write guard checks every decode append target and splits
+    shared pages before writing (a no-op under chunk-aligned adoption,
+    but load-bearing for any future partial-page sharing — DESIGN.md §12).
     """
 
     def __init__(self, model: Model, params, *, max_slots: int = 4,
                  max_len: int = 256, num_pages: Optional[int] = None,
                  mesh=None, rules: Optional[dict] = None,
-                 table_slicing: bool = True):
+                 table_slicing: bool = True, prefix_cache: bool = False,
+                 prefill_chunk: int = 0, prefill_budget: int = 0):
         if model.decode_paged is None:
             raise ValueError(
                 f"family {model.cfg.family!r} has no paged decode path")
@@ -177,7 +200,26 @@ class ContinuousBatchingEngine:
         self.layout = PagedLayout(page_size=g, num_pages=num_pages,
                                   slots=max_slots,
                                   pages_per_slot=pages_per_slot)
+        self.prefix_cache = bool(prefix_cache)
+        chunk = int(prefill_chunk)
+        if chunk < 0:
+            raise ValueError(f"prefill_chunk must be >= 0, got {chunk}")
+        if self.prefix_cache and chunk == 0:
+            chunk = 2 * g   # sharing requires the chunk-aligned path
+        if chunk:
+            chunk = cdiv(chunk, g) * g   # page-aligned chunks
+            if model.prefill_paged_chunk is None:
+                raise ValueError(
+                    f"family {model.cfg.family!r} has no chunked prefill "
+                    "path (prefill_paged_chunk)")
+        self.prefill_chunk = chunk
+        self.prefill_budget = int(prefill_budget) if prefill_budget else chunk
         self._prefill = jax.jit(model.prefill_paged)
+        if chunk:
+            self._prefill_chunk = jax.jit(model.prefill_paged_chunk,
+                                          donate_argnums=(2,))
+        if model.copy_pages is not None:
+            self._copy_pages = jax.jit(model.copy_pages, donate_argnums=(0,))
         # donate the paged state: page pools update in place each step
         self._decode = jax.jit(model.decode_paged, donate_argnums=(1,))
         self._sample = jax.jit(_sample, static_argnames=("gen",))
@@ -220,19 +262,28 @@ class ContinuousBatchingEngine:
 
     def warmup(self, prompt_lens: list[int],
                gen: GenerationConfig = GenerationConfig()) -> None:
-        """Compile prefill buckets + the decode step against throwaway
-        state."""
+        """Compile prefill buckets (or the single chunk shape) + the decode
+        step against throwaway state."""
         state = self.model.init_paged_state(self.layout)
         sched = Scheduler(self.layout)
         key = jax.random.PRNGKey(0)
         s = self.layout.slots
         with self._ctx():
-            for tp in sorted({self._bucket(t) for t in prompt_lens}):
-                logits, state = self._prefill(
-                    self.params, jnp.zeros((1, tp), jnp.int32), state,
+            if self.prefill_chunk:
+                # one compile covers every chunk of every prompt
+                c = self.prefill_chunk
+                logits, state = self._prefill_chunk(
+                    self.params, jnp.zeros((1, c), jnp.int32), state,
                     jnp.zeros((), jnp.int32), sched.alloc.table()[0],
-                    jnp.asarray(tp, jnp.int32))
+                    jnp.zeros((), jnp.int32), jnp.asarray(c, jnp.int32))
                 jax.block_until_ready(self._sample(logits, key, gen))
+            else:
+                for tp in sorted({self._bucket(t) for t in prompt_lens}):
+                    logits, state = self._prefill(
+                        self.params, jnp.zeros((1, tp), jnp.int32), state,
+                        jnp.zeros((), jnp.int32), sched.alloc.table()[0],
+                        jnp.asarray(tp, jnp.int32))
+                    jax.block_until_ready(self._sample(logits, key, gen))
             for w in self._decode_widths():
                 logits, state = self._decode(
                     self.params, state, jnp.zeros((s,), jnp.int32),
@@ -243,13 +294,18 @@ class ContinuousBatchingEngine:
             gen: GenerationConfig = GenerationConfig()) -> dict:
         """Serve ``requests`` to completion. Returns aggregate metrics plus
         the completed request objects (tokens + timestamps filled in)."""
-        sched = Scheduler(self.layout)
+        prefix = (PrefixIndex(self.layout, self.prefill_chunk)
+                  if self.prefix_cache else None)
+        sched = Scheduler(self.layout, prefix_index=prefix,
+                          chunk_tokens=self.prefill_chunk)
         state = self.model.init_paged_state(self.layout)
         s = self.layout.slots
+        g = self.layout.page_size
         next_tok = np.zeros((s,), np.int32)
         lengths = np.zeros((s,), np.int64)
         eff_max: dict[int, int] = {}
         admit_seq: dict[int, int] = {}   # slot -> admission order (victim pick)
+        prefilling: dict[int, dict] = {}  # slot -> {"ctx": (T,) np, "off": int}
         n_admitted = 0
         clock = 0.0
         key = jax.random.PRNGKey(gen.seed)
@@ -257,12 +313,27 @@ class ContinuousBatchingEngine:
         completed: list[Request] = []
         util, active_hist, step_times = [], [], []
         steps = 0
+        prefill_computed = 0    # prefill tokens actually run through the model
+        prefill_skipped = 0     # prefill tokens served from adopted pages
+        cow_splits = 0
 
         def finish(slot: int):
             req = sched.active[slot]
             req.t_done = clock
             eff_max.pop(req.rid, None)
             completed.append(sched.finish(slot))
+
+        def take_first_token(slot: int, tok0: int, tl: int):
+            """Record a request's first sampled token after its prefill."""
+            req = sched.active[slot]
+            if req.t_admitted is None:
+                req.t_admitted = req.t_first_token = clock
+            req.out_tokens.append(tok0)
+            next_tok[slot] = tok0
+            lengths[slot] = tl
+            if (gen.eos_id >= 0 and tok0 == gen.eos_id) or \
+                    req.done_tokens >= eff_max[req.rid]:
+                finish(slot)
 
         with self._ctx():
             while arrivals or sched.has_work:
@@ -274,19 +345,27 @@ class ContinuousBatchingEngine:
                     clock = max(clock, arrivals[0].arrival_time)
                     continue
 
-                # FCFS admission: prefill each admitted request (a
-                # preempted request resumes by prefilling its full context)
+                # FCFS admission: chunked mode queues the prompt for
+                # interleaved chunk prefill; classic mode prefills the whole
+                # context in one shot (a preempted request resumes by
+                # prefilling its full context either way)
                 while (req := sched.admissible()) is not None:
                     slot = sched.admit(req)
                     admit_seq[slot] = n_admitted
                     n_admitted += 1
-                    ctx_toks = np.concatenate(
-                        [req.prompt,
-                         np.asarray(req.out_tokens, np.int32)])
+                    ctx_toks = req.context_tokens()
                     tl = len(ctx_toks)
                     eff_max[req.rid] = req.done_tokens + min(
                         req.max_new_tokens - req.done_tokens,
                         self.layout.tokens_per_slot - tl + 1)
+                    if self.prefill_chunk:
+                        # adopted prefix pages skip their prefill compute;
+                        # chunks cover [prefix_hit_tokens, tl)
+                        prefilling[slot] = {"ctx": ctx_toks,
+                                            "off": req.prefix_hit_tokens}
+                        lengths[slot] = req.prefix_hit_tokens
+                        prefill_skipped += req.prefix_hit_tokens
+                        continue
                     toks = np.zeros((1, self._bucket(tl)), np.int32)
                     toks[0, :tl] = ctx_toks
                     t0 = time.monotonic()
@@ -299,14 +378,47 @@ class ContinuousBatchingEngine:
                     tok = self._sample(logits, sub, gen)
                     tok0 = int(jax.block_until_ready(tok)[0])
                     clock += time.monotonic() - t0
-                    if req.t_admitted is None:
-                        req.t_admitted = req.t_first_token = clock
-                    req.out_tokens.append(tok0)
-                    next_tok[slot] = tok0
-                    lengths[slot] = tl
-                    if (gen.eos_id >= 0 and tok0 == gen.eos_id) or \
-                            req.done_tokens >= eff_max[req.rid]:
-                        finish(slot)
+                    prefill_computed += tl
+                    take_first_token(slot, tok0, tl)
+
+                # interleaved chunk prefill: up to prefill_budget tokens per
+                # engine step, FCFS over mid-prefill slots; a slot joins the
+                # decode batch the step after its final chunk
+                progressed = False
+                budget = self.prefill_budget
+                while budget > 0 and prefilling:
+                    slot = min(prefilling, key=admit_seq.__getitem__)
+                    cur = prefilling[slot]
+                    ctx_toks, off = cur["ctx"], cur["off"]
+                    tl = len(ctx_toks)
+                    c = self.prefill_chunk
+                    clen = min(c, tl - off)
+                    toks = np.zeros((1, c), np.int32)
+                    toks[0, :clen] = ctx_toks[off:off + clen]
+                    t0 = time.monotonic()
+                    logits, state = self._prefill_chunk(
+                        self.params, jnp.asarray(toks), state,
+                        jnp.asarray(slot, jnp.int32),
+                        sched.alloc.table()[slot],
+                        jnp.asarray(off, jnp.int32),
+                        jnp.asarray(clen, jnp.int32))
+                    progressed = True
+                    budget -= clen
+                    prefill_computed += clen
+                    cur["off"] = off + clen
+                    lengths[slot] = off + clen
+                    if cur["off"] >= tl:
+                        # final chunk: its last-token logits seed decode
+                        key, sub = jax.random.split(key)
+                        tok = self._sample(logits, sub, gen)
+                        tok0 = int(jax.block_until_ready(tok)[0])
+                        clock += time.monotonic() - t0
+                        del prefilling[slot]
+                        sched.register_prefix(slot)
+                        take_first_token(slot, tok0, tl)
+                    else:
+                        jax.block_until_ready(logits)
+                        clock += time.monotonic() - t0
 
                 if not sched.active:
                     if sched.pending and sched.admissible() is None:
@@ -321,10 +433,40 @@ class ContinuousBatchingEngine:
                             "(num_pages too small)")
                     continue
 
-                # batched decode step over non-stalled active slots
-                stalled = set(sched.ensure_pages(lengths))
-                step_slots = [sl for sl in sched.active if sl not in stalled]
+                # batched decode step over non-stalled, fully-prefilled slots
+                stalled = set(sched.ensure_pages(lengths,
+                                                 skip=prefilling.keys()))
+                step_slots = [sl for sl in sched.active
+                              if sl not in stalled and sl not in prefilling]
+
+                # copy-on-write guard: never append into a shared page.
+                # Chunk-aligned adoption makes this a no-op in steady state
+                # (adopted pages all precede the write frontier), but it is
+                # the invariant that keeps sharing safe under any adoption
+                # policy (DESIGN.md §12).
+                if step_slots and (self.prefix_cache or cow_splits):
+                    safe = []
+                    for sl in step_slots:
+                        pidx = int(lengths[sl]) // g
+                        if (pidx < sched.alloc.slot_pages(sl) and
+                                sched.alloc.refcount(
+                                    sched.alloc.page_at(sl, pidx)) > 1):
+                            if not sched.alloc.can_alloc(1):
+                                sched.reclaim(1)
+                            if not sched.alloc.can_alloc(1):
+                                stalled.add(sl)
+                                continue
+                            src, dst = sched.alloc.cow(sl, pidx)
+                            state = self._copy_pages(
+                                state, jnp.asarray(src, jnp.int32),
+                                jnp.asarray(dst, jnp.int32))
+                            cow_splits += 1
+                        safe.append(sl)
+                    step_slots = safe
+
                 if not step_slots:
+                    if progressed:
+                        continue   # chunk prefill advanced; decode retries
                     # every slot needs a page and the pool is dry:
                     # recompute-preempt the most recent admission so the
                     # rest make progress
@@ -334,6 +476,10 @@ class ContinuousBatchingEngine:
                         raise RuntimeError(
                             "request thrashing on preemption — pool too "
                             "small to finish any request")
+                    # mid-prefill slots can't be victims: chunk work always
+                    # progresses when any exist, and progress skips this
+                    # branch entirely
+                    assert victim not in prefilling
                     if vreq.out_tokens:
                         vreq.out_tokens.pop()   # un-fed; re-sampled on resume
                     eff_max.pop(vreq.rid, None)
@@ -379,7 +525,7 @@ class ContinuousBatchingEngine:
                 return 0.0
             return lats[min(int(p / 100 * len(lats)), len(lats) - 1)]
 
-        return {
+        res = {
             "requests": completed,
             "total_tokens": total_tokens,
             "wall_s": clock,
@@ -399,4 +545,23 @@ class ContinuousBatchingEngine:
             "cache_bytes_per_layer": (
                 self.model.cache_layer_bytes(state)
                 if self.model.cache_layer_bytes else None),
+            "prefill_chunk": self.prefill_chunk,
+            "prefix_cache": self.prefix_cache,
+            "prefill_tokens_computed": prefill_computed,
+            "prefill_tokens_skipped": prefill_skipped,
+            "prefix_hit_rate": prefill_skipped / max(
+                prefill_skipped + prefill_computed, 1),
+            "adopted_pages": sched.adopted_pages,
+            "fresh_pages": sched.fresh_pages,
+            "cow_splits": cow_splits,
         }
+        if prefix is not None:
+            from repro.core import paged_cache as pgc
+            page_bytes = sum(pgc.pool_page_bytes(c) for c in state)
+            res["pool_page_bytes"] = page_bytes
+            res["prefix_pool_bytes_saved"] = sched.adopted_pages * page_bytes
+            res["prefix_index"] = {
+                "entries": len(prefix), "queries": prefix.queries,
+                "evictions": prefix.evictions,
+            }
+        return res

@@ -10,25 +10,32 @@ Policies (deliberately simple, vLLM-style FCFS):
 * **Admission**: a pending request is admitted when a slot is free AND the
   pool can cover the pages for its context plus the first decoded token
   (so an admitted request can always produce at least one token without
-  stalling).
+  stalling). With a :class:`~repro.core.cache_layout.PrefixIndex` attached,
+  the context is first matched against indexed prompt pages: hits are
+  *adopted* into the slot's table row at refcount+1 (encoded bytes shared
+  verbatim) and only the remainder needs fresh pages — under pool pressure
+  index-only pages are evicted to make room (DESIGN.md §12).
 * **Decode paging**: when a slot's next token starts a new group, one page
   is allocated on demand. If the pool is empty the slot *stalls* — it is
   simply excluded from the step's active mask and retried next step. If
   *every* active slot stalls, the engine recompute-preempts the most
   recently admitted request (free its pages, requeue, prefill the full
   context on re-admission) so the rest make progress.
-* **Reclamation**: EOS / length-limit completion frees the slot and all of
-  its pages immediately.
+* **Reclamation**: EOS / length-limit completion frees the slot and
+  *decrefs* all of its pages — pages shared with other slots or pinned by
+  the prefix index survive with their encoded bytes intact.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Optional
+from typing import Iterable, Optional
 
 import numpy as np
 
-from repro.core.cache_layout import PageAllocator, PagedLayout
+from repro.core.cache_layout import (
+    PageAllocator, PagedLayout, PrefixIndex, token_page_hashes,
+)
 
 
 @dataclasses.dataclass
@@ -44,6 +51,7 @@ class Request:
     out_tokens: list = dataclasses.field(default_factory=list)
     slot: int = -1
     preemptions: int = 0
+    prefix_hit_tokens: int = 0          # tokens adopted at the last admission
     t_admitted: Optional[float] = None
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
@@ -59,6 +67,11 @@ class Request:
         prefilling the whole context)."""
         return self.prompt_len + len(self.out_tokens)
 
+    def context_tokens(self) -> np.ndarray:
+        return np.concatenate(
+            [np.asarray(self.prompt, np.int32),
+             np.asarray(self.out_tokens, np.int32)])
+
     @property
     def done_tokens(self) -> int:
         return len(self.out_tokens)
@@ -68,19 +81,73 @@ class Request:
 
 
 class Scheduler:
-    """Slot + page bookkeeping for one engine."""
+    """Slot + page bookkeeping for one engine.
 
-    def __init__(self, layout: PagedLayout):
+    ``prefix_index`` (optional) enables shared-prefix page reuse;
+    ``chunk_tokens`` is the engine's prefill chunk size — adoption is
+    rounded *down* to chunk boundaries and always leaves at least the
+    final chunk to recompute, which is what keeps a shared-prefix prefill
+    bit-identical to the unshared chunked baseline and guarantees the
+    engine has live logits for the last prompt token (DESIGN.md §12).
+    """
+
+    def __init__(self, layout: PagedLayout, *,
+                 prefix_index: Optional[PrefixIndex] = None,
+                 chunk_tokens: int = 0):
         self.layout = layout
         self.alloc = PageAllocator(layout)
+        self.prefix = prefix_index
+        self.chunk_tokens = int(chunk_tokens)
         self.free_slots: deque[int] = deque(range(layout.slots))
         self.active: dict[int, Request] = {}       # slot -> request
         self.pending: deque[Request] = deque()
+        # prefix-reuse accounting (whole-run totals)
+        self.adopted_pages = 0
+        self.fresh_pages = 0
+        self._last_query: tuple[int, int] = (-1, -1)
+        self._hash_cache: tuple[int, int, list[bytes]] = (-1, -1, [])
 
     # --- admission -------------------------------------------------------
 
     def submit(self, req: Request) -> None:
         self.pending.append(req)
+
+    def _adoptable(self, req: Request) -> list[int]:
+        """Pages of ``req``'s context the prefix index can serve, rounded
+        down to a prefill-chunk boundary and capped so the chunk holding
+        the last context token is always recomputed.
+
+        Always matched fresh against the live index — never cached:
+        eviction (e.g. from :meth:`ensure_pages` under decode pressure)
+        may drop indexed pages between admission polls, and a stale page
+        list would adopt a freed page. Index entries hold allocator refs,
+        so pages returned by a fresh match are live by construction.
+        Only the hit/query *stats* are deduplicated across repeated polls
+        of the same queue head."""
+        if self.prefix is None or self.chunk_tokens <= 0:
+            return []
+        ctx_len = req.context_len
+        g = self.layout.page_size
+        c = self.chunk_tokens
+        count = self._last_query != (req.rid, ctx_len)
+        self._last_query = (req.rid, ctx_len)
+        # memoize the chain hashes (pure in the tokens — O(context) SHA1
+        # work otherwise repeated on every admission poll of the same
+        # queue head); the page walk itself always hits the live index
+        rid, clen, hashes = self._hash_cache
+        if (rid, clen) != (req.rid, ctx_len):
+            hashes = token_page_hashes(req.context_tokens(), g)
+            self._hash_cache = (req.rid, ctx_len, hashes)
+        hit = self.prefix.match_hashes(hashes, count=count)
+        n_chunks = min((len(hit) * g) // c, (ctx_len - 1) // c)
+        return hit[: n_chunks * c // g]
+
+    def reclaim(self, need: int, keep: Optional[set[int]] = None) -> int:
+        """Evict index-only pages (LRU, leaf-first) until ``need`` pages
+        are free; returns pages actually freed."""
+        if self.prefix is None or need <= 0:
+            return 0
+        return self.prefix.evict(self.alloc, need, keep=keep)
 
     def admissible(self) -> Optional[Request]:
         """Next pending request that fits right now (FCFS — head only, to
@@ -95,37 +162,77 @@ class Scheduler:
             raise ValueError(
                 f"request {req.rid}: context {req.context_len} needs {need} "
                 f"pages > pages_per_slot {self.layout.pages_per_slot}")
+        hits = self._adoptable(req)
+        need -= len(hits)
+        if not self.alloc.can_alloc(need):
+            self.reclaim(need - self.alloc.free_pages, keep=set(hits))
         if not self.alloc.can_alloc(need):
             return None
         return req
 
     def admit(self, req: Request) -> int:
-        """Assign a slot + pages for context and first decode token.
-        Caller runs the prefill."""
+        """Assign a slot; adopt prefix-hit pages (refcount+1, encoded bytes
+        shared verbatim) and allocate fresh pages for the rest of the
+        context plus the first decode token. Caller runs the prefill from
+        ``req.prefix_hit_tokens`` onward."""
         assert self.pending and self.pending[0] is req
         self.pending.popleft()
         slot = self.free_slots.popleft()
-        ok = self.alloc.alloc(slot, self.layout.pages_for(req.context_len + 1))
+        hits = self._adoptable(req)
+        need = self.layout.pages_for(req.context_len + 1) - len(hits)
+        if hits:
+            ok = self.alloc.adopt(slot, hits)
+            assert ok, "admissible() checked row capacity"
+        ok = self.alloc.alloc(slot, need)
         assert ok, "admissible() guaranteed capacity"
+        self.adopted_pages += len(hits)
+        self.fresh_pages += need
+        req.prefix_hit_tokens = len(hits) * self.layout.page_size
+        self._last_query = (-1, -1)
         req.slot = slot
         self.active[slot] = req
         return slot
 
+    def register_prefix(self, slot: int) -> int:
+        """Index the slot's *prompt* pages once its prefill completed (full
+        prefill chunks only — trailing pages are never adopted, so indexing
+        them would only pin pool space). The index increfs each newly
+        registered page, keeping it alive past EOS reclamation."""
+        if self.prefix is None or self.chunk_tokens <= 0:
+            return 0
+        req = self.active[slot]
+        g = self.layout.page_size
+        n_pages = (req.prompt_len // self.chunk_tokens) * \
+            (self.chunk_tokens // g)
+        if n_pages <= 0:
+            return 0
+        pages = self.alloc.slot_page_ids(slot)[:n_pages]
+        return self.prefix.register(np.asarray(req.prompt, np.int32), pages,
+                                    self.alloc)
+
     # --- decode-step paging ----------------------------------------------
 
-    def ensure_pages(self, lengths: np.ndarray) -> list[int]:
+    def ensure_pages(self, lengths: np.ndarray,
+                     skip: Iterable[int] = ()) -> list[int]:
         """Allocate next-group pages for slots about to cross a page
-        boundary; returns slots that must stall this step (pool empty).
+        boundary; returns slots that must stall this step (pool empty even
+        after evicting index-only pages).
 
         ``lengths``: (slots,) current per-slot token counts — the next
-        append writes at ``lengths[slot]``.
+        append writes at ``lengths[slot]``. ``skip``: slots to leave alone
+        (mid-prefill slots, whose pages were fully reserved at admission).
         """
         g = self.layout.page_size
+        skip = set(skip)
         stalled = []
         for slot in self.active:
+            if slot in skip:
+                continue
             pos = int(lengths[slot])
             need_page = pos // g
             if pos % g == 0 and self.alloc.slot_pages(slot) <= need_page:
+                if not self.alloc.can_alloc(1):
+                    self.reclaim(1)
                 if not self.alloc.alloc(slot, 1):
                     stalled.append(slot)
         return stalled
@@ -149,7 +256,9 @@ class Scheduler:
         quantized-cache *decode* logits, so a resumed greedy sequence may
         diverge from an uninterrupted run at exactly the resume point —
         the same numeric boundary every request crosses after its initial
-        prefill."""
+        prefill. With a prefix index attached, the victim's prompt pages
+        usually survive preemption (index refs) and are re-adopted on
+        resume, so the recompute cost shrinks to the unshared tail."""
         req = self.finish(slot)
         req.preemptions += 1
         self.pending.appendleft(req)

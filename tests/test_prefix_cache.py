@@ -1,0 +1,506 @@
+"""Shared-prefix page reuse: allocator refcounts, the PrefixIndex trie,
+copy-on-write splits, and engine-level bit-identical reuse (DESIGN.md §12).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hyp_compat import HAVE_HYPOTHESIS, given, settings, st  # noqa: F401
+from repro.configs import get_config, reduce_for_smoke
+from repro.core import paged_cache as pgc
+from repro.core.cache_layout import (
+    PageAllocator, PagedLayout, PrefixIndex, token_page_hashes,
+)
+from repro.core.kv_cache import decode_attention
+from repro.core.quantizers import QuantConfig
+from repro.models import get_model
+from repro.serve import ContinuousBatchingEngine, GenerationConfig, Request
+from repro.serve.scheduler import Scheduler
+
+
+def small_layout(num_pages=8, slots=3, pages_per_slot=4, page_size=4):
+    return PagedLayout(page_size=page_size, num_pages=num_pages,
+                       slots=slots, pages_per_slot=pages_per_slot)
+
+
+# ---------------------------------------------------------------------------
+# PageAllocator refcounts
+# ---------------------------------------------------------------------------
+
+
+def check_alloc_invariants(alloc: PageAllocator):
+    """No leak, no double-free: every page is free exactly once XOR
+    referenced; slot mappings + external pins account for every ref."""
+    lay = alloc.layout
+    free = list(alloc._free)
+    assert len(free) == len(set(free)), "page duplicated in the free list"
+    slot_refs = np.zeros(lay.num_pages, np.int64)
+    for s in range(lay.slots):
+        for p in alloc.slot_page_ids(s):
+            slot_refs[p] += 1
+    for p in range(lay.num_pages):
+        ref = alloc.refcount(p)
+        assert ref >= 0
+        assert (p in free) == (ref == 0), f"page {p} free/ref mismatch"
+        assert ref >= slot_refs[p], f"page {p} under-refcounted"
+    # conservation: every page accounted for exactly once in free + live
+    assert len(free) + int((alloc._ref > 0).sum()) == lay.num_pages
+
+
+def test_alloc_free_roundtrip_refcounts():
+    alloc = PageAllocator(small_layout())
+    assert alloc.alloc(0, 3)
+    assert alloc.slot_pages(0) == 3
+    assert all(alloc.refcount(p) == 1 for p in alloc.slot_page_ids(0))
+    check_alloc_invariants(alloc)
+    assert alloc.free_slot(0) == 3
+    assert alloc.free_pages == 8
+    check_alloc_invariants(alloc)
+
+
+def test_adopt_shares_without_freeing():
+    alloc = PageAllocator(small_layout())
+    assert alloc.alloc(0, 2)
+    pages = alloc.slot_page_ids(0)
+    assert alloc.adopt(1, pages)
+    assert [alloc.refcount(p) for p in pages] == [2, 2]
+    assert alloc.table_np()[1, :2].tolist() == pages
+    # freeing the donor keeps the shared pages alive
+    assert alloc.free_slot(0) == 0
+    assert [alloc.refcount(p) for p in pages] == [1, 1]
+    check_alloc_invariants(alloc)
+    # last reference frees
+    assert alloc.free_slot(1) == 2
+    assert alloc.free_pages == 8
+    check_alloc_invariants(alloc)
+
+
+def test_decref_double_free_raises():
+    alloc = PageAllocator(small_layout())
+    assert alloc.alloc(0, 1)
+    page = alloc.page_at(0, 0)
+    alloc.free_slot(0)
+    with pytest.raises(ValueError, match="double free"):
+        alloc.decref(page)
+    with pytest.raises(ValueError, match="free page"):
+        alloc.incref(page)
+
+
+def test_cow_splits_only_shared_pages():
+    alloc = PageAllocator(small_layout())
+    assert alloc.alloc(0, 2)
+    pages = alloc.slot_page_ids(0)
+    assert alloc.adopt(1, pages)
+    # exclusively-owned after the split: no further split
+    old, new = alloc.cow(1, 1)
+    assert old == pages[1] and new not in pages
+    assert alloc.refcount(old) == 1 and alloc.refcount(new) == 1
+    assert alloc.page_at(1, 1) == new
+    assert alloc.table_np()[1, 1] == new
+    assert alloc.cow(1, 1) is None
+    # donor untouched
+    assert alloc.slot_page_ids(0) == pages
+    check_alloc_invariants(alloc)
+
+
+def test_random_op_soak_never_leaks_or_double_frees():
+    """Property soak: arbitrary interleavings of alloc/adopt/free/COW and
+    external (index-style) pins preserve the allocator invariants."""
+    rng = np.random.default_rng(0)
+    lay = small_layout(num_pages=12, slots=4, pages_per_slot=5)
+    alloc = PageAllocator(lay)
+    pins: list[int] = []   # external refs (the prefix index's holds)
+    for _ in range(600):
+        op = rng.integers(0, 5)
+        slot = int(rng.integers(0, lay.slots))
+        if op == 0:
+            alloc.alloc(slot, int(rng.integers(1, 3)))
+        elif op == 1:
+            donor = int(rng.integers(0, lay.slots))
+            owned = alloc.slot_page_ids(donor)
+            if owned:
+                k = int(rng.integers(1, len(owned) + 1))
+                alloc.adopt(slot, owned[:k])
+        elif op == 2:
+            alloc.free_slot(slot)
+        elif op == 3:
+            owned = alloc.slot_page_ids(slot)
+            if owned and alloc.can_alloc(1):
+                alloc.cow(slot, int(rng.integers(0, len(owned))))
+        elif op == 4:
+            if pins and rng.random() < 0.5:
+                alloc.decref(pins.pop())
+            else:
+                live = np.flatnonzero(alloc._ref > 0)
+                if len(live):
+                    p = int(rng.choice(live))
+                    alloc.incref(p)
+                    pins.append(p)
+        check_alloc_invariants(alloc)
+    for p in pins:
+        alloc.decref(p)
+    for s in range(lay.slots):
+        alloc.free_slot(s)
+    assert alloc.free_pages == lay.num_pages
+    check_alloc_invariants(alloc)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 4), st.integers(0, 3),
+                          st.integers(1, 4)), max_size=60))
+def test_hypothesis_refcount_invariants(ops):
+    lay = small_layout(num_pages=10, slots=4, pages_per_slot=4)
+    alloc = PageAllocator(lay)
+    pinned: list[int] = []
+    for op, slot, k in ops:
+        if op == 0:
+            alloc.alloc(slot, k)
+        elif op == 1:
+            owned = alloc.slot_page_ids((slot + 1) % lay.slots)
+            alloc.adopt(slot, owned[:k])
+        elif op == 2:
+            alloc.free_slot(slot)
+        elif op == 3:
+            owned = alloc.slot_page_ids(slot)
+            if owned and alloc.can_alloc(1):
+                alloc.cow(slot, min(k, len(owned)) - 1)
+        elif op == 4:
+            owned = alloc.slot_page_ids(slot)
+            if owned:
+                alloc.incref(owned[0])
+                pinned.append(owned[0])
+        check_alloc_invariants(alloc)
+    for p in pinned:
+        alloc.decref(p)
+    for s in range(lay.slots):
+        alloc.free_slot(s)
+    assert alloc.free_pages == lay.num_pages
+
+
+# ---------------------------------------------------------------------------
+# PrefixIndex
+# ---------------------------------------------------------------------------
+
+
+def test_token_page_hashes_chain_over_prefix():
+    g = 4
+    a = np.arange(12, dtype=np.int32)
+    b = a.copy()
+    b[2] = 99   # differs inside page 0 -> every chain hash differs
+    ha, hb = token_page_hashes(a, g), token_page_hashes(b, g)
+    assert len(ha) == 3
+    assert all(x != y for x, y in zip(ha, hb))
+    c = a.copy()
+    c[9] = 99   # differs in page 2 only -> pages 0,1 still shared
+    hc = token_page_hashes(c, g)
+    assert ha[:2] == hc[:2] and ha[2] != hc[2]
+
+
+def test_index_register_match_and_eos_survival():
+    lay = small_layout()
+    alloc = PageAllocator(lay)
+    idx = PrefixIndex(lay, chunk_tokens=lay.page_size)
+    toks = np.arange(3 * lay.page_size, dtype=np.int32)
+    alloc.alloc(0, 3)
+    pages = alloc.slot_page_ids(0)
+    assert idx.register(toks, pages, alloc) == 3
+    assert [alloc.refcount(p) for p in pages] == [2, 2, 2]
+    # EOS: the slot frees but the indexed pages survive
+    alloc.free_slot(0)
+    assert [alloc.refcount(p) for p in pages] == [1, 1, 1]
+    assert idx.match(toks) == pages
+    # longer prompt with the same prefix matches the shared pages
+    longer = np.concatenate([toks, np.asarray([7, 8, 9, 10], np.int32)])
+    assert idx.match(longer) == pages
+    # divergence inside page 1 stops the walk after page 0
+    forked = toks.copy()
+    forked[lay.page_size + 1] = 501
+    assert idx.match(forked) == pages[:1]
+    idx.drop_all(alloc)
+    assert alloc.free_pages == lay.num_pages
+
+
+def test_index_evicts_leaf_first_lru():
+    lay = small_layout(num_pages=6)
+    alloc = PageAllocator(lay)
+    idx = PrefixIndex(lay, chunk_tokens=lay.page_size)
+    toks = np.arange(3 * lay.page_size, dtype=np.int32)
+    alloc.alloc(0, 3)
+    pages = alloc.slot_page_ids(0)
+    idx.register(toks, pages, alloc)
+    alloc.free_slot(0)
+    # eviction must pop the deepest page first: page 0/1 still have live
+    # children in the trie
+    assert idx.evict(alloc, 1) == 1
+    assert idx.match(toks) == pages[:2]
+    assert alloc.refcount(pages[2]) == 0
+    # keep-set protects pages about to be adopted: page 1 is now the only
+    # leaf, so nothing is evictable while it is kept (page 0 still has a
+    # live child in the trie — never strand reachable descendants)
+    assert idx.evict(alloc, 2, keep={pages[1]}) == 0
+    assert len(idx) == 2
+    # pages pinned elsewhere (refcount > 1) are not evictable either
+    alloc.adopt(1, pages[1:2])
+    assert idx.evict(alloc, 1) == 0
+    alloc.free_slot(1)
+    # unprotected again: the chain drains deepest-first
+    assert idx.evict(alloc, 2) == 2
+    assert len(idx) == 0
+    assert alloc.free_pages == lay.num_pages
+
+
+# ---------------------------------------------------------------------------
+# COW split preserves bit-identical decode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["polar", "int"])
+def test_cow_split_bit_identical_decode(method):
+    """Construct genuine partial-tail sharing (slot 1's table aliases the
+    donor's pages while its own length ends mid-page), append through a
+    COW split, and check (a) the donor's view never changes and (b) the
+    sharer's decode stays bit-identical to an unshared replica."""
+    g, h, d = 4, 2, 8
+    cfg = QuantConfig(method=method, group_size=g, rho_bits=4, theta_bits=4,
+                      key_bits=4, value_bits=4)
+    lay = small_layout(num_pages=8, slots=3, pages_per_slot=2, page_size=g)
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.standard_normal((1, h, 2 * g, d)), jnp.float32)
+    vals = jnp.asarray(rng.standard_normal((1, h, 2 * g, d)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((1, 2, d)), jnp.float32)
+    k_new = jnp.asarray(rng.standard_normal((3, h, 1, d)), jnp.float32)
+    v_new = jnp.asarray(rng.standard_normal((3, h, 1, d)), jnp.float32)
+    r = g // 2                      # sharer's tail ends mid-page
+    tl = g + r
+
+    def build(shared: bool):
+        alloc = PageAllocator(lay)
+        cache = pgc.init_paged_cache(cfg, lay, h, d, dtype=jnp.float32)
+        # donor prefills 2 full pages in slot 0
+        alloc.alloc(0, 2)
+        cache = pgc.paged_prefill(cache, 0, jnp.asarray(alloc.table_np()[0]),
+                                  toks, vals, 2 * g)
+        # sharer holds [0, g + r): prefill its own replica first so the
+        # residual + lengths are right ...
+        alloc.alloc(1, 2)
+        cache = pgc.paged_prefill(cache, 1, jnp.asarray(alloc.table_np()[1]),
+                                  toks, vals, tl)
+        if shared:
+            # ... then alias its table onto the donor's pages (the value
+            # rows it needs are bit-identical by streaming parity)
+            alloc.free_slot(1)
+            alloc.adopt(1, alloc.slot_page_ids(0))
+        return alloc, cache
+
+    def decode(cache, alloc, slot):
+        view = pgc.gather_view(cache, jnp.asarray(alloc.table_np()))
+        return np.asarray(decode_attention(view, jnp.tile(q, (3, 1, 1))))[slot]
+
+    alloc_s, cache_s = build(shared=True)
+    alloc_u, cache_u = build(shared=False)
+    assert np.array_equal(decode(cache_s, alloc_s, 1),
+                          decode(cache_u, alloc_u, 1))
+
+    donor_before = np.asarray(pgc.gather_view(
+        cache_s, jnp.asarray(alloc_s.table_np()[:1])).value_codes
+        if cfg.value_bits else pgc.gather_view(
+            cache_s, jnp.asarray(alloc_s.table_np()[:1])).value_fp)
+
+    def append(alloc, cache):
+        # COW guard before writing into the tail page (pos // g == 1)
+        split = alloc.cow(1, tl // g)
+        if split is not None:
+            cache = pgc.copy_pool_pages(
+                cache, jnp.asarray(split[0]), jnp.asarray(split[1]))
+        active = np.zeros((3,), bool)
+        active[1] = True
+        return pgc.paged_append(cache, k_new, v_new,
+                                jnp.asarray(alloc.table_np()),
+                                jnp.asarray(active))
+
+    cache_s2 = append(alloc_s, cache_s)
+    cache_u2 = append(alloc_u, cache_u)
+    # the shared tail page must have been split...
+    assert alloc_s.page_at(1, 1) != alloc_s.page_at(0, 1)
+    # ...the donor's bytes are untouched...
+    donor_after = np.asarray(pgc.gather_view(
+        cache_s2, jnp.asarray(alloc_s.table_np()[:1])).value_codes
+        if cfg.value_bits else pgc.gather_view(
+            cache_s2, jnp.asarray(alloc_s.table_np()[:1])).value_fp)
+    assert np.array_equal(donor_before, donor_after)
+    # ...and the sharer's decode stays bit-identical to the unshared run
+    assert np.array_equal(decode(cache_s2, alloc_s, 1),
+                          decode(cache_u2, alloc_u, 1))
+
+
+# ---------------------------------------------------------------------------
+# Scheduler adoption policy
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_adopts_chunk_aligned_and_recomputes_final_chunk():
+    lay = small_layout(num_pages=16, slots=2, pages_per_slot=8, page_size=4)
+    c = 8   # chunk = 2 pages
+    sched = Scheduler(lay, prefix_index=PrefixIndex(lay, c), chunk_tokens=c)
+    donor = Request(rid=0, prompt=np.arange(2 * c, dtype=np.int32))
+    sched.submit(donor)
+    assert sched.admissible() is donor
+    slot = sched.admit(donor)
+    assert donor.prefix_hit_tokens == 0
+    sched.register_prefix(slot)       # both full chunks indexed
+    assert len(sched.prefix) == 4     # 4 pages
+    done = sched.finish(slot)
+    assert done.rid == 0
+
+    # identical prompt: adopt only the FIRST chunk — the chunk holding the
+    # last prompt token is always recomputed for live logits
+    clone = Request(rid=1, prompt=np.arange(2 * c, dtype=np.int32))
+    sched.submit(clone)
+    assert sched.admissible() is clone
+    slot = sched.admit(clone)
+    assert clone.prefix_hit_tokens == c
+    adopted = sched.alloc.slot_page_ids(slot)[:2]
+    assert [sched.alloc.refcount(p) for p in adopted] == [2, 2]
+    sched.finish(slot)
+
+    # longer prompt: both chunks adopted (its last token lives beyond)
+    longer = Request(rid=2, prompt=np.arange(2 * c + 3, dtype=np.int32))
+    sched.submit(longer)
+    assert sched.admissible() is longer
+    sched.admit(longer)
+    assert longer.prefix_hit_tokens == 2 * c
+
+
+# ---------------------------------------------------------------------------
+# Engine: shared-prefix reuse end to end
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = reduce_for_smoke(get_config("tinyllama-1.1b"))
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _shared_prefix_requests(cfg, n, prefix_pages=3, seed=0):
+    g = cfg.quant.group_size
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, cfg.vocab_size, (prefix_pages * g,)).astype(
+        np.int32)
+    reqs = []
+    for i in range(n):
+        suffix = rng.integers(0, cfg.vocab_size,
+                              (int(rng.integers(5, 20)),)).astype(np.int32)
+        # the donor runs alone first (arrival gap >> device time), so its
+        # registered pages are matchable by every later admission
+        reqs.append(Request(rid=i, prompt=np.concatenate([shared, suffix]),
+                            max_new_tokens=5,
+                            arrival_time=0.0 if i == 0 else 1e4 + i * 0.01))
+    return reqs
+
+
+def test_prefix_reuse_bit_identical_and_skips_prefill(smoke_model):
+    cfg, m, params = smoke_model
+    g = cfg.quant.group_size
+    outs = {}
+    for reuse in (False, True):
+        eng = ContinuousBatchingEngine(m, params, max_slots=3,
+                                       max_len=8 * g, prefix_cache=reuse,
+                                       prefill_chunk=g)
+        res = eng.run(_shared_prefix_requests(cfg, 4), GenerationConfig())
+        assert len(res["requests"]) == 4
+        outs[reuse] = res
+    base, reuse = outs[False], outs[True]
+    tok = lambda r: {q.rid: q.out_tokens for q in r["requests"]}
+    # greedy outputs bit-identical: adopted pages hold the same encoded
+    # bytes the baseline recomputes, and adoption is chunk-aligned
+    assert tok(base) == tok(reuse)
+    # the reuse arm actually skipped prompt prefill work
+    assert base["prefill_tokens_skipped"] == 0
+    assert reuse["prefill_tokens_skipped"] > 0
+    assert reuse["adopted_pages"] > 0
+    assert reuse["prefix_hit_rate"] > 0
+    assert reuse["prefill_tokens_computed"] < base["prefill_tokens_computed"]
+    assert reuse["prefix_pool_bytes_saved"] > 0
+    assert reuse["cow_splits"] == 0   # chunk-aligned adoption never appends
+    #                                   into a shared page
+
+
+def test_chunked_prefill_without_sharing_completes(smoke_model):
+    """Chunked prefill alone (no prefix cache): all requests complete with
+    their full budgets and decode interleaves with prefill."""
+    cfg, m, params = smoke_model
+    g = cfg.quant.group_size
+    eng = ContinuousBatchingEngine(m, params, max_slots=3, max_len=6 * g,
+                                   prefill_chunk=g, prefill_budget=g)
+    rng = np.random.default_rng(2)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        (int(rng.integers(8, 4 * g)),))
+                    .astype(np.int32),
+                    max_new_tokens=6, arrival_time=i * 0.005)
+            for i in range(6)]
+    eng.warmup([r.prompt_len for r in reqs])
+    out = eng.run(reqs, GenerationConfig())
+    assert len(out["requests"]) == 6
+    assert all(r.done_tokens == r.max_new_tokens for r in out["requests"])
+    assert out["prefill_chunk"] == g
+    assert out["prefill_tokens_computed"] >= sum(r.prompt_len for r in reqs)
+
+
+def test_chunked_engine_greedy_deterministic(smoke_model):
+    """The chunked path is deterministic: same workload, same outputs."""
+    cfg, m, params = smoke_model
+    g = cfg.quant.group_size
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab_size, (2 * g + 5,)).astype(np.int32)
+    runs = []
+    for _ in range(2):
+        eng = ContinuousBatchingEngine(m, params, max_slots=2,
+                                       max_len=6 * g, prefill_chunk=g)
+        out = eng.run([Request(rid=0, prompt=prompt.copy(),
+                               max_new_tokens=8)],
+                      GenerationConfig(max_new_tokens=8))
+        runs.append(out["requests"][0].out_tokens)
+    assert runs[0] == runs[1]
+
+
+def test_chunk_window_overrunning_row_is_scratch_padded(smoke_model):
+    """Regression: with pages_per_slot not a multiple of the chunk pages
+    (5 pages, 2-page chunks) the final chunk's static page window overruns
+    the table row; dynamic_slice would *clamp* and silently overwrite the
+    previous context page. Outputs must not depend on pool capacity."""
+    cfg, m, params = smoke_model
+    g = cfg.quant.group_size
+    rng = np.random.default_rng(11)
+    # prompt reaches into the last page: final chunk starts at page 4 of 5
+    prompt = rng.integers(0, cfg.vocab_size, (4 * g + 7,)).astype(np.int32)
+    outs = []
+    for pages_per_slot in (5, 8):
+        eng = ContinuousBatchingEngine(m, params, max_slots=2,
+                                       max_len=pages_per_slot * g,
+                                       prefill_chunk=2 * g)
+        out = eng.run([Request(rid=0, prompt=prompt.copy(),
+                               max_new_tokens=4)],
+                      GenerationConfig(max_new_tokens=4))
+        outs.append(out["requests"][0].out_tokens)
+    assert outs[0] == outs[1]
+
+
+def test_prefix_reuse_survives_eviction_pressure(smoke_model):
+    """An undersized pool forces index eviction; the engine must still
+    complete every request (sharing degrades, never deadlocks)."""
+    cfg, m, params = smoke_model
+    g = cfg.quant.group_size
+    eng = ContinuousBatchingEngine(m, params, max_slots=2, max_len=6 * g,
+                                   num_pages=10, prefix_cache=True,
+                                   prefill_chunk=g)
+    reqs = _shared_prefix_requests(cfg, 5, prefix_pages=2, seed=3)
+    out = eng.run(reqs, GenerationConfig())
+    assert len(out["requests"]) == 5
+    assert all(r.done_tokens == r.max_new_tokens for r in out["requests"])
