@@ -5,6 +5,13 @@ both engines and reports aggregate *useful* tokens/s (padding and
 over-generation excluded), p50/p99 per-request latency, and cache-page
 utilization.
 
+The continuous-batching arms run through the **streaming front door**
+(`repro.serve.api.StreamingEngine` over `EngineCore.step()`): requests are
+submitted to the open loop and tokens consumed as `TokenEvent`s, which is
+what unlocks the honest per-token numbers — **TTFT** (arrival -> first
+token, queueing + admission + the whole prefill) and **inter-token
+latency** p50/p95/p99 — instead of end-of-run aggregates.
+
 Both engines run against a simulated arrival clock: device time is
 measured (block_until_ready) and added to the clock, while idle gaps jump
 to the next arrival — so latencies compose queueing + compute without
@@ -31,8 +38,9 @@ from repro.configs import get_config, reduce_for_smoke
 from repro.models import get_model
 from repro.serve import (
     ContinuousBatchingEngine, GenerationConfig, Request, ServeEngine,
+    StreamingEngine, stream_latency_stats,
 )
-from repro.utils import pow2_bucket as _bucket
+from repro.utils import nearest_rank_pct as _pct, pow2_bucket as _bucket
 
 
 def make_workload(n: int, rate: float, seed: int, prompt_lo: int,
@@ -119,7 +127,7 @@ def run_static(model, params, requests: list[Request], slots: int,
         done.extend(batch)
 
     lats = sorted(r.latency() for r in done)
-    pct = lambda p: lats[min(int(p / 100 * len(lats)), len(lats) - 1)]
+    pct = lambda p: _pct(lats, p)
     return {"requests": done, "total_tokens": useful, "wall_s": clock,
             "tokens_per_s": useful / max(clock, 1e-9),
             "p50_latency_s": pct(50), "p99_latency_s": pct(99)}
@@ -127,13 +135,18 @@ def run_static(model, params, requests: list[Request], slots: int,
 
 def _strip_requests(r: dict) -> dict:
     """JSON-serializable copy of an engine result dict (drops the Request
-    objects; everything else is plain numbers/lists)."""
-    return {k: v for k, v in r.items() if k != "requests"}
+    and TokenEvent objects; everything else is plain numbers/lists)."""
+    return {k: v for k, v in r.items()
+            if k not in ("requests", "events", "cancelled_requests")}
 
 
 def run_cb(cfg, params, args, *, backend: str, max_len: int,
            table_slicing: bool = True) -> dict:
-    """One continuous-batching arm at a decode backend + pool capacity."""
+    """One continuous-batching arm at a decode backend + pool capacity,
+    driven open-loop through the streaming API: the Poisson workload is
+    submitted to ``StreamingEngine`` and consumed as TokenEvents, from
+    which per-request TTFT and inter-token-latency percentiles are
+    computed."""
     model = get_model(dataclasses.replace(cfg, decode_backend=backend))
     eng = ContinuousBatchingEngine(
         model, params, max_slots=args.slots, max_len=max_len,
@@ -144,7 +157,12 @@ def run_cb(cfg, params, args, *, backend: str, max_len: int,
     # include the capacity bucket: preemption-resume prefills the full
     # context, which can land above any prompt bucket
     eng.warmup([r.prompt_len for r in wl] + [max_len])
-    res = eng.run(wl, GenerationConfig())
+    stream = StreamingEngine(eng)
+    for r in sorted(wl, key=lambda q: q.arrival_time):
+        stream.submit(r)
+    events = list(stream.events())
+    res = stream.result()
+    res.update(stream_latency_stats(events, wl))
     res["max_len"] = max_len
     res["table_slicing"] = table_slicing
     return res
@@ -170,7 +188,10 @@ def run_shared_prefix(cfg, params, args) -> dict:
             num_pages=args.num_pages or None, prefix_cache=reuse,
             prefill_chunk=args.prefill_chunk)
         eng.warmup([args.max_len])
-        arms[name] = eng.run(wl(), GenerationConfig())
+        workload = wl()
+        arms[name] = eng.run(workload, GenerationConfig())
+        arms[name].update(
+            stream_latency_stats(arms[name]["events"], workload))
     base, reuse = arms["baseline"], arms["reuse"]
     out_of = lambda r: {q.rid: list(q.out_tokens) for q in r["requests"]}
     identical = out_of(base) == out_of(reuse)
@@ -285,6 +306,11 @@ def main(argv=None):
                      f" active={r['mean_active_slots']:.2f}"
                      f" dstep={r['decode_step_s_mean'] * 1e3:.2f}ms"
                      f" preempt={sum(q.preemptions for q in r['requests'])}")
+        if "ttft_s" in r:
+            extra += (f" ttft_p50={r['ttft_s']['p50'] * 1e3:.1f}ms"
+                      f"/p99={r['ttft_s']['p99'] * 1e3:.1f}ms"
+                      f" itl_p50={r['itl_s']['p50'] * 1e3:.1f}ms"
+                      f"/p99={r['itl_s']['p99'] * 1e3:.1f}ms")
         print(f"{name:12s} tokens={r['total_tokens']:5d} "
               f"wall={r['wall_s']:7.3f}s "
               f"tok/s={r['tokens_per_s']:8.1f} "

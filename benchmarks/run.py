@@ -22,7 +22,9 @@ def main() -> None:
 
     def serving_json():
         """Small serving run + context sweep -> BENCH_serving.json, so the
-        decode-step perf trajectory is tracked across PRs."""
+        decode-step perf trajectory is tracked across PRs. The CB arms run
+        through the streaming event API, so the JSON also records honest
+        per-token TTFT / inter-token-latency percentiles."""
         rc = bench_serving.main([
             "--requests", "10", "--slots", "3", "--max-len", "192",
             "--out-lo", "4", "--out-hi", "24",

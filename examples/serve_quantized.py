@@ -9,7 +9,11 @@ first layer, polar 4+4 elsewhere) with per-layer cache bytes.
 Finishes with a shared-system-prompt demo on the continuous-batching
 engine: every request carries the same system prefix, and the prefix
 cache adopts the donor's encoded pages instead of re-prefilling them
-(DESIGN.md §12) — printing the hit rate and the pool bytes shared.
+(DESIGN.md §12) — printing the hit rate and the pool bytes shared —
+then reruns the same engine through the **streaming front door**
+(DESIGN.md §13): tokens print the step they are sampled, and one request
+is cancelled mid-flight, its pages decref'd and its slot reused while
+the other requests keep decoding.
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -25,6 +29,7 @@ from repro.data import SyntheticLMDataset
 from repro.models import get_model
 from repro.serve import (
     ContinuousBatchingEngine, GenerationConfig, Request, ServeEngine,
+    StreamingEngine,
 )
 from repro.train.train_step import StepConfig, init_train_state, make_train_step
 
@@ -104,6 +109,42 @@ def main():
           f"from adopted pages ({out['prefill_tokens_skipped']} tokens, "
           f"{out['adopted_pages']} pages, {saved / 2**10:.1f} KiB of pool "
           "shared instead of re-encoded)")
+
+    # --- streaming: tokens as they arrive, one mid-flight cancel ---------
+    # Same engine (same compiled functions), new session through the
+    # open-loop front door: requests are added while the step loop runs,
+    # tokens surface as TokenEvents, and cancellation frees the victim's
+    # pages (never the index-pinned prefix) + slot for the next admission.
+    stream = StreamingEngine(eng, GenerationConfig(max_new_tokens=12))
+    rids = [stream.add_request(
+        np.concatenate([system_prompt,
+                        all_tokens[i + 1, : 8 + 2 * i].astype(np.int32)]),
+        max_new_tokens=12) for i in range(3)]
+    victim = rids[1]
+    got = {rid: [] for rid in rids}
+    cancelled = False
+    print("streaming serve (3 requests; cancelling the 2nd mid-flight):")
+    while stream.has_work:
+        for ev in stream.step():
+            if ev.kind in ("first_token", "token"):
+                got[ev.rid].append(ev.token)
+                print(f"  t={ev.t * 1e3:7.1f}ms rid={ev.rid} "
+                      f"slot={ev.slot} +{ev.token}")
+            else:
+                if ev.kind == "preempt" and got[ev.rid]:
+                    got[ev.rid].pop()   # preempt retracts the last token
+                print(f"  t={ev.t * 1e3:7.1f}ms rid={ev.rid} "
+                      f"slot={ev.slot} {ev.kind}")
+            if (not cancelled and ev.rid == victim
+                    and len(got[victim]) >= 3):
+                stream.cancel(victim)
+                cancelled = True
+    res = stream.result()
+    assert cancelled and res["n_cancelled"] == 1
+    print(f"streamed {res['total_tokens']} tokens from "
+          f"{len(res['requests'])} finished requests; rid={victim} "
+          f"cancelled after {len(got[victim])} tokens, its pages back in "
+          f"the pool ({stream.core.sched.alloc.free_pages} pages free)")
 
 
 if __name__ == "__main__":

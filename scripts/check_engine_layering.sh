@@ -1,0 +1,48 @@
+#!/usr/bin/env bash
+# Guard the serve-layer decomposition (DESIGN.md §13): EngineCore
+# (serve/core.py) is the ONLY place the serving stack may dispatch to the
+# device, and the PageAllocator may only be mutated by its owners. This
+# keeps the front door (api.py streaming, engine.py batch adapter) and
+# every launcher/benchmark/example host-side-only — cancellation, request
+# intake, and event plumbing can never race a device call or corrupt page
+# refcounts from outside the core.
+#
+#   1. jax/jnp usage inside src/repro/serve/ is allowed only in core.py
+#      (the step loop + the static ServeEngine live there).
+#   2. PageAllocator mutating calls (alloc/adopt/incref/decref/cow/
+#      free_slot) are allowed only in serve/scheduler.py (the allocator's
+#      host-side owner), serve/core.py (the COW guard), and core/ (the
+#      allocator + PrefixIndex themselves). bench_kernel_latency.py is
+#      exempt: it microbenchmarks the paged layout directly, below the
+#      serve stack.
+set -u
+cd "$(dirname "$0")/.."
+
+fail=0
+
+jaxuse=$(grep -rnE '(import[[:space:]]+jax|from[[:space:]]+jax|jax\.|jnp\.)' \
+    src/repro/serve --include='*.py' \
+    | grep -v 'src/repro/serve/core.py' || true)
+if [ -n "$jaxuse" ]; then
+    echo "ERROR: device dispatch outside serve/core.py — the streaming" >&2
+    echo "front door and batch adapter must stay host-side-only; route" >&2
+    echo "device work through EngineCore.step():" >&2
+    echo "$jaxuse" >&2
+    fail=1
+fi
+
+mut=$(grep -rnE '\.(alloc|adopt|incref|decref|cow|free_slot)\(' \
+    src/repro benchmarks examples --include='*.py' \
+    | grep -vE 'src/repro/serve/(scheduler|core)\.py' \
+    | grep -v 'src/repro/core/' \
+    | grep -v 'benchmarks/bench_kernel_latency.py' || true)
+if [ -n "$mut" ]; then
+    echo "ERROR: direct PageAllocator mutation outside its owners" >&2
+    echo "(serve/scheduler.py, serve/core.py, core/) — page refcounts" >&2
+    echo "must only change under the scheduler/core invariants:" >&2
+    echo "$mut" >&2
+    fail=1
+fi
+
+[ "$fail" -eq 0 ] || exit 1
+echo "engine layering check OK (device dispatch + allocator mutation contained)"

@@ -8,6 +8,10 @@
 cache; ``--prefill-chunk`` enables interleaved chunked prefill and
 ``--prefix-cache`` shared-prefix page reuse (the launcher then gives every
 request a common system-prompt prefix so the hit rate is visible).
+``--stream`` drives the same workload open-loop through the streaming
+front door (``repro.serve.api.StreamingEngine`` over ``EngineCore.step``):
+tokens print the step they are sampled and the summary reports per-token
+TTFT / inter-token-latency percentiles from the event stream.
 """
 from __future__ import annotations
 
@@ -57,6 +61,10 @@ def main(argv=None) -> int:
     ap.add_argument("--prefix-cache", action="store_true",
                     help="cb engine: shared-prefix page reuse (implies "
                          "chunked prefill)")
+    ap.add_argument("--stream", action="store_true",
+                    help="cb engine: serve through the streaming API, "
+                         "printing tokens as they arrive and per-token "
+                         "TTFT/ITL percentiles")
     ap.add_argument("--shared-prefix-len", type=int, default=64,
                     help="cb engine: common system-prompt length prepended "
                          "to every request (demo workload for "
@@ -114,9 +122,42 @@ def main(argv=None) -> int:
             prefill_chunk=args.prefill_chunk)
         eng.warmup([r.prompt_len for r in reqs] + [args.max_len],
                    GenerationConfig(max_new_tokens=args.gen))
-        out = eng.run(reqs, GenerationConfig(
-            max_new_tokens=args.gen, temperature=args.temperature,
-            seed=args.seed))
+        gen = GenerationConfig(max_new_tokens=args.gen,
+                               temperature=args.temperature, seed=args.seed)
+        if args.stream:
+            from repro.serve import StreamingEngine, stream_latency_stats
+            stream = StreamingEngine(eng, gen)
+            for r in reqs:
+                stream.submit(r)
+            texts: dict[int, list] = {r.rid: [] for r in reqs}
+            events = []
+            for ev in stream.events():
+                events.append(ev)
+                if ev.kind in ("first_token", "token"):
+                    texts[ev.rid].append(ev.token)
+                    print(f"[stream] t={ev.t * 1e3:8.1f}ms rid={ev.rid} "
+                          f"slot={ev.slot} +{ev.token}")
+                elif ev.kind == "preempt":
+                    # the victim's last streamed token is retracted and
+                    # re-sampled when it resumes
+                    if texts[ev.rid]:
+                        texts[ev.rid].pop()
+                    print(f"[stream] t={ev.t * 1e3:8.1f}ms rid={ev.rid} "
+                          f"preempt (-{ev.token})")
+                else:
+                    print(f"[stream] t={ev.t * 1e3:8.1f}ms rid={ev.rid} "
+                          f"{ev.kind}")
+            out = stream.result()
+            lat = stream_latency_stats(events, reqs)
+            print(f"[serve] streamed {out['total_tokens']} tokens  "
+                  f"{out['tokens_per_s']:.1f} tok/s  "
+                  f"ttft p50 {lat['ttft_s']['p50'] * 1e3:.1f}ms "
+                  f"p99 {lat['ttft_s']['p99'] * 1e3:.1f}ms  "
+                  f"itl p50 {lat['itl_s']['p50'] * 1e3:.1f}ms "
+                  f"p99 {lat['itl_s']['p99'] * 1e3:.1f}ms")
+            print(f"[serve] first sequence: {texts[reqs[0].rid]}")
+            return 0
+        out = eng.run(reqs, gen)
         print(f"[serve] cb decode {out['tokens_per_s']:.1f} tok/s  "
               f"p50 {out['p50_latency_s'] * 1e3:.1f}ms  "
               f"cache {out['cache_bytes'] / 2**20:.2f} MiB  "

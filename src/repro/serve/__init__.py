@@ -1,5 +1,13 @@
-"""Serving: batched decode engines over quantized KV caches."""
-from repro.serve.engine import (  # noqa: F401
-    ContinuousBatchingEngine, GenerationConfig, ServeEngine,
+"""Serving: batched decode engines over quantized KV caches.
+
+Layering (DESIGN.md §13): ``core.py`` owns every device dispatch
+(``EngineCore.step()`` + the static ``ServeEngine``); ``scheduler.py``
+owns slots/pages host-side; ``engine.py`` (batch replay) and ``api.py``
+(streaming) are thin host-side drivers over the core.
+"""
+from repro.serve.api import StreamingEngine, stream_latency_stats  # noqa: F401
+from repro.serve.core import (  # noqa: F401
+    EngineCore, GenerationConfig, ServeEngine, TokenEvent,
 )
+from repro.serve.engine import ContinuousBatchingEngine  # noqa: F401
 from repro.serve.scheduler import Request, Scheduler  # noqa: F401

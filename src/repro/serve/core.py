@@ -1,0 +1,759 @@
+"""EngineCore: the step-shaped device-dispatch layer of the serve stack
+(DESIGN.md §13).
+
+Everything in ``repro.serve`` that touches the device lives in this file:
+
+* :class:`ServeEngine` — the static-batching dense-cache engine (one
+  shared prefill, lock-step decode). Re-exported from
+  ``repro.serve.engine`` for back-compat.
+* :class:`EngineCore` — the continuous-batching core. One public
+  :meth:`EngineCore.step` performs exactly **one** scheduling decision +
+  at most one device dispatch (admit/adopt, one prefill chunk, or one
+  batched decode step) and returns structured :class:`TokenEvent`\\ s.
+  Requests move through an explicit state machine::
+
+      WAITING -> PREFILLING -> DECODING -> FINISHED
+                      \\_________/     \\-> PREEMPTED (-> WAITING)
+                any live state -> CANCELLED
+
+  The batch adapter (``engine.ContinuousBatchingEngine.run``) and the
+  streaming front door (``api.StreamingEngine``) are both thin host-side
+  drivers over this class — the layering lint
+  (``scripts/check_engine_layering.sh``) keeps it that way.
+
+Bit-identical replay invariant: driving :meth:`step` to quiescence over a
+fixed request list reproduces the pre-refactor monolithic ``run()`` loop
+exactly — same greedy tokens, same page-adoption decisions, same
+scheduler metrics (asserted against the frozen oracle in
+``tests/cb_reference.py``). The step machine therefore mirrors the
+monolith's *cycle* structure: arrivals are pumped and the chunk-prefill
+budget reset once per cycle (admit phase), not once per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache_layout import PagedLayout, PrefixIndex
+from repro.distributed import ctx
+from repro.models.registry import Model
+from repro.serve.scheduler import Request, Scheduler
+from repro.utils import (
+    cdiv, nearest_rank_pct, pow2_bucket, tree_bytes as _tree_bytes,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class GenerationConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0      # 0 => greedy
+    top_k: int = 0
+    eos_id: int = -1              # -1 => never stop early
+    seed: int = 0
+
+
+def _sample(logits, key, gen: GenerationConfig):
+    if gen.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / gen.temperature
+    if gen.top_k > 0:
+        vals, _ = jax.lax.top_k(logits, gen.top_k)
+        logits = jnp.where(logits < vals[..., -1:], -1e30, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Request lifecycle states and the event taxonomy
+# ---------------------------------------------------------------------------
+
+WAITING = "waiting"          # submitted, not yet holding a slot
+PREFILLING = "prefilling"    # slot assigned, context not fully encoded
+DECODING = "decoding"        # prefill done, producing tokens
+FINISHED = "finished"        # EOS / length limit; slot + pages released
+PREEMPTED = "preempted"      # pages reclaimed under pressure; requeued
+CANCELLED = "cancelled"      # caller cancelled; slot + pages released
+
+#: Every kind a :class:`TokenEvent` can carry, in lifecycle order.
+EVENT_KINDS = ("admit", "first_token", "token", "finish", "preempt",
+               "cancel")
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEvent:
+    """One observable engine transition, stamped with the device-time
+    clock (queueing + measured compute seconds, same clock the latency
+    percentiles are computed on).
+
+    ``token`` is the sampled token id for ``first_token``/``token``
+    events; for a ``preempt`` event it is the **retracted** token — the
+    victim's most recent token is withdrawn (it was never fed back to
+    the model) and re-sampled on resume, so a consumer accumulating
+    streamed tokens must drop its last token for that rid when a
+    ``preempt`` arrives. None otherwise. ``slot`` is the cache slot
+    involved (-1 when the request never held one, e.g. a queued
+    cancel)."""
+
+    kind: str
+    rid: int
+    t: float
+    token: Optional[int] = None
+    slot: int = -1
+
+
+class ServeEngine:
+    """Static batching: one shared prefill, lock-step decode, the whole
+    batch stalls until its slowest request finishes. Kept as the baseline
+    (and for single-batch offline use)."""
+
+    def __init__(self, model: Model, params, max_len: int,
+                 mesh=None, rules: Optional[dict] = None):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.mesh = mesh
+        self.rules = rules
+        self._prefill = jax.jit(model.prefill)
+        # donate the decode state: cache buffers update in place instead of
+        # being copied every step (the state is rebound to the result)
+        self._decode = jax.jit(model.decode, donate_argnums=(1,))
+        self._sample = jax.jit(_sample, static_argnames=("gen",))
+
+    def _ctx(self):
+        if self.mesh is not None and self.rules is not None:
+            return ctx.use_sharding(self.mesh, self.rules)
+        import contextlib
+        return contextlib.nullcontext()
+
+    def generate(self, batch: dict,
+                 gen: Optional[GenerationConfig] = None):
+        """batch: prompt inputs (tokens (B, Tp) [+ frames/patches]).
+
+        Returns dict with generated tokens (B, max_new_tokens) and timings.
+        """
+        gen = gen if gen is not None else GenerationConfig()
+        b = batch["tokens"].shape[0]
+        cfg = self.model.cfg
+        if cfg.family in ("dense", "moe", "vlm") and cfg.window == 0:
+            # linear cache: prompt + appended tokens must fit (the last
+            # sampled token is never appended, hence the -1)
+            tp = batch["tokens"].shape[1] + (
+                cfg.frontend_tokens if cfg.family == "vlm" else 0)
+            if tp + gen.max_new_tokens - 1 > self.max_len:
+                raise ValueError(
+                    f"prompt {tp} + max_new_tokens {gen.max_new_tokens} "
+                    f"exceeds cache capacity {self.max_len}")
+        key = jax.random.PRNGKey(gen.seed)
+        with self._ctx():
+            state = self.model.init_decode_state(b, self.max_len)
+            t0 = time.monotonic()
+            logits, state = self._prefill(self.params, batch, state)
+            logits.block_until_ready()
+            t_prefill = time.monotonic() - t0
+
+            toks = []
+            tok = self._sample(logits, key, gen)
+            toks.append(tok)
+            t0 = time.monotonic()
+            done = jnp.zeros((b,), bool)
+            for i in range(gen.max_new_tokens - 1):
+                logits, state = self._decode(self.params, state, tok)
+                key, sub = jax.random.split(key)
+                tok = self._sample(logits, sub, gen)
+                if gen.eos_id >= 0:
+                    done = done | (tok == gen.eos_id)
+                    tok = jnp.where(done, gen.eos_id, tok)
+                toks.append(tok)
+            jax.block_until_ready(tok)
+            t_decode = time.monotonic() - t0
+        out = jnp.stack(toks, axis=1)
+        n_dec = max(gen.max_new_tokens - 1, 1)
+        return {
+            "tokens": np.asarray(out),
+            "prefill_s": t_prefill,
+            "decode_s": t_decode,
+            "tokens_per_s": b * n_dec / max(t_decode, 1e-9),
+            "cache_bytes": _tree_bytes(state),
+            "cache_bytes_per_layer": (
+                self.model.cache_layer_bytes(state)
+                if self.model.cache_layer_bytes else None),
+        }
+
+
+# ---------------------------------------------------------------------------
+# EngineCore: the continuous-batching step loop
+# ---------------------------------------------------------------------------
+
+
+class EngineCore:
+    """Step-shaped continuous-batching core over per-layer paged KV caches.
+
+    Construction compiles the device functions and fixes the pool layout
+    (``max_slots`` concurrent requests over ``num_pages`` pages of
+    ``group_size`` tokens; ``prefill_chunk``/``prefix_cache``/
+    ``table_slicing`` as on the old monolithic engine — see
+    ``engine.ContinuousBatchingEngine`` for the knob docs). Compiled
+    functions persist across sessions; :meth:`reset` starts a fresh
+    session (new device state, scheduler, prefix index, clock, RNG).
+
+    Drive it with :meth:`add_request` / :meth:`cancel` / :meth:`step`:
+    each ``step()`` makes one scheduling decision, performs at most one
+    device dispatch, advances the device-time clock, and returns the
+    :class:`TokenEvent`\\ s it caused. ``step()`` with no work is a no-op
+    returning ``[]`` — an open-loop driver can keep calling it as
+    requests arrive. The clock is *simulated*: while the engine is idle,
+    it jumps to the next scheduled arrival instead of sleeping, so batch
+    replays compose queueing + compute without wall-clock waits.
+    """
+
+    def __init__(self, model: Model, params, *, max_slots: int = 4,
+                 max_len: int = 256, num_pages: Optional[int] = None,
+                 mesh=None, rules: Optional[dict] = None,
+                 table_slicing: bool = True, prefix_cache: bool = False,
+                 prefill_chunk: int = 0, prefill_budget: int = 0):
+        if model.decode_paged is None:
+            raise ValueError(
+                f"family {model.cfg.family!r} has no paged decode path")
+        self.model = model
+        self.params = params
+        self.mesh = mesh
+        self.rules = rules
+        # table_slicing=False ships the full (S, pages_per_slot) table every
+        # step — the pre-width-bucketing behavior, kept as a benchmark
+        # baseline (decode cost then scales with pool capacity)
+        self.table_slicing = table_slicing
+        # page == quantization group: every layer of the policy must agree
+        # on the group size (bit-widths/methods may differ per layer)
+        g = model.cfg.policy.page_group_size()
+        pages_per_slot = cdiv(max_len, g)
+        if num_pages is None:
+            num_pages = max_slots * pages_per_slot
+        self.layout = PagedLayout(page_size=g, num_pages=num_pages,
+                                  slots=max_slots,
+                                  pages_per_slot=pages_per_slot)
+        self.prefix_cache = bool(prefix_cache)
+        chunk = int(prefill_chunk)
+        if chunk < 0:
+            raise ValueError(f"prefill_chunk must be >= 0, got {chunk}")
+        if self.prefix_cache and chunk == 0:
+            chunk = 2 * g   # sharing requires the chunk-aligned path
+        if chunk:
+            chunk = cdiv(chunk, g) * g   # page-aligned chunks
+            if model.prefill_paged_chunk is None:
+                raise ValueError(
+                    f"family {model.cfg.family!r} has no chunked prefill "
+                    "path (prefill_paged_chunk)")
+        self.prefill_chunk = chunk
+        self.prefill_budget = int(prefill_budget) if prefill_budget else chunk
+        self._prefill = jax.jit(model.prefill_paged)
+        if chunk:
+            self._prefill_chunk = jax.jit(model.prefill_paged_chunk,
+                                          donate_argnums=(2,))
+        if model.copy_pages is not None:
+            self._copy_pages = jax.jit(model.copy_pages, donate_argnums=(0,))
+        # donate the paged state: page pools update in place each step
+        self._decode = jax.jit(model.decode_paged, donate_argnums=(1,))
+        self._sample = jax.jit(_sample, static_argnames=("gen",))
+        self.reset()
+
+    # --- session lifecycle ------------------------------------------------
+
+    def reset(self, gen: Optional[GenerationConfig] = None) -> None:
+        """Start a fresh serving session: new device state, scheduler,
+        prefix index, clock, RNG, and metrics. ``gen`` fixes the session's
+        sampling configuration (per-request budgets still come from
+        ``Request.max_new_tokens``)."""
+        self.gen = gen if gen is not None else GenerationConfig()
+        self.prefix = (PrefixIndex(self.layout, self.prefill_chunk)
+                       if self.prefix_cache else None)
+        self.sched = Scheduler(self.layout, prefix_index=self.prefix,
+                               chunk_tokens=self.prefill_chunk)
+        self.state = self.model.init_paged_state(self.layout)
+        s = self.layout.slots
+        self.clock = 0.0
+        self._key = jax.random.PRNGKey(self.gen.seed)
+        self._next_tok = np.zeros((s,), np.int32)
+        self._lengths = np.zeros((s,), np.int64)
+        self._eff_max: dict[int, int] = {}
+        self._admit_seq: dict[int, int] = {}   # slot -> admission order
+        self._prefilling: dict[int, dict] = {}  # slot -> {"ctx", "off"}
+        self._n_admitted = 0
+        self._arrivals: list[Request] = []     # sorted by arrival_time
+        self.completed: list[Request] = []
+        self.cancelled: list[Request] = []
+        # cycle state: the step machine mirrors one monolith loop
+        # iteration as the phase sequence begin -> admit* -> prefill* ->
+        # decode, pumping arrivals and resetting the chunk budget once
+        # per cycle (bit-identical-replay invariant)
+        self._phase = "begin"
+        self._progressed = False
+        self._budget_left = 0
+        # metrics
+        self._util: list[float] = []
+        self._active_hist: list[int] = []
+        self._step_times: list[float] = []
+        self.decode_steps = 0
+        self.prefill_computed = 0   # prefill tokens run through the model
+        self.prefill_skipped = 0    # prefill tokens served from adoption
+        self.cow_splits = 0
+
+    # --- request intake ---------------------------------------------------
+
+    def add_request(self, req: Request) -> int:
+        """Enqueue ``req`` for admission at ``req.arrival_time`` on the
+        engine clock (insertion-ordered among equal times, so a
+        pre-sorted batch replays FCFS exactly). Returns the rid.
+
+        Rejects (ValueError) a context that can never fit one slot —
+        at intake, so an open-loop session is never poisoned by an
+        oversized request reaching the queue head mid-stream."""
+        need = self.layout.pages_for(req.context_len + 1)
+        if need > self.layout.pages_per_slot:
+            raise ValueError(
+                f"request {req.rid}: context {req.context_len} needs "
+                f"{need} pages > pages_per_slot "
+                f"{self.layout.pages_per_slot}")
+        req.state = WAITING
+        i = len(self._arrivals)
+        while i > 0 and self._arrivals[i - 1].arrival_time > \
+                req.arrival_time:
+            i -= 1
+        self._arrivals.insert(i, req)
+        return req.rid
+
+    def cancel(self, rid: int) -> list[TokenEvent]:
+        """Cancel a request wherever it is in the lifecycle.
+
+        * scheduled / pending: dropped from the queue, no pages involved.
+        * mid-prefill or mid-decode: the slot is released through the
+          scheduler, which *decrefs* the slot's pages — pages shared with
+          other slots or pinned by the prefix index survive with their
+          encoded bytes intact; exclusive pages return to the free list.
+          The slot is immediately reusable by the next admission.
+
+        Returns the ``cancel`` event ([] when ``rid`` is unknown or
+        already finished). Host-side only — no device dispatch."""
+        for i, r in enumerate(self._arrivals):
+            if r.rid == rid:
+                del self._arrivals[i]
+                return self._cancelled(r)
+        req, slot = self.sched.cancel(rid)
+        if req is None:
+            return []
+        if slot >= 0:
+            self._prefilling.pop(slot, None)
+            self._eff_max.pop(rid, None)
+        return self._cancelled(req, slot)
+
+    def _cancelled(self, req: Request, slot: int = -1) -> list[TokenEvent]:
+        req.state = CANCELLED
+        req.t_done = self.clock
+        self.cancelled.append(req)
+        return [TokenEvent("cancel", req.rid, self.clock, slot=slot)]
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._arrivals) or self.sched.has_work
+
+    # --- compile helpers --------------------------------------------------
+
+    def _decode_widths(self) -> list[int]:
+        """Page-table width buckets the decode step compiles against:
+        powers of two capped at ``pages_per_slot``."""
+        n = self.layout.pages_per_slot
+        if not self.table_slicing:
+            return [n]
+        widths, w = [], 1
+        while w < n:
+            widths.append(w)
+            w *= 2
+        widths.append(n)
+        return widths
+
+    def _step_width(self, pages_needed: int) -> int:
+        """Smallest width bucket covering ``pages_needed`` live pages.
+
+        The decode step reads the page table only up to this width, so its
+        per-step cost scales with the *live* context of the current batch
+        — O(max live tokens) — instead of the pool capacity."""
+        if not self.table_slicing:
+            return self.layout.pages_per_slot
+        for w in self._decode_widths():
+            if w >= pages_needed:
+                return w
+        return self.layout.pages_per_slot
+
+    def _ctx(self):
+        if self.mesh is not None and self.rules is not None:
+            return ctx.use_sharding(self.mesh, self.rules)
+        import contextlib
+        return contextlib.nullcontext()
+
+    def _bucket(self, prompt_len: int) -> int:
+        return min(pow2_bucket(prompt_len, self.layout.page_size),
+                   self.layout.tokens_per_slot)
+
+    def warmup(self, prompt_lens: list[int],
+               gen: Optional[GenerationConfig] = None) -> None:
+        """Compile prefill buckets (or the single chunk shape) + the decode
+        step against throwaway state."""
+        gen = gen if gen is not None else GenerationConfig()
+        state = self.model.init_paged_state(self.layout)
+        sched = Scheduler(self.layout)
+        key = jax.random.PRNGKey(0)
+        s = self.layout.slots
+        with self._ctx():
+            if self.prefill_chunk:
+                # one compile covers every chunk of every prompt
+                c = self.prefill_chunk
+                logits, state = self._prefill_chunk(
+                    self.params, jnp.zeros((1, c), jnp.int32), state,
+                    jnp.zeros((), jnp.int32), sched.alloc.table()[0],
+                    jnp.zeros((), jnp.int32), jnp.asarray(c, jnp.int32))
+                jax.block_until_ready(self._sample(logits, key, gen))
+            else:
+                for tp in sorted({self._bucket(t) for t in prompt_lens}):
+                    logits, state = self._prefill(
+                        self.params, jnp.zeros((1, tp), jnp.int32), state,
+                        jnp.zeros((), jnp.int32), sched.alloc.table()[0],
+                        jnp.asarray(tp, jnp.int32))
+                    jax.block_until_ready(self._sample(logits, key, gen))
+            for w in self._decode_widths():
+                logits, state = self._decode(
+                    self.params, state, jnp.zeros((s,), jnp.int32),
+                    sched.alloc.table()[:, :w], jnp.zeros((s,), bool))
+                jax.block_until_ready(self._sample(logits, key, gen))
+
+    # --- the step loop ----------------------------------------------------
+
+    def step(self) -> list[TokenEvent]:
+        """One scheduling decision + at most one device dispatch.
+
+        Exactly one of, in cycle priority order:
+
+        1. admit the next admissible request (adopting prefix pages;
+           classic mode also runs its one-shot prefill here),
+        2. run one prefill chunk (chunked mode, under the cycle budget),
+        3. run one batched decode step over all decode-ready slots — or
+           recompute-preempt the youngest admission when every slot
+           stalls on a dry pool.
+
+        Idle with scheduled arrivals jumps the clock; idle with no work
+        at all returns ``[]`` immediately (streaming drivers poll)."""
+        with self._ctx():
+            return self._step()
+
+    def _step(self) -> list[TokenEvent]:
+        if self._phase == "begin":
+            self._pump_arrivals()
+            if not self.sched.has_work:
+                if not self._arrivals:
+                    return []   # fully idle: wait for add_request()
+                # idle engine: jump the clock to the next arrival
+                self.clock = max(self.clock, self._arrivals[0].arrival_time)
+                self._pump_arrivals()
+            self._progressed = False
+            self._budget_left = self.prefill_budget
+            self._phase = "admit"
+
+        if self._phase == "admit":
+            req = self.sched.admissible()
+            if req is not None:
+                return self._admit(req)
+            if not self.sched.active:
+                # nothing running and the queue head can't fit: future
+                # arrivals can't free pages, so either wait them out
+                # (clock jump) or fail loudly
+                self._phase = "begin"
+                if self.sched.pending and self._arrivals:
+                    self.clock = max(self.clock,
+                                     self._arrivals[0].arrival_time)
+                    return []
+                if self.sched.pending:
+                    raise RuntimeError(
+                        "pool cannot fit a single pending request "
+                        "(num_pages too small)")
+                return []
+            self._phase = "prefill"
+
+        if self._phase == "prefill":
+            if self._budget_left > 0 and self._prefilling:
+                return self._prefill_one_chunk()
+            self._phase = "decode"
+
+        self._phase = "begin"   # decode (or preempt) ends the cycle
+        return self._decode_step()
+
+    def _pump_arrivals(self) -> None:
+        while self._arrivals and \
+                self._arrivals[0].arrival_time <= self.clock:
+            self.sched.submit(self._arrivals.pop(0))
+
+    def _admit(self, req: Request) -> list[TokenEvent]:
+        """Admission: assign a slot, adopt prefix hits, reserve pages.
+        Chunked mode queues the prompt for interleaved chunk prefill;
+        classic mode prefills the whole context in one shot (a preempted
+        request resumes by prefilling its full context either way)."""
+        slot = self.sched.admit(req)
+        req.state = PREFILLING
+        self._admit_seq[slot] = self._n_admitted
+        self._n_admitted += 1
+        ctx_toks = req.context_tokens()
+        tl = len(ctx_toks)
+        self._eff_max[req.rid] = req.done_tokens + min(
+            req.max_new_tokens - req.done_tokens,
+            self.layout.tokens_per_slot - tl + 1)
+        events = [TokenEvent("admit", req.rid, self.clock, slot=slot)]
+        if self.prefill_chunk:
+            # adopted prefix pages skip their prefill compute; chunks
+            # cover [prefix_hit_tokens, tl)
+            self._prefilling[slot] = {"ctx": ctx_toks,
+                                      "off": req.prefix_hit_tokens}
+            self._lengths[slot] = req.prefix_hit_tokens
+            self.prefill_skipped += req.prefix_hit_tokens
+            return events
+        toks = np.zeros((1, self._bucket(tl)), np.int32)
+        toks[0, :tl] = ctx_toks
+        t0 = time.monotonic()
+        logits, self.state = self._prefill(
+            self.params, jnp.asarray(toks), self.state,
+            jnp.asarray(slot, jnp.int32),
+            self.sched.alloc.table()[slot],
+            jnp.asarray(tl, jnp.int32))
+        self._key, sub = jax.random.split(self._key)
+        tok = self._sample(logits, sub, self.gen)
+        tok0 = int(jax.block_until_ready(tok)[0])
+        self.clock += time.monotonic() - t0
+        self.prefill_computed += tl
+        return events + self._take_first_token(slot, tok0, tl)
+
+    def _prefill_one_chunk(self) -> list[TokenEvent]:
+        """One prefill chunk for the oldest mid-prefill admission (FCFS);
+        the slot joins the decode batch the step after its final chunk."""
+        slot = min(self._prefilling, key=self._admit_seq.__getitem__)
+        cur = self._prefilling[slot]
+        ctx_toks, off = cur["ctx"], cur["off"]
+        tl = len(ctx_toks)
+        c = self.prefill_chunk
+        clen = min(c, tl - off)
+        toks = np.zeros((1, c), np.int32)
+        toks[0, :clen] = ctx_toks[off:off + clen]
+        t0 = time.monotonic()
+        logits, self.state = self._prefill_chunk(
+            self.params, jnp.asarray(toks), self.state,
+            jnp.asarray(slot, jnp.int32),
+            self.sched.alloc.table()[slot],
+            jnp.asarray(off, jnp.int32),
+            jnp.asarray(clen, jnp.int32))
+        self._progressed = True
+        self._budget_left -= clen
+        self.prefill_computed += clen
+        cur["off"] = off + clen
+        self._lengths[slot] = off + clen
+        if cur["off"] >= tl:
+            # final chunk: its last-token logits seed decode
+            self._key, sub = jax.random.split(self._key)
+            tok = self._sample(logits, sub, self.gen)
+            tok0 = int(jax.block_until_ready(tok)[0])
+            self.clock += time.monotonic() - t0
+            del self._prefilling[slot]
+            self.sched.register_prefix(slot)
+            return self._take_first_token(slot, tok0, tl)
+        jax.block_until_ready(logits)
+        self.clock += time.monotonic() - t0
+        return []
+
+    def _take_first_token(self, slot: int, tok0: int,
+                          tl: int) -> list[TokenEvent]:
+        """Record a request's first sampled token after its prefill."""
+        req = self.sched.active[slot]
+        req.state = DECODING
+        first = req.t_first_token is None
+        if req.t_admitted is None:
+            req.t_admitted = req.t_first_token = self.clock
+        req.out_tokens.append(tok0)
+        self._next_tok[slot] = tok0
+        self._lengths[slot] = tl
+        # a preemption-resume re-prefill is not the stream's first token
+        events = [TokenEvent("first_token" if first else "token",
+                             req.rid, self.clock, token=tok0, slot=slot)]
+        if (self.gen.eos_id >= 0 and tok0 == self.gen.eos_id) or \
+                req.done_tokens >= self._eff_max[req.rid]:
+            events += self._finish(slot)
+        return events
+
+    def _finish(self, slot: int) -> list[TokenEvent]:
+        req = self.sched.active[slot]
+        req.state = FINISHED
+        req.t_done = self.clock
+        self._eff_max.pop(req.rid, None)
+        self.completed.append(self.sched.finish(slot))
+        return [TokenEvent("finish", req.rid, self.clock, slot=slot)]
+
+    def _decode_step(self) -> list[TokenEvent]:
+        """Batched decode over non-stalled, fully-prefilled slots; falls
+        back to recompute-preemption when nothing can run and no chunk
+        progressed this cycle."""
+        sched, g = self.sched, self.layout.page_size
+        if not sched.active:
+            return []   # cancellation emptied the cycle mid-flight
+        stalled = set(sched.ensure_pages(self._lengths,
+                                         skip=self._prefilling.keys()))
+        step_slots = [sl for sl in sched.active
+                      if sl not in stalled and sl not in self._prefilling]
+
+        # copy-on-write guard: never append into a shared page.
+        # Chunk-aligned adoption makes this a no-op in steady state
+        # (adopted pages all precede the write frontier), but it is the
+        # invariant that keeps sharing safe under any adoption policy
+        # (DESIGN.md §12).
+        if step_slots and (self.prefix_cache or self.cow_splits):
+            safe = []
+            for sl in step_slots:
+                pidx = int(self._lengths[sl]) // g
+                if (pidx < sched.alloc.slot_pages(sl) and
+                        sched.alloc.refcount(
+                            sched.alloc.page_at(sl, pidx)) > 1):
+                    if not sched.alloc.can_alloc(1):
+                        sched.reclaim(1)
+                    if not sched.alloc.can_alloc(1):
+                        stalled.add(sl)
+                        continue
+                    src, dst = sched.alloc.cow(sl, pidx)
+                    self.state = self._copy_pages(
+                        self.state, jnp.asarray(src, jnp.int32),
+                        jnp.asarray(dst, jnp.int32))
+                    self.cow_splits += 1
+                safe.append(sl)
+            step_slots = safe
+
+        if not step_slots:
+            if self._progressed:
+                return []   # chunk prefill advanced; next cycle retries
+            # every slot needs a page and the pool is dry: recompute-
+            # preempt the most recent admission so the rest make progress
+            victim = max(sched.active, key=self._admit_seq.__getitem__)
+            vreq = sched.active[victim]
+            if vreq.preemptions >= 64:
+                raise RuntimeError(
+                    "request thrashing on preemption — pool too small to "
+                    "finish any request")
+            # mid-prefill slots can't be victims: chunk work always
+            # progresses when any exist, and progress skips this branch
+            assert victim not in self._prefilling
+            retracted = None
+            if vreq.out_tokens:
+                retracted = vreq.out_tokens.pop()   # un-fed; re-sampled
+            self._eff_max.pop(vreq.rid, None)
+            sched.preempt(victim)
+            vreq.state = PREEMPTED
+            # the preempt event carries the retracted token: streaming
+            # consumers must drop their last token for this rid
+            return [TokenEvent("preempt", vreq.rid, self.clock,
+                               token=retracted, slot=victim)]
+
+        s = self.layout.slots
+        mask = np.zeros((s,), bool)
+        mask[step_slots] = True
+        # width-slice the page table to the live pages of this step's
+        # batch: the decode step then reads O(live tokens) instead of
+        # O(pool capacity) (one compile per pow2 bucket)
+        w = self._step_width(
+            max(int(self._lengths[sl]) // g + 1 for sl in step_slots))
+        t0 = time.monotonic()
+        logits, self.state = self._decode(
+            self.params, self.state, jnp.asarray(self._next_tok),
+            sched.alloc.table()[:, :w], jnp.asarray(mask))
+        self._key, sub = jax.random.split(self._key)
+        toks = np.asarray(
+            jax.block_until_ready(self._sample(logits, sub, self.gen)))
+        step_s = time.monotonic() - t0
+        self.clock += step_s
+        self.decode_steps += 1
+        self._step_times.append(step_s)
+        self._util.append(sched.utilization())
+        self._active_hist.append(len(step_slots))
+
+        events = []
+        for sl in step_slots:
+            self._lengths[sl] += 1
+            req = sched.active[sl]
+            t = int(toks[sl])
+            req.out_tokens.append(t)
+            self._next_tok[sl] = t
+            events.append(TokenEvent("token", req.rid, self.clock,
+                                     token=t, slot=sl))
+            if (self.gen.eos_id >= 0 and t == self.gen.eos_id) or \
+                    req.done_tokens >= self._eff_max[req.rid]:
+                events += self._finish(sl)
+        return events
+
+    # --- session results --------------------------------------------------
+
+    def events(self) -> Iterator[TokenEvent]:
+        """Drive :meth:`step` until the engine has no work, yielding each
+        event as it happens (the batch-replay convenience; open-loop
+        drivers call :meth:`step` themselves)."""
+        while self.has_work:
+            yield from self.step()
+
+    def result(self) -> dict:
+        """Aggregate session metrics plus the completed request objects
+        (tokens + timestamps filled in) — the same dict the monolithic
+        ``run()`` returned."""
+        completed = self.completed
+        total_tokens = sum(r.done_tokens for r in completed)
+        lats = sorted(r.latency() for r in completed)
+
+        def pct(p):
+            return nearest_rank_pct(lats, p)
+
+        step_times = self._step_times
+        res = {
+            "requests": completed,
+            "total_tokens": total_tokens,
+            "wall_s": self.clock,
+            "tokens_per_s": total_tokens / max(self.clock, 1e-9),
+            "p50_latency_s": pct(50),
+            "p99_latency_s": pct(99),
+            "decode_steps": self.decode_steps,
+            "decode_step_s_mean": float(np.mean(step_times)) if step_times
+            else 0.0,
+            "decode_step_s_p50": float(np.median(step_times)) if step_times
+            else 0.0,
+            "decode_backend": self.model.cfg.decode_backend,
+            "mean_active_slots": float(np.mean(self._active_hist))
+            if self._active_hist else 0.0,
+            "mean_page_utilization": float(np.mean(self._util))
+            if self._util else 0.0,
+            "cache_bytes": _tree_bytes(self.state),
+            "cache_bytes_per_layer": (
+                self.model.cache_layer_bytes(self.state)
+                if self.model.cache_layer_bytes else None),
+            "prefill_chunk": self.prefill_chunk,
+            "prefix_cache": self.prefix_cache,
+            "prefill_tokens_computed": self.prefill_computed,
+            "prefill_tokens_skipped": self.prefill_skipped,
+            "prefix_hit_rate": self.prefill_skipped / max(
+                self.prefill_skipped + self.prefill_computed, 1),
+            "adopted_pages": self.sched.adopted_pages,
+            "fresh_pages": self.sched.fresh_pages,
+            "cow_splits": self.cow_splits,
+            "cancelled_requests": self.cancelled,
+            "n_cancelled": len(self.cancelled),
+        }
+        if self.prefix is not None:
+            from repro.core import paged_cache as pgc
+            page_bytes = sum(pgc.pool_page_bytes(c) for c in self.state)
+            res["pool_page_bytes"] = page_bytes
+            res["prefix_pool_bytes_saved"] = \
+                self.sched.adopted_pages * page_bytes
+            res["prefix_index"] = {
+                "entries": len(self.prefix), "queries": self.prefix.queries,
+                "evictions": self.prefix.evictions,
+            }
+        return res

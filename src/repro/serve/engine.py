@@ -1,133 +1,31 @@
 """Serving engines over the quantized KV cache.
 
 * :class:`ServeEngine` — static batching: one shared prefill, lock-step
-  decode, the whole batch stalls until its slowest request finishes. Kept
-  as the baseline (and for single-batch offline use).
-* :class:`ContinuousBatchingEngine` — per-request admission into a paged
-  cache (`core.paged_cache`): requests join mid-flight as slots/pages free
-  up, decode steps batch all active slots at heterogeneous positions, and
-  EOS immediately reclaims pages. All device shapes are static (slots,
-  pages, prompt buckets), so the decode step jits exactly once and prefill
-  jits once per bucket.
+  decode, the whole batch stalls until its slowest request finishes.
+  Defined in :mod:`repro.serve.core` (the device-dispatch layer),
+  re-exported here for back-compat.
+* :class:`ContinuousBatchingEngine` — the closed-batch adapter over
+  :class:`~repro.serve.core.EngineCore`: submit a whole request list,
+  drain the step loop to quiescence, return aggregate metrics. The step
+  machine replays the pre-refactor monolithic loop bit-identically
+  (same greedy tokens, same page-adoption decisions, same metrics —
+  asserted against the frozen oracle in ``tests/cb_reference.py``), so
+  ``run()`` is now ~20 lines of host-side driving with zero device
+  dispatch of its own. For open-loop serving (requests arriving and
+  cancelling while the loop runs, tokens streamed as they are sampled)
+  use :class:`repro.serve.api.StreamingEngine` over the same core.
 
-Under a mesh, caches shard batch over (pod, data) and the sequence/group
-axis over model (context-parallel decode).
+This module is deliberately host-side-only — no ``jax`` imports; the
+layering lint (``scripts/check_engine_layering.sh``) enforces it.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from collections import deque
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.cache_layout import PagedLayout, PrefixIndex
-from repro.distributed import ctx
-from repro.distributed import sharding as shd
-from repro.models.registry import Model
-from repro.serve.scheduler import Request, Scheduler
-from repro.utils import cdiv, pow2_bucket, tree_bytes as _tree_bytes
-
-
-@dataclasses.dataclass(frozen=True)
-class GenerationConfig:
-    max_new_tokens: int = 32
-    temperature: float = 0.0      # 0 => greedy
-    top_k: int = 0
-    eos_id: int = -1              # -1 => never stop early
-    seed: int = 0
-
-
-def _sample(logits, key, gen: GenerationConfig):
-    if gen.temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    logits = logits / gen.temperature
-    if gen.top_k > 0:
-        vals, _ = jax.lax.top_k(logits, gen.top_k)
-        logits = jnp.where(logits < vals[..., -1:], -1e30, logits)
-    return jax.random.categorical(key, logits).astype(jnp.int32)
-
-
-class ServeEngine:
-    def __init__(self, model: Model, params, max_len: int,
-                 mesh=None, rules: Optional[dict] = None):
-        self.model = model
-        self.params = params
-        self.max_len = max_len
-        self.mesh = mesh
-        self.rules = rules
-        self._prefill = jax.jit(model.prefill)
-        # donate the decode state: cache buffers update in place instead of
-        # being copied every step (the state is rebound to the result)
-        self._decode = jax.jit(model.decode, donate_argnums=(1,))
-        self._sample = jax.jit(_sample, static_argnames=("gen",))
-
-    def _ctx(self):
-        if self.mesh is not None and self.rules is not None:
-            return ctx.use_sharding(self.mesh, self.rules)
-        import contextlib
-        return contextlib.nullcontext()
-
-    def generate(self, batch: dict, gen: GenerationConfig = GenerationConfig()):
-        """batch: prompt inputs (tokens (B, Tp) [+ frames/patches]).
-
-        Returns dict with generated tokens (B, max_new_tokens) and timings.
-        """
-        b = batch["tokens"].shape[0]
-        cfg = self.model.cfg
-        if cfg.family in ("dense", "moe", "vlm") and cfg.window == 0:
-            # linear cache: prompt + appended tokens must fit (the last
-            # sampled token is never appended, hence the -1)
-            tp = batch["tokens"].shape[1] + (
-                cfg.frontend_tokens if cfg.family == "vlm" else 0)
-            if tp + gen.max_new_tokens - 1 > self.max_len:
-                raise ValueError(
-                    f"prompt {tp} + max_new_tokens {gen.max_new_tokens} "
-                    f"exceeds cache capacity {self.max_len}")
-        key = jax.random.PRNGKey(gen.seed)
-        with self._ctx():
-            state = self.model.init_decode_state(b, self.max_len)
-            t0 = time.monotonic()
-            logits, state = self._prefill(self.params, batch, state)
-            logits.block_until_ready()
-            t_prefill = time.monotonic() - t0
-
-            toks = []
-            tok = self._sample(logits, key, gen)
-            toks.append(tok)
-            t0 = time.monotonic()
-            done = jnp.zeros((b,), bool)
-            for i in range(gen.max_new_tokens - 1):
-                logits, state = self._decode(self.params, state, tok)
-                key, sub = jax.random.split(key)
-                tok = self._sample(logits, sub, gen)
-                if gen.eos_id >= 0:
-                    done = done | (tok == gen.eos_id)
-                    tok = jnp.where(done, gen.eos_id, tok)
-                toks.append(tok)
-            jax.block_until_ready(tok)
-            t_decode = time.monotonic() - t0
-        out = jnp.stack(toks, axis=1)
-        n_dec = max(gen.max_new_tokens - 1, 1)
-        return {
-            "tokens": np.asarray(out),
-            "prefill_s": t_prefill,
-            "decode_s": t_decode,
-            "tokens_per_s": b * n_dec / max(t_decode, 1e-9),
-            "cache_bytes": _tree_bytes(state),
-            "cache_bytes_per_layer": (
-                self.model.cache_layer_bytes(state)
-                if self.model.cache_layer_bytes else None),
-        }
-
-
-
-# ---------------------------------------------------------------------------
-# Continuous batching over the paged cache
-# ---------------------------------------------------------------------------
+from repro.serve.core import (  # noqa: F401  (re-exports: back-compat)
+    EngineCore, GenerationConfig, ServeEngine, TokenEvent,
+)
+from repro.serve.scheduler import Request
 
 
 class ContinuousBatchingEngine:
@@ -146,422 +44,82 @@ class ContinuousBatchingEngine:
     compose queueing + compute. Call :meth:`warmup` first to take jit
     compilation out of the measurements.
 
-    Decode-step cost scales with the *live* context, not the pool: the
-    page table ships width-sliced to the smallest pow2 bucket covering the
-    step's live pages (one compile per bucket, see :meth:`_step_width`),
-    and the decode state is donated so page pools update in place instead
-    of being copied every step.
-
     **Chunked prefill** (``prefill_chunk > 0``): prompts are prefilled in
-    fixed-size page-aligned chunks through the model's
-    ``prefill_paged_chunk`` path (each chunk attends to the slot's cached
-    quantized prefix plus fp causal within the chunk), *interleaved* with
-    decode steps under a per-engine-step token budget
-    (``prefill_budget``, default one chunk) — long prompts no longer
-    stall decode latency for everyone else. One compile covers every
-    chunk of every prompt. ``prefill_chunk=0`` keeps the classic one-shot
-    prefill (per-bucket compiles, whole prompt before the next step).
+    fixed-size page-aligned chunks *interleaved* with decode steps under a
+    per-cycle token budget (``prefill_budget``, default one chunk) — long
+    prompts no longer stall decode latency for everyone else.
 
     **Shared-prefix page reuse** (``prefix_cache=True``, implies chunked
-    prefill): completed prompt prefills register their full-chunk pages
-    in a content-hash :class:`~repro.core.cache_layout.PrefixIndex`;
-    admissions matching an indexed prefix adopt those pages at
-    refcount+1 — the encoded bytes are shared verbatim, no re-encode —
-    and only prefill the tail. Adoption is chunk-aligned and the final
-    chunk is always recomputed, which makes a shared-prefix run
-    bit-identical to the unshared chunked baseline (greedy sampling).
-    A copy-on-write guard checks every decode append target and splits
-    shared pages before writing (a no-op under chunk-aligned adoption,
-    but load-bearing for any future partial-page sharing — DESIGN.md §12).
+    prefill): completed prompt prefills register their full-chunk pages in
+    a content-hash :class:`~repro.core.cache_layout.PrefixIndex`;
+    admissions matching an indexed prefix adopt those pages at refcount+1
+    and only prefill the tail — bit-identical to the unshared chunked
+    baseline under greedy sampling (DESIGN.md §12).
+
+    Scheduling, paging, preemption, and the decode-step mechanics
+    (width-sliced page tables, donated state, COW guard) all live in
+    :class:`~repro.serve.core.EngineCore`; this class only adapts the
+    batch-replay calling convention onto the step loop.
     """
 
-    def __init__(self, model: Model, params, *, max_slots: int = 4,
+    def __init__(self, model, params, *, max_slots: int = 4,
                  max_len: int = 256, num_pages: Optional[int] = None,
                  mesh=None, rules: Optional[dict] = None,
                  table_slicing: bool = True, prefix_cache: bool = False,
                  prefill_chunk: int = 0, prefill_budget: int = 0):
-        if model.decode_paged is None:
-            raise ValueError(
-                f"family {model.cfg.family!r} has no paged decode path")
-        self.model = model
-        self.params = params
-        self.mesh = mesh
-        self.rules = rules
-        # table_slicing=False ships the full (S, pages_per_slot) table every
-        # step — the pre-width-bucketing behavior, kept as a benchmark
-        # baseline (decode cost then scales with pool capacity)
-        self.table_slicing = table_slicing
-        # page == quantization group: every layer of the policy must agree
-        # on the group size (bit-widths/methods may differ per layer)
-        g = model.cfg.policy.page_group_size()
-        pages_per_slot = cdiv(max_len, g)
-        if num_pages is None:
-            num_pages = max_slots * pages_per_slot
-        self.layout = PagedLayout(page_size=g, num_pages=num_pages,
-                                  slots=max_slots,
-                                  pages_per_slot=pages_per_slot)
-        self.prefix_cache = bool(prefix_cache)
-        chunk = int(prefill_chunk)
-        if chunk < 0:
-            raise ValueError(f"prefill_chunk must be >= 0, got {chunk}")
-        if self.prefix_cache and chunk == 0:
-            chunk = 2 * g   # sharing requires the chunk-aligned path
-        if chunk:
-            chunk = cdiv(chunk, g) * g   # page-aligned chunks
-            if model.prefill_paged_chunk is None:
-                raise ValueError(
-                    f"family {model.cfg.family!r} has no chunked prefill "
-                    "path (prefill_paged_chunk)")
-        self.prefill_chunk = chunk
-        self.prefill_budget = int(prefill_budget) if prefill_budget else chunk
-        self._prefill = jax.jit(model.prefill_paged)
-        if chunk:
-            self._prefill_chunk = jax.jit(model.prefill_paged_chunk,
-                                          donate_argnums=(2,))
-        if model.copy_pages is not None:
-            self._copy_pages = jax.jit(model.copy_pages, donate_argnums=(0,))
-        # donate the paged state: page pools update in place each step
-        self._decode = jax.jit(model.decode_paged, donate_argnums=(1,))
-        self._sample = jax.jit(_sample, static_argnames=("gen",))
+        self.core = EngineCore(
+            model, params, max_slots=max_slots, max_len=max_len,
+            num_pages=num_pages, mesh=mesh, rules=rules,
+            table_slicing=table_slicing, prefix_cache=prefix_cache,
+            prefill_chunk=prefill_chunk, prefill_budget=prefill_budget)
 
-    def _decode_widths(self) -> list[int]:
-        """Page-table width buckets the decode step compiles against:
-        powers of two capped at ``pages_per_slot``."""
-        n = self.layout.pages_per_slot
-        if not self.table_slicing:
-            return [n]
-        widths, w = [], 1
-        while w < n:
-            widths.append(w)
-            w *= 2
-        widths.append(n)
-        return widths
+    # the knobs tests/benchmarks introspect, forwarded from the core
+    @property
+    def model(self):
+        return self.core.model
 
-    def _step_width(self, pages_needed: int) -> int:
-        """Smallest width bucket covering ``pages_needed`` live pages.
+    @property
+    def params(self):
+        return self.core.params
 
-        The decode step reads the page table only up to this width, so its
-        per-step cost scales with the *live* context of the current batch
-        — O(max live tokens) — instead of the pool capacity."""
-        if not self.table_slicing:
-            return self.layout.pages_per_slot
-        for w in self._decode_widths():
-            if w >= pages_needed:
-                return w
-        return self.layout.pages_per_slot
+    @property
+    def layout(self):
+        return self.core.layout
 
-    def _ctx(self):
-        if self.mesh is not None and self.rules is not None:
-            return ctx.use_sharding(self.mesh, self.rules)
-        import contextlib
-        return contextlib.nullcontext()
+    @property
+    def prefill_chunk(self) -> int:
+        return self.core.prefill_chunk
 
-    def _bucket(self, prompt_len: int) -> int:
-        return min(pow2_bucket(prompt_len, self.layout.page_size),
-                   self.layout.tokens_per_slot)
+    @property
+    def prefill_budget(self) -> int:
+        return self.core.prefill_budget
+
+    @property
+    def prefix_cache(self) -> bool:
+        return self.core.prefix_cache
+
+    @property
+    def table_slicing(self) -> bool:
+        return self.core.table_slicing
 
     def warmup(self, prompt_lens: list[int],
-               gen: GenerationConfig = GenerationConfig()) -> None:
-        """Compile prefill buckets (or the single chunk shape) + the decode
-        step against throwaway state."""
-        state = self.model.init_paged_state(self.layout)
-        sched = Scheduler(self.layout)
-        key = jax.random.PRNGKey(0)
-        s = self.layout.slots
-        with self._ctx():
-            if self.prefill_chunk:
-                # one compile covers every chunk of every prompt
-                c = self.prefill_chunk
-                logits, state = self._prefill_chunk(
-                    self.params, jnp.zeros((1, c), jnp.int32), state,
-                    jnp.zeros((), jnp.int32), sched.alloc.table()[0],
-                    jnp.zeros((), jnp.int32), jnp.asarray(c, jnp.int32))
-                jax.block_until_ready(self._sample(logits, key, gen))
-            else:
-                for tp in sorted({self._bucket(t) for t in prompt_lens}):
-                    logits, state = self._prefill(
-                        self.params, jnp.zeros((1, tp), jnp.int32), state,
-                        jnp.zeros((), jnp.int32), sched.alloc.table()[0],
-                        jnp.asarray(tp, jnp.int32))
-                    jax.block_until_ready(self._sample(logits, key, gen))
-            for w in self._decode_widths():
-                logits, state = self._decode(
-                    self.params, state, jnp.zeros((s,), jnp.int32),
-                    sched.alloc.table()[:, :w], jnp.zeros((s,), bool))
-                jax.block_until_ready(self._sample(logits, key, gen))
+               gen: Optional[GenerationConfig] = None) -> None:
+        """Compile prefill buckets (or the single chunk shape) + the
+        decode step against throwaway state."""
+        self.core.warmup(prompt_lens, gen)
 
     def run(self, requests: list[Request],
-            gen: GenerationConfig = GenerationConfig()) -> dict:
-        """Serve ``requests`` to completion. Returns aggregate metrics plus
-        the completed request objects (tokens + timestamps filled in)."""
-        prefix = (PrefixIndex(self.layout, self.prefill_chunk)
-                  if self.prefix_cache else None)
-        sched = Scheduler(self.layout, prefix_index=prefix,
-                          chunk_tokens=self.prefill_chunk)
-        state = self.model.init_paged_state(self.layout)
-        s = self.layout.slots
-        g = self.layout.page_size
-        next_tok = np.zeros((s,), np.int32)
-        lengths = np.zeros((s,), np.int64)
-        eff_max: dict[int, int] = {}
-        admit_seq: dict[int, int] = {}   # slot -> admission order (victim pick)
-        prefilling: dict[int, dict] = {}  # slot -> {"ctx": (T,) np, "off": int}
-        n_admitted = 0
-        clock = 0.0
-        key = jax.random.PRNGKey(gen.seed)
-        arrivals = deque(sorted(requests, key=lambda r: r.arrival_time))
-        completed: list[Request] = []
-        util, active_hist, step_times = [], [], []
-        steps = 0
-        prefill_computed = 0    # prefill tokens actually run through the model
-        prefill_skipped = 0     # prefill tokens served from adopted pages
-        cow_splits = 0
-
-        def finish(slot: int):
-            req = sched.active[slot]
-            req.t_done = clock
-            eff_max.pop(req.rid, None)
-            completed.append(sched.finish(slot))
-
-        def take_first_token(slot: int, tok0: int, tl: int):
-            """Record a request's first sampled token after its prefill."""
-            req = sched.active[slot]
-            if req.t_admitted is None:
-                req.t_admitted = req.t_first_token = clock
-            req.out_tokens.append(tok0)
-            next_tok[slot] = tok0
-            lengths[slot] = tl
-            if (gen.eos_id >= 0 and tok0 == gen.eos_id) or \
-                    req.done_tokens >= eff_max[req.rid]:
-                finish(slot)
-
-        with self._ctx():
-            while arrivals or sched.has_work:
-                while arrivals and arrivals[0].arrival_time <= clock:
-                    sched.submit(arrivals.popleft())
-
-                # idle engine: jump the clock to the next arrival
-                if not sched.has_work:
-                    clock = max(clock, arrivals[0].arrival_time)
-                    continue
-
-                # FCFS admission: chunked mode queues the prompt for
-                # interleaved chunk prefill; classic mode prefills the whole
-                # context in one shot (a preempted request resumes by
-                # prefilling its full context either way)
-                while (req := sched.admissible()) is not None:
-                    slot = sched.admit(req)
-                    admit_seq[slot] = n_admitted
-                    n_admitted += 1
-                    ctx_toks = req.context_tokens()
-                    tl = len(ctx_toks)
-                    eff_max[req.rid] = req.done_tokens + min(
-                        req.max_new_tokens - req.done_tokens,
-                        self.layout.tokens_per_slot - tl + 1)
-                    if self.prefill_chunk:
-                        # adopted prefix pages skip their prefill compute;
-                        # chunks cover [prefix_hit_tokens, tl)
-                        prefilling[slot] = {"ctx": ctx_toks,
-                                            "off": req.prefix_hit_tokens}
-                        lengths[slot] = req.prefix_hit_tokens
-                        prefill_skipped += req.prefix_hit_tokens
-                        continue
-                    toks = np.zeros((1, self._bucket(tl)), np.int32)
-                    toks[0, :tl] = ctx_toks
-                    t0 = time.monotonic()
-                    logits, state = self._prefill(
-                        self.params, jnp.asarray(toks), state,
-                        jnp.asarray(slot, jnp.int32),
-                        sched.alloc.table()[slot],
-                        jnp.asarray(tl, jnp.int32))
-                    key, sub = jax.random.split(key)
-                    tok = self._sample(logits, sub, gen)
-                    tok0 = int(jax.block_until_ready(tok)[0])
-                    clock += time.monotonic() - t0
-                    prefill_computed += tl
-                    take_first_token(slot, tok0, tl)
-
-                # interleaved chunk prefill: up to prefill_budget tokens per
-                # engine step, FCFS over mid-prefill slots; a slot joins the
-                # decode batch the step after its final chunk
-                progressed = False
-                budget = self.prefill_budget
-                while budget > 0 and prefilling:
-                    slot = min(prefilling, key=admit_seq.__getitem__)
-                    cur = prefilling[slot]
-                    ctx_toks, off = cur["ctx"], cur["off"]
-                    tl = len(ctx_toks)
-                    c = self.prefill_chunk
-                    clen = min(c, tl - off)
-                    toks = np.zeros((1, c), np.int32)
-                    toks[0, :clen] = ctx_toks[off:off + clen]
-                    t0 = time.monotonic()
-                    logits, state = self._prefill_chunk(
-                        self.params, jnp.asarray(toks), state,
-                        jnp.asarray(slot, jnp.int32),
-                        sched.alloc.table()[slot],
-                        jnp.asarray(off, jnp.int32),
-                        jnp.asarray(clen, jnp.int32))
-                    progressed = True
-                    budget -= clen
-                    prefill_computed += clen
-                    cur["off"] = off + clen
-                    lengths[slot] = off + clen
-                    if cur["off"] >= tl:
-                        # final chunk: its last-token logits seed decode
-                        key, sub = jax.random.split(key)
-                        tok = self._sample(logits, sub, gen)
-                        tok0 = int(jax.block_until_ready(tok)[0])
-                        clock += time.monotonic() - t0
-                        del prefilling[slot]
-                        sched.register_prefix(slot)
-                        take_first_token(slot, tok0, tl)
-                    else:
-                        jax.block_until_ready(logits)
-                        clock += time.monotonic() - t0
-
-                if not sched.active:
-                    if sched.pending and sched.admissible() is None:
-                        # nothing running and the queue head can't fit:
-                        # future arrivals can't free pages, so either wait
-                        # them out (clock jump) or fail loudly
-                        if arrivals:
-                            clock = max(clock, arrivals[0].arrival_time)
-                            continue
-                        raise RuntimeError(
-                            "pool cannot fit a single pending request "
-                            "(num_pages too small)")
-                    continue
-
-                # batched decode step over non-stalled, fully-prefilled slots
-                stalled = set(sched.ensure_pages(lengths,
-                                                 skip=prefilling.keys()))
-                step_slots = [sl for sl in sched.active
-                              if sl not in stalled and sl not in prefilling]
-
-                # copy-on-write guard: never append into a shared page.
-                # Chunk-aligned adoption makes this a no-op in steady state
-                # (adopted pages all precede the write frontier), but it is
-                # the invariant that keeps sharing safe under any adoption
-                # policy (DESIGN.md §12).
-                if step_slots and (self.prefix_cache or cow_splits):
-                    safe = []
-                    for sl in step_slots:
-                        pidx = int(lengths[sl]) // g
-                        if (pidx < sched.alloc.slot_pages(sl) and
-                                sched.alloc.refcount(
-                                    sched.alloc.page_at(sl, pidx)) > 1):
-                            if not sched.alloc.can_alloc(1):
-                                sched.reclaim(1)
-                            if not sched.alloc.can_alloc(1):
-                                stalled.add(sl)
-                                continue
-                            src, dst = sched.alloc.cow(sl, pidx)
-                            state = self._copy_pages(
-                                state, jnp.asarray(src, jnp.int32),
-                                jnp.asarray(dst, jnp.int32))
-                            cow_splits += 1
-                        safe.append(sl)
-                    step_slots = safe
-
-                if not step_slots:
-                    if progressed:
-                        continue   # chunk prefill advanced; decode retries
-                    # every slot needs a page and the pool is dry:
-                    # recompute-preempt the most recent admission so the
-                    # rest make progress
-                    victim = max(sched.active, key=admit_seq.__getitem__)
-                    vreq = sched.active[victim]
-                    if vreq.preemptions >= 64:
-                        raise RuntimeError(
-                            "request thrashing on preemption — pool too "
-                            "small to finish any request")
-                    # mid-prefill slots can't be victims: chunk work always
-                    # progresses when any exist, and progress skips this
-                    # branch entirely
-                    assert victim not in prefilling
-                    if vreq.out_tokens:
-                        vreq.out_tokens.pop()   # un-fed; re-sampled on resume
-                    eff_max.pop(vreq.rid, None)
-                    sched.preempt(victim)
-                    continue
-                mask = np.zeros((s,), bool)
-                mask[step_slots] = True
-                # width-slice the page table to the live pages of this
-                # step's batch: the decode step then reads O(live tokens)
-                # instead of O(pool capacity) (one compile per pow2 bucket)
-                w = self._step_width(
-                    max(int(lengths[sl]) // self.layout.page_size + 1
-                        for sl in step_slots))
-                t0 = time.monotonic()
-                logits, state = self._decode(
-                    self.params, state, jnp.asarray(next_tok),
-                    sched.alloc.table()[:, :w], jnp.asarray(mask))
-                key, sub = jax.random.split(key)
-                toks = np.asarray(
-                    jax.block_until_ready(self._sample(logits, sub, gen)))
-                step_s = time.monotonic() - t0
-                clock += step_s
-                steps += 1
-                step_times.append(step_s)
-                util.append(sched.utilization())
-                active_hist.append(len(step_slots))
-
-                for sl in step_slots:
-                    lengths[sl] += 1
-                    req = sched.active[sl]
-                    t = int(toks[sl])
-                    req.out_tokens.append(t)
-                    next_tok[sl] = t
-                    if (gen.eos_id >= 0 and t == gen.eos_id) or \
-                            req.done_tokens >= eff_max[req.rid]:
-                        finish(sl)
-
-        total_tokens = sum(r.done_tokens for r in completed)
-        lats = sorted(r.latency() for r in completed)
-
-        def pct(p):
-            if not lats:
-                return 0.0
-            return lats[min(int(p / 100 * len(lats)), len(lats) - 1)]
-
-        res = {
-            "requests": completed,
-            "total_tokens": total_tokens,
-            "wall_s": clock,
-            "tokens_per_s": total_tokens / max(clock, 1e-9),
-            "p50_latency_s": pct(50),
-            "p99_latency_s": pct(99),
-            "decode_steps": steps,
-            "decode_step_s_mean": float(np.mean(step_times)) if step_times
-            else 0.0,
-            "decode_step_s_p50": float(np.median(step_times)) if step_times
-            else 0.0,
-            "decode_backend": self.model.cfg.decode_backend,
-            "mean_active_slots": float(np.mean(active_hist)) if active_hist
-            else 0.0,
-            "mean_page_utilization": float(np.mean(util)) if util else 0.0,
-            "cache_bytes": _tree_bytes(state),
-            "cache_bytes_per_layer": (
-                self.model.cache_layer_bytes(state)
-                if self.model.cache_layer_bytes else None),
-            "prefill_chunk": self.prefill_chunk,
-            "prefix_cache": self.prefix_cache,
-            "prefill_tokens_computed": prefill_computed,
-            "prefill_tokens_skipped": prefill_skipped,
-            "prefix_hit_rate": prefill_skipped / max(
-                prefill_skipped + prefill_computed, 1),
-            "adopted_pages": sched.adopted_pages,
-            "fresh_pages": sched.fresh_pages,
-            "cow_splits": cow_splits,
-        }
-        if prefix is not None:
-            from repro.core import paged_cache as pgc
-            page_bytes = sum(pgc.pool_page_bytes(c) for c in state)
-            res["pool_page_bytes"] = page_bytes
-            res["prefix_pool_bytes_saved"] = sched.adopted_pages * page_bytes
-            res["prefix_index"] = {
-                "entries": len(prefix), "queries": prefix.queries,
-                "evictions": prefix.evictions,
-            }
+            gen: Optional[GenerationConfig] = None) -> dict:
+        """Serve ``requests`` to completion. Returns aggregate metrics
+        plus the completed request objects (tokens + timestamps filled
+        in) and, new with the step-loop core, the full ``TokenEvent``
+        stream under ``"events"`` (per-token timestamps for TTFT/ITL
+        percentiles — see ``benchmarks/bench_serving.py``)."""
+        core = self.core
+        core.reset(gen)
+        for req in sorted(requests, key=lambda r: r.arrival_time):
+            core.add_request(req)
+        events = list(core.events())
+        res = core.result()
+        res["events"] = events
         return res

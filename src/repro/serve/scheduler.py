@@ -50,6 +50,7 @@ class Request:
     # filled in by the engine
     out_tokens: list = dataclasses.field(default_factory=list)
     slot: int = -1
+    state: str = "waiting"              # EngineCore lifecycle (core.py)
     preemptions: int = 0
     prefix_hit_tokens: int = 0          # tokens adopted at the last admission
     t_admitted: Optional[float] = None
@@ -236,6 +237,38 @@ class Scheduler:
                 if not self.alloc.alloc(slot, 1):
                     stalled.append(slot)
         return stalled
+
+    # --- cancellation ----------------------------------------------------
+
+    def cancel(self, rid: int) -> tuple[Optional[Request], int]:
+        """Cancel request ``rid`` wherever the scheduler holds it.
+
+        Pending: dequeued without ever touching the pool. Active
+        (mid-prefill or mid-decode): released through :meth:`finish`, so
+        every owned page is *decref'd* — pages shared with other slots or
+        pinned by the prefix index survive with their encoded bytes
+        intact, exclusive pages return to the free list — and the slot
+        rejoins the free list for the next admission.
+
+        Returns ``(request, slot)``; ``slot`` is -1 for a pending cancel
+        and ``(None, -1)`` when ``rid`` is unknown (already finished,
+        already cancelled, or never submitted)."""
+        for i, req in enumerate(self.pending):
+            if req.rid == rid:
+                del self.pending[i]
+                # both admission memos may describe the removed request;
+                # a later request may legally reuse its rid (and even its
+                # context length), so stale hashes would adopt the wrong
+                # pages — force a fresh match for whoever is head next
+                self._last_query = (-1, -1)
+                self._hash_cache = (-1, -1, [])
+                return req, -1
+        for slot, req in self.active.items():
+            if req.rid == rid:
+                self._last_query = (-1, -1)
+                self._hash_cache = (-1, -1, [])
+                return self.finish(slot), slot
+        return None, -1
 
     # --- completion ------------------------------------------------------
 

@@ -46,6 +46,18 @@ def pow2_bucket(n: int, multiple: int) -> int:
     return b
 
 
+def nearest_rank_pct(sorted_vals, p: float) -> float:
+    """Nearest-rank percentile of pre-*sorted* values: the value at
+    1-based rank ``ceil(p/100 * n)`` (clamped to [1, n]); 0.0 on empty.
+    The single definition behind every serving latency percentile
+    (request latency, TTFT, ITL) so reported numbers stay comparable."""
+    n = len(sorted_vals)
+    if n == 0:
+        return 0.0
+    rank = min(max(math.ceil(p / 100 * n), 1), n)
+    return sorted_vals[rank - 1]
+
+
 def tree_bytes(tree: Any) -> int:
     """Total bytes of all arrays (or ShapeDtypeStructs) in a pytree."""
     leaves = jax.tree_util.tree_leaves(tree)

@@ -1,0 +1,345 @@
+"""Frozen pre-refactor ``ContinuousBatchingEngine.run()`` — the golden
+parity oracle for the EngineCore decomposition (DESIGN.md §13).
+
+This is a verbatim snapshot of the monolithic ``run()`` loop as it stood
+before the step-loop refactor (one closed ``while`` owning admission,
+chunked prefill, decode, sampling, preemption, and the clock). It drives
+the *live* Scheduler/PageAllocator/PrefixIndex — those were not part of
+the refactor — so any behavioral drift the decomposition introduces in
+greedy tokens, page-adoption decisions, or scheduling metrics shows up as
+a diff against this oracle on the same workload, on any platform (both
+engines run in the same process against the same weights).
+
+Do not "improve" this file: its value is that it does not change.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache_layout import PagedLayout, PrefixIndex
+from repro.distributed import ctx
+from repro.models.registry import Model
+from repro.serve.core import GenerationConfig, _sample
+from repro.serve.scheduler import Request, Scheduler
+from repro.utils import cdiv, pow2_bucket, tree_bytes as _tree_bytes
+
+
+class ReferenceCBEngine:
+    """Pre-refactor continuous-batching engine (closed-loop ``run()``)."""
+
+    def __init__(self, model: Model, params, *, max_slots: int = 4,
+                 max_len: int = 256, num_pages: Optional[int] = None,
+                 mesh=None, rules: Optional[dict] = None,
+                 table_slicing: bool = True, prefix_cache: bool = False,
+                 prefill_chunk: int = 0, prefill_budget: int = 0):
+        if model.decode_paged is None:
+            raise ValueError(
+                f"family {model.cfg.family!r} has no paged decode path")
+        self.model = model
+        self.params = params
+        self.mesh = mesh
+        self.rules = rules
+        self.table_slicing = table_slicing
+        g = model.cfg.policy.page_group_size()
+        pages_per_slot = cdiv(max_len, g)
+        if num_pages is None:
+            num_pages = max_slots * pages_per_slot
+        self.layout = PagedLayout(page_size=g, num_pages=num_pages,
+                                  slots=max_slots,
+                                  pages_per_slot=pages_per_slot)
+        self.prefix_cache = bool(prefix_cache)
+        chunk = int(prefill_chunk)
+        if self.prefix_cache and chunk == 0:
+            chunk = 2 * g
+        if chunk:
+            chunk = cdiv(chunk, g) * g
+        self.prefill_chunk = chunk
+        self.prefill_budget = int(prefill_budget) if prefill_budget else chunk
+        self._prefill = jax.jit(model.prefill_paged)
+        if chunk:
+            self._prefill_chunk = jax.jit(model.prefill_paged_chunk,
+                                          donate_argnums=(2,))
+        if model.copy_pages is not None:
+            self._copy_pages = jax.jit(model.copy_pages, donate_argnums=(0,))
+        self._decode = jax.jit(model.decode_paged, donate_argnums=(1,))
+        self._sample = jax.jit(_sample, static_argnames=("gen",))
+
+    def _decode_widths(self) -> list[int]:
+        n = self.layout.pages_per_slot
+        if not self.table_slicing:
+            return [n]
+        widths, w = [], 1
+        while w < n:
+            widths.append(w)
+            w *= 2
+        widths.append(n)
+        return widths
+
+    def _step_width(self, pages_needed: int) -> int:
+        if not self.table_slicing:
+            return self.layout.pages_per_slot
+        for w in self._decode_widths():
+            if w >= pages_needed:
+                return w
+        return self.layout.pages_per_slot
+
+    def _ctx(self):
+        if self.mesh is not None and self.rules is not None:
+            return ctx.use_sharding(self.mesh, self.rules)
+        import contextlib
+        return contextlib.nullcontext()
+
+    def _bucket(self, prompt_len: int) -> int:
+        return min(pow2_bucket(prompt_len, self.layout.page_size),
+                   self.layout.tokens_per_slot)
+
+    def run(self, requests: list[Request],
+            gen: Optional[GenerationConfig] = None) -> dict:
+        gen = gen if gen is not None else GenerationConfig()
+        prefix = (PrefixIndex(self.layout, self.prefill_chunk)
+                  if self.prefix_cache else None)
+        sched = Scheduler(self.layout, prefix_index=prefix,
+                          chunk_tokens=self.prefill_chunk)
+        state = self.model.init_paged_state(self.layout)
+        s = self.layout.slots
+        g = self.layout.page_size
+        next_tok = np.zeros((s,), np.int32)
+        lengths = np.zeros((s,), np.int64)
+        eff_max: dict[int, int] = {}
+        admit_seq: dict[int, int] = {}
+        prefilling: dict[int, dict] = {}
+        n_admitted = 0
+        clock = 0.0
+        key = jax.random.PRNGKey(gen.seed)
+        arrivals = deque(sorted(requests, key=lambda r: r.arrival_time))
+        completed: list[Request] = []
+        util, active_hist, step_times = [], [], []
+        steps = 0
+        prefill_computed = 0
+        prefill_skipped = 0
+        cow_splits = 0
+
+        def finish(slot: int):
+            req = sched.active[slot]
+            req.t_done = clock
+            eff_max.pop(req.rid, None)
+            completed.append(sched.finish(slot))
+
+        def take_first_token(slot: int, tok0: int, tl: int):
+            req = sched.active[slot]
+            if req.t_admitted is None:
+                req.t_admitted = req.t_first_token = clock
+            req.out_tokens.append(tok0)
+            next_tok[slot] = tok0
+            lengths[slot] = tl
+            if (gen.eos_id >= 0 and tok0 == gen.eos_id) or \
+                    req.done_tokens >= eff_max[req.rid]:
+                finish(slot)
+
+        with self._ctx():
+            while arrivals or sched.has_work:
+                while arrivals and arrivals[0].arrival_time <= clock:
+                    sched.submit(arrivals.popleft())
+
+                if not sched.has_work:
+                    clock = max(clock, arrivals[0].arrival_time)
+                    continue
+
+                while (req := sched.admissible()) is not None:
+                    slot = sched.admit(req)
+                    admit_seq[slot] = n_admitted
+                    n_admitted += 1
+                    ctx_toks = req.context_tokens()
+                    tl = len(ctx_toks)
+                    eff_max[req.rid] = req.done_tokens + min(
+                        req.max_new_tokens - req.done_tokens,
+                        self.layout.tokens_per_slot - tl + 1)
+                    if self.prefill_chunk:
+                        prefilling[slot] = {"ctx": ctx_toks,
+                                            "off": req.prefix_hit_tokens}
+                        lengths[slot] = req.prefix_hit_tokens
+                        prefill_skipped += req.prefix_hit_tokens
+                        continue
+                    toks = np.zeros((1, self._bucket(tl)), np.int32)
+                    toks[0, :tl] = ctx_toks
+                    t0 = time.monotonic()
+                    logits, state = self._prefill(
+                        self.params, jnp.asarray(toks), state,
+                        jnp.asarray(slot, jnp.int32),
+                        sched.alloc.table()[slot],
+                        jnp.asarray(tl, jnp.int32))
+                    key, sub = jax.random.split(key)
+                    tok = self._sample(logits, sub, gen)
+                    tok0 = int(jax.block_until_ready(tok)[0])
+                    clock += time.monotonic() - t0
+                    prefill_computed += tl
+                    take_first_token(slot, tok0, tl)
+
+                progressed = False
+                budget = self.prefill_budget
+                while budget > 0 and prefilling:
+                    slot = min(prefilling, key=admit_seq.__getitem__)
+                    cur = prefilling[slot]
+                    ctx_toks, off = cur["ctx"], cur["off"]
+                    tl = len(ctx_toks)
+                    c = self.prefill_chunk
+                    clen = min(c, tl - off)
+                    toks = np.zeros((1, c), np.int32)
+                    toks[0, :clen] = ctx_toks[off:off + clen]
+                    t0 = time.monotonic()
+                    logits, state = self._prefill_chunk(
+                        self.params, jnp.asarray(toks), state,
+                        jnp.asarray(slot, jnp.int32),
+                        sched.alloc.table()[slot],
+                        jnp.asarray(off, jnp.int32),
+                        jnp.asarray(clen, jnp.int32))
+                    progressed = True
+                    budget -= clen
+                    prefill_computed += clen
+                    cur["off"] = off + clen
+                    lengths[slot] = off + clen
+                    if cur["off"] >= tl:
+                        key, sub = jax.random.split(key)
+                        tok = self._sample(logits, sub, gen)
+                        tok0 = int(jax.block_until_ready(tok)[0])
+                        clock += time.monotonic() - t0
+                        del prefilling[slot]
+                        sched.register_prefix(slot)
+                        take_first_token(slot, tok0, tl)
+                    else:
+                        jax.block_until_ready(logits)
+                        clock += time.monotonic() - t0
+
+                if not sched.active:
+                    if sched.pending and sched.admissible() is None:
+                        if arrivals:
+                            clock = max(clock, arrivals[0].arrival_time)
+                            continue
+                        raise RuntimeError(
+                            "pool cannot fit a single pending request "
+                            "(num_pages too small)")
+                    continue
+
+                stalled = set(sched.ensure_pages(lengths,
+                                                 skip=prefilling.keys()))
+                step_slots = [sl for sl in sched.active
+                              if sl not in stalled and sl not in prefilling]
+
+                if step_slots and (self.prefix_cache or cow_splits):
+                    safe = []
+                    for sl in step_slots:
+                        pidx = int(lengths[sl]) // g
+                        if (pidx < sched.alloc.slot_pages(sl) and
+                                sched.alloc.refcount(
+                                    sched.alloc.page_at(sl, pidx)) > 1):
+                            if not sched.alloc.can_alloc(1):
+                                sched.reclaim(1)
+                            if not sched.alloc.can_alloc(1):
+                                stalled.add(sl)
+                                continue
+                            src, dst = sched.alloc.cow(sl, pidx)
+                            state = self._copy_pages(
+                                state, jnp.asarray(src, jnp.int32),
+                                jnp.asarray(dst, jnp.int32))
+                            cow_splits += 1
+                        safe.append(sl)
+                    step_slots = safe
+
+                if not step_slots:
+                    if progressed:
+                        continue
+                    victim = max(sched.active, key=admit_seq.__getitem__)
+                    vreq = sched.active[victim]
+                    if vreq.preemptions >= 64:
+                        raise RuntimeError(
+                            "request thrashing on preemption — pool too "
+                            "small to finish any request")
+                    assert victim not in prefilling
+                    if vreq.out_tokens:
+                        vreq.out_tokens.pop()
+                    eff_max.pop(vreq.rid, None)
+                    sched.preempt(victim)
+                    continue
+                mask = np.zeros((s,), bool)
+                mask[step_slots] = True
+                w = self._step_width(
+                    max(int(lengths[sl]) // self.layout.page_size + 1
+                        for sl in step_slots))
+                t0 = time.monotonic()
+                logits, state = self._decode(
+                    self.params, state, jnp.asarray(next_tok),
+                    sched.alloc.table()[:, :w], jnp.asarray(mask))
+                key, sub = jax.random.split(key)
+                toks = np.asarray(
+                    jax.block_until_ready(self._sample(logits, sub, gen)))
+                step_s = time.monotonic() - t0
+                clock += step_s
+                steps += 1
+                step_times.append(step_s)
+                util.append(sched.utilization())
+                active_hist.append(len(step_slots))
+
+                for sl in step_slots:
+                    lengths[sl] += 1
+                    req = sched.active[sl]
+                    t = int(toks[sl])
+                    req.out_tokens.append(t)
+                    next_tok[sl] = t
+                    if (gen.eos_id >= 0 and t == gen.eos_id) or \
+                            req.done_tokens >= eff_max[req.rid]:
+                        finish(sl)
+
+        total_tokens = sum(r.done_tokens for r in completed)
+        lats = sorted(r.latency() for r in completed)
+
+        def pct(p):
+            if not lats:
+                return 0.0
+            return lats[min(int(p / 100 * len(lats)), len(lats) - 1)]
+
+        res = {
+            "requests": completed,
+            "total_tokens": total_tokens,
+            "wall_s": clock,
+            "tokens_per_s": total_tokens / max(clock, 1e-9),
+            "p50_latency_s": pct(50),
+            "p99_latency_s": pct(99),
+            "decode_steps": steps,
+            "decode_step_s_mean": float(np.mean(step_times)) if step_times
+            else 0.0,
+            "decode_step_s_p50": float(np.median(step_times)) if step_times
+            else 0.0,
+            "decode_backend": self.model.cfg.decode_backend,
+            "mean_active_slots": float(np.mean(active_hist)) if active_hist
+            else 0.0,
+            "mean_page_utilization": float(np.mean(util)) if util else 0.0,
+            "cache_bytes": _tree_bytes(state),
+            "cache_bytes_per_layer": (
+                self.model.cache_layer_bytes(state)
+                if self.model.cache_layer_bytes else None),
+            "prefill_chunk": self.prefill_chunk,
+            "prefix_cache": self.prefix_cache,
+            "prefill_tokens_computed": prefill_computed,
+            "prefill_tokens_skipped": prefill_skipped,
+            "prefix_hit_rate": prefill_skipped / max(
+                prefill_skipped + prefill_computed, 1),
+            "adopted_pages": sched.adopted_pages,
+            "fresh_pages": sched.fresh_pages,
+            "cow_splits": cow_splits,
+        }
+        if prefix is not None:
+            from repro.core import paged_cache as pgc
+            page_bytes = sum(pgc.pool_page_bytes(c) for c in state)
+            res["pool_page_bytes"] = page_bytes
+            res["prefix_pool_bytes_saved"] = sched.adopted_pages * page_bytes
+            res["prefix_index"] = {
+                "entries": len(prefix), "queries": prefix.queries,
+                "evictions": prefix.evictions,
+            }
+        return res

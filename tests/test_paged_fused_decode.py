@@ -287,7 +287,7 @@ def test_decode_state_donated_no_per_step_copy(smoke_model):
     args = (params, state, jnp.zeros((s,), jnp.int32),
             jnp.zeros((s, eng.layout.pages_per_slot), jnp.int32),
             jnp.zeros((s,), bool))
-    compiled = eng._decode.lower(*args).compile()
+    compiled = eng.core._decode.lower(*args).compile()
     ma = compiled.memory_analysis()
     state_bytes = tree_bytes(state)
     assert ma.alias_size_in_bytes >= 0.9 * state_bytes

@@ -1,0 +1,441 @@
+"""EngineCore step loop + streaming front door (DESIGN.md §13).
+
+Golden parity: the rebuilt ``ContinuousBatchingEngine.run()`` (thin batch
+adapter over ``EngineCore.step()``) must reproduce the pre-refactor
+monolithic loop bit-identically — same greedy tokens, same page-adoption
+decisions, same scheduler metrics — against the frozen oracle in
+``cb_reference.py``, on both the classic one-shot path (with preemption)
+and the shared-prefix chunked path (the ``bench_serving --shared-prefix``
+workload in miniature).
+
+Streaming: token events reconstruct outputs, the clock is monotonic, and
+cancellation (queued / mid-prefill / mid-decode, with and without the
+prefix cache) always leaves the allocator consistent — cancelled pages
+return to the free list or index-only state, never freed under the
+index's refcounts — and the freed slot is reusable by the next admission.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from cb_reference import ReferenceCBEngine
+from repro.configs import get_config, reduce_for_smoke
+from repro.models import get_model
+from repro.serve import (
+    ContinuousBatchingEngine, EngineCore, GenerationConfig, Request,
+    Scheduler, StreamingEngine, stream_latency_stats,
+)
+from repro.serve.core import EVENT_KINDS
+from test_prefix_cache import check_alloc_invariants
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = reduce_for_smoke(get_config("tinyllama-1.1b"))
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _poisson_requests(cfg, n, rate=20.0, seed=0, lo=8, hi=50,
+                      max_new=(3, 12)):
+    rng = np.random.default_rng(seed)
+    t, reqs = 0.0, []
+    for i in range(n):
+        t += rng.exponential(1.0 / rate)
+        reqs.append(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size, (int(rng.integers(
+                lo, hi)),)).astype(np.int32),
+            max_new_tokens=int(rng.integers(*max_new)),
+            arrival_time=t))
+    return reqs
+
+
+def _shared_prefix_requests(cfg, n=8, rate=20.0, seed=0, prefix_len=96,
+                            suffix=(8, 32), out=(4, 24)):
+    """bench_serving.make_shared_prefix_workload in miniature: one system
+    prompt shared by the whole fleet + short random user suffixes."""
+    rng = np.random.default_rng(seed)
+    shared = rng.integers(0, 512, (prefix_len,)).astype(np.int32)
+    t, reqs = 0.0, []
+    for i in range(n):
+        t += rng.exponential(1.0 / rate)
+        sfx = rng.integers(0, 512, (int(rng.integers(
+            suffix[0], suffix[1] + 1)),)).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=np.concatenate([shared, sfx]),
+                            max_new_tokens=int(rng.integers(
+                                out[0], out[1] + 1)),
+                            arrival_time=t))
+    return reqs
+
+
+def _clone(reqs, zero_arrivals=False):
+    """Fresh Request objects; ``zero_arrivals`` makes every request
+    arrive at t=0, removing the only wall-clock-dependent input to the
+    scheduler (arrival pumping) so two runs make identical decisions —
+    what the bit-identical parity assertions need."""
+    return [Request(rid=r.rid, prompt=r.prompt,
+                    max_new_tokens=r.max_new_tokens,
+                    arrival_time=0.0 if zero_arrivals else r.arrival_time)
+            for r in reqs]
+
+
+# the decisions that must survive the refactor bit-identically (wall-clock
+# derived metrics — tokens_per_s, latencies — legitimately jitter)
+PARITY_KEYS = [
+    "total_tokens", "decode_steps", "prefill_tokens_computed",
+    "prefill_tokens_skipped", "prefix_hit_rate", "adopted_pages",
+    "fresh_pages", "cow_splits", "mean_active_slots",
+    "mean_page_utilization", "prefill_chunk", "prefix_cache",
+]
+
+
+def _assert_parity(ref: dict, new: dict):
+    for k in PARITY_KEYS:
+        assert new[k] == ref[k], f"{k}: {new[k]} != {ref[k]}"
+    if "prefix_index" in ref:
+        assert new["prefix_index"] == ref["prefix_index"]
+    ref_out = {r.rid: (list(r.out_tokens), r.preemptions)
+               for r in ref["requests"]}
+    new_out = {r.rid: (list(r.out_tokens), r.preemptions)
+               for r in new["requests"]}
+    assert new_out == ref_out
+
+
+def test_golden_parity_classic_with_preemption(smoke_model):
+    """One-shot prefill path under an oversubscribed pool: admission
+    order, decode steps, preemption victims, and greedy tokens all match
+    the frozen monolith."""
+    cfg, m, params = smoke_model
+    g = cfg.quant.group_size
+    rng = np.random.default_rng(1)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        (g - 2 + 3 * i,)).astype(np.int32),
+                    max_new_tokens=40, arrival_time=0.01 * i)
+            for i in range(3)]
+    kw = dict(max_slots=2, max_len=5 * g, num_pages=4)
+    ref = ReferenceCBEngine(m, params, **kw).run(
+        _clone(reqs, zero_arrivals=True))
+    new = ContinuousBatchingEngine(m, params, **kw).run(
+        _clone(reqs, zero_arrivals=True))
+    assert sum(r.preemptions for r in ref["requests"]) > 0
+    _assert_parity(ref, new)
+
+
+def test_golden_parity_shared_prefix_chunked(smoke_model):
+    """The acceptance workload: chunked prefill + prefix-cache adoption.
+    Page-adoption decisions and prefix-hit metrics must be identical."""
+    cfg, m, params = smoke_model
+    reqs = _shared_prefix_requests(cfg)
+    kw = dict(max_slots=3, max_len=192, prefix_cache=True,
+              prefill_chunk=32)
+    ref = ReferenceCBEngine(m, params, **kw).run(
+        _clone(reqs, zero_arrivals=True))
+    new = ContinuousBatchingEngine(m, params, **kw).run(
+        _clone(reqs, zero_arrivals=True))
+    assert ref["adopted_pages"] > 0, "workload must exercise adoption"
+    _assert_parity(ref, new)
+
+
+def test_event_stream_reconstructs_outputs(smoke_model):
+    """On a preemption-free run, the token-bearing events replay each
+    request's output exactly; the event clock is monotonic and every
+    request walks admit -> first_token -> token* -> finish in order."""
+    cfg, m, params = smoke_model
+    eng = ContinuousBatchingEngine(m, params, max_slots=3, max_len=128)
+    out = eng.run(_poisson_requests(cfg, 6))
+    events = out["events"]
+    assert events and all(ev.kind in EVENT_KINDS for ev in events)
+    ts = [ev.t for ev in events]
+    assert ts == sorted(ts), "event clock must be monotonic"
+    streamed: dict[int, list[int]] = {}
+    seen: dict[int, list[str]] = {}
+    for ev in events:
+        seen.setdefault(ev.rid, []).append(ev.kind)
+        if ev.kind in ("first_token", "token"):
+            streamed.setdefault(ev.rid, []).append(ev.token)
+    for r in out["requests"]:
+        assert streamed[r.rid] == list(r.out_tokens)
+        kinds = seen[r.rid]
+        assert kinds[0] == "admit" and kinds[1] == "first_token"
+        assert kinds[-1] == "finish"
+    stats = stream_latency_stats(events, out["requests"])
+    assert stats["ttft_s"]["n"] == len(out["requests"])
+    assert stats["itl_s"]["n"] == out["total_tokens"] - len(out["requests"])
+    assert stats["ttft_s"]["p99"] >= stats["ttft_s"]["p50"] >= 0
+
+
+def test_streaming_engine_matches_batch_run(smoke_model):
+    """Submitting the same workload through the streaming front door
+    yields the same greedy tokens as the batch adapter (same core, two
+    sessions)."""
+    cfg, m, params = smoke_model
+    eng = ContinuousBatchingEngine(m, params, max_slots=3, max_len=128)
+    reqs = _poisson_requests(cfg, 5, seed=4)
+    batch = eng.run(_clone(reqs, zero_arrivals=True))
+    stream = StreamingEngine(eng)
+    for r in _clone(reqs, zero_arrivals=True):
+        stream.submit(r)
+    streamed: dict[int, list[int]] = {}
+    for ev in stream.events():
+        if ev.kind in ("first_token", "token"):
+            streamed.setdefault(ev.rid, []).append(ev.token)
+    assert streamed == {r.rid: list(r.out_tokens)
+                        for r in batch["requests"]}
+    res = stream.result()
+    assert res["total_tokens"] == batch["total_tokens"]
+    assert res["decode_steps"] == batch["decode_steps"]
+
+
+def test_event_stream_preemption_retracts_token(smoke_model):
+    """Under preemption, the preempt event carries the retracted token
+    and applying the retraction rule (drop the rid's last streamed token)
+    reconstructs every request's output exactly."""
+    cfg, m, params = smoke_model
+    g = cfg.quant.group_size
+    rng = np.random.default_rng(1)
+    eng = ContinuousBatchingEngine(m, params, max_slots=2, max_len=5 * g,
+                                   num_pages=4)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        (g - 2,)).astype(np.int32),
+                    max_new_tokens=40) for i in range(2)]
+    out = eng.run(reqs)
+    assert sum(r.preemptions for r in out["requests"]) > 0
+    streamed: dict[int, list[int]] = {}
+    for ev in out["events"]:
+        if ev.kind in ("first_token", "token"):
+            streamed.setdefault(ev.rid, []).append(ev.token)
+        elif ev.kind == "preempt" and ev.token is not None:
+            assert streamed[ev.rid][-1] == ev.token
+            streamed[ev.rid].pop()
+    assert streamed == {r.rid: list(r.out_tokens)
+                        for r in out["requests"]}
+
+
+# ---------------------------------------------------------------------------
+# Cancellation
+# ---------------------------------------------------------------------------
+
+
+def _drive_until(stream, pred, limit=500):
+    evs = []
+    for _ in range(limit):
+        evs.extend(stream.step())
+        if pred(evs):
+            return evs
+    raise AssertionError("condition never reached")
+
+
+def test_cancel_mid_decode_frees_pages_and_reuses_slot(smoke_model):
+    """Cancel a decoding request: its pages return to the free list, the
+    allocator stays consistent, and the very next admission reuses the
+    freed slot."""
+    cfg, m, params = smoke_model
+    eng = ContinuousBatchingEngine(m, params, max_slots=2, max_len=128)
+    stream = StreamingEngine(eng)
+    core = stream.core
+    for r in _poisson_requests(cfg, 2, max_new=(30, 31),
+                               rate=1e6):  # both arrive ~immediately
+        stream.submit(r)
+    evs = _drive_until(stream, lambda es: sum(
+        1 for e in es if e.rid == 0 and e.kind in ("first_token", "token"))
+        >= 3)
+    slot0 = next(e.slot for e in evs if e.rid == 0 and e.kind == "admit")
+    used_before = core.sched.alloc.used_pages
+    assert stream.cancel(0)
+    check_alloc_invariants(core.sched.alloc)
+    assert core.sched.alloc.used_pages < used_before
+    assert 0 not in {r.rid for r in core.completed}
+    assert core.cancelled[0].rid == 0
+    assert core.cancelled[0].state == "cancelled"
+    assert not stream.cancel(0), "double cancel must be a no-op"
+    # the freed slot is admissible again immediately
+    rid2 = stream.add_request(np.arange(20, dtype=np.int32) % cfg.vocab_size,
+                              max_new_tokens=4)
+    evs = _drive_until(stream, lambda es: any(
+        e.rid == rid2 and e.kind == "finish" for e in es))
+    cancel_ev = [e for e in evs if e.kind == "cancel"]
+    assert cancel_ev and cancel_ev[0].rid == 0 and cancel_ev[0].slot == slot0
+    assert next(e.slot for e in evs
+                if e.rid == rid2 and e.kind == "admit") == slot0
+    # drain: everything else completes and the pool is fully reclaimed
+    list(stream.events())
+    check_alloc_invariants(core.sched.alloc)
+    assert core.sched.alloc.free_pages == core.layout.num_pages
+
+
+@pytest.mark.parametrize("prefix_cache", [False, True])
+def test_cancel_mid_prefill_chunked(smoke_model, prefix_cache):
+    """Cancel between prefill chunks: reserved pages are released (to the
+    free list, or to index-only state under the prefix cache) and the
+    engine keeps serving."""
+    cfg, m, params = smoke_model
+    g = cfg.quant.group_size
+    core = EngineCore(m, params, max_slots=2, max_len=6 * g,
+                      prefill_chunk=g, prefix_cache=prefix_cache)
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab_size, (4 * g,)).astype(np.int32)
+    core.add_request(Request(rid=0, prompt=prompt, max_new_tokens=6))
+    for _ in range(200):
+        core.step()
+        if core._prefilling and 0 < next(
+                iter(core._prefilling.values()))["off"] < 4 * g:
+            break
+    else:
+        raise AssertionError("never caught the request mid-prefill")
+    evs = core.cancel(0)
+    assert [e.kind for e in evs] == ["cancel"]
+    assert not core._prefilling
+    check_alloc_invariants(core.sched.alloc)
+    if prefix_cache:
+        # mid-prefill nothing was registered yet: all pages come back
+        assert len(core.prefix) == 0
+    assert core.sched.alloc.free_pages == core.layout.num_pages
+    # slot is immediately reusable
+    core.add_request(Request(rid=1, prompt=prompt[: 2 * g],
+                             max_new_tokens=4,
+                             arrival_time=core.clock))
+    while core.has_work:
+        core.step()
+    assert [r.rid for r in core.completed] == [1]
+    assert core.completed[0].done_tokens == 4
+    check_alloc_invariants(core.sched.alloc)
+
+
+def test_cancel_adopter_keeps_index_pages_live(smoke_model):
+    """With the prefix cache on, cancelling a request that adopted shared
+    pages must decref them to index-only state — never free them — and a
+    later admission re-adopts the same pages into the freed slot."""
+    cfg, m, params = smoke_model
+    g = cfg.quant.group_size
+    core = EngineCore(m, params, max_slots=2, max_len=6 * g,
+                      prefix_cache=True, prefill_chunk=g)
+    rng = np.random.default_rng(6)
+    shared = rng.integers(0, cfg.vocab_size, (3 * g,)).astype(np.int32)
+
+    def req(rid, tail_seed):
+        tail = rng.integers(0, cfg.vocab_size, (10,)).astype(np.int32) \
+            if tail_seed else np.zeros((0,), np.int32)
+        return Request(rid=rid, prompt=np.concatenate([shared, tail]),
+                       max_new_tokens=8, arrival_time=core.clock)
+
+    # donor prefills alone and registers the shared prefix
+    core.add_request(req(0, 0))
+    while core.has_work:
+        core.step()
+    assert len(core.prefix) > 0
+    index_pages = set(core.prefix.pages)
+
+    # adopter admits (hits the index), decodes a little, then cancels
+    core.add_request(req(1, 1))
+    events = []
+    for _ in range(300):
+        events.extend(core.step())
+        if sum(1 for e in events
+               if e.rid == 1 and e.kind in ("first_token", "token")) >= 2:
+            break
+    adopted_before = core.sched.adopted_pages
+    assert adopted_before > 0, "adopter must hit the prefix index"
+    core.cancel(1)
+    check_alloc_invariants(core.sched.alloc)
+    # every indexed page survived the cancel at exactly one ref (index)
+    for p in index_pages:
+        assert core.sched.alloc.refcount(p) == 1
+    # a later admission re-adopts the same pages into the freed slot
+    core.add_request(req(2, 1))
+    while core.has_work:
+        core.step()
+    assert core.sched.adopted_pages > adopted_before
+    assert [r.rid for r in core.completed if r.rid == 2] == [2]
+    check_alloc_invariants(core.sched.alloc)
+
+
+def test_add_request_rejects_oversized_prompt(smoke_model):
+    """An impossible context is rejected at intake (ValueError) instead
+    of poisoning the open-loop session when it reaches the queue head."""
+    cfg, m, params = smoke_model
+    eng = ContinuousBatchingEngine(m, params, max_slots=2, max_len=128)
+    stream = StreamingEngine(eng)
+    with pytest.raises(ValueError, match="pages_per_slot"):
+        stream.add_request(np.zeros(128, np.int32), max_new_tokens=4)
+    # the session is unharmed and keeps serving
+    rid = stream.add_request(np.zeros(16, np.int32), max_new_tokens=3)
+    kinds = [ev.kind for ev in stream.events() if ev.rid == rid]
+    assert kinds[-1] == "finish"
+    assert [r.rid for r in stream.core.completed] == [rid]
+
+
+def test_cancel_invalidates_hash_memo_across_rid_reuse():
+    """Scheduler-level: cancelling a pending request must drop its
+    memoized prefix hashes — a later request reusing the same rid with
+    an equal-length but different prompt must not adopt the cancelled
+    prompt's pages."""
+    from repro.core.cache_layout import PagedLayout, PrefixIndex
+    lay = PagedLayout(page_size=4, num_pages=16, slots=2, pages_per_slot=8)
+    sched = Scheduler(lay, prefix_index=PrefixIndex(lay, 4),
+                      chunk_tokens=4)
+    prompt_a = np.arange(12, dtype=np.int32)
+    donor = Request(rid=0, prompt=prompt_a)
+    sched.submit(donor)
+    assert sched.admissible() is donor
+    slot = sched.admit(donor)
+    sched.register_prefix(slot)     # prompt A's pages enter the index
+    sched.finish(slot)
+    # rid 5 with prompt A polls admission (hashes memoized), then cancels
+    req_a = Request(rid=5, prompt=prompt_a.copy())
+    sched.submit(req_a)
+    assert sched.admissible() is req_a
+    gone, slot_of_gone = sched.cancel(5)
+    assert gone is req_a and slot_of_gone == -1
+    # rid 5 reused: same length, different tokens — must miss the index
+    req_b = Request(rid=5, prompt=np.arange(100, 112, dtype=np.int32))
+    sched.submit(req_b)
+    assert sched.admissible() is req_b
+    sched.admit(req_b)
+    assert req_b.prefix_hit_tokens == 0
+    check_alloc_invariants(sched.alloc)
+
+
+def test_nearest_rank_pct_is_nearest_rank():
+    from repro.utils import nearest_rank_pct
+    assert nearest_rank_pct([], 50) == 0.0
+    assert nearest_rank_pct([1.0, 100.0], 50) == 1.0
+    assert nearest_rank_pct([1.0, 100.0], 99) == 100.0
+    vals = list(range(1, 11))
+    assert nearest_rank_pct(vals, 50) == 5    # ceil(0.50*10) = rank 5
+    assert nearest_rank_pct(vals, 95) == 10   # ceil(0.95*10) = rank 10
+    assert nearest_rank_pct(vals, 0) == 1
+
+
+def test_cancel_queued_request_never_touches_pool(smoke_model):
+    """Cancelling a not-yet-admitted request involves no pages; cancelling
+    an unknown rid is a no-op."""
+    cfg, m, params = smoke_model
+    eng = ContinuousBatchingEngine(m, params, max_slots=2, max_len=128)
+    stream = StreamingEngine(eng)
+    core = stream.core
+    rng = np.random.default_rng(7)
+    for i in range(4):   # 2 slots: at least two stay queued at first
+        stream.submit(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab_size,
+                                       (16,)).astype(np.int32),
+            max_new_tokens=12))
+    _drive_until(stream, lambda es: any(e.kind == "first_token"
+                                        for e in es))
+    queued = [r.rid for r in core.sched.pending] + \
+             [r.rid for r in core._arrivals]
+    assert queued, "test needs a queued request"
+    victim = queued[0]
+    used = core.sched.alloc.used_pages
+    assert stream.cancel(victim)
+    assert core.sched.alloc.used_pages == used
+    assert not stream.cancel(999)
+    rest = [e for e in stream.events()]
+    assert {e.rid for e in rest if e.kind == "finish"} == \
+        {0, 1, 2, 3} - {victim}
+    check_alloc_invariants(core.sched.alloc)
+    assert core.sched.alloc.free_pages == core.layout.num_pages
