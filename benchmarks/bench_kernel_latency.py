@@ -103,6 +103,65 @@ def run_paged() -> None:
              f"ratio={us_gathered / max(us_paged, 1e-9):.2f}x")
 
 
+def run_prefill() -> None:
+    """Chunked-prefill attention latency on the paged cache: jnp gather
+    (O(capacity)) vs page-native fused (O(live prefix)).
+
+    One slot holds a fixed live prefix while the pool capacity sweeps.
+    The jnp reference gathers ``pool[page_row]`` over the *full* table row
+    each chunk — cost grows with capacity even though the live prefix
+    never changes — while the page-native path walks only the live pages
+    through a width-sliced row and stays flat.
+    """
+    import functools as ft
+
+    from repro.core import paged_cache as pgc
+    from repro.core.cache_layout import PageAllocator, PagedLayout
+    from repro.core.quantizers import QuantConfig
+    from repro.utils import pow2_bucket
+
+    g = 64
+    live, tc = 512, 128                    # fixed prefix + one chunk
+    cfg = QuantConfig(method="polar", group_size=g, value_bits=4)
+    for cap_tokens in (1024, 4096, 8192):
+        lay = PagedLayout(page_size=g, num_pages=cap_tokens // g + 1,
+                          slots=1, pages_per_slot=cap_tokens // g)
+        alloc = PageAllocator(lay)
+        cache = pgc.init_paged_cache(cfg, lay, HKV, D)
+        if not alloc.alloc(0, lay.pages_for(live)):
+            raise RuntimeError("page pool sized to fit the prefix")
+        k = rope_structured_keys(jax.random.PRNGKey(0), 1, HKV, live, D)
+        v = jax.random.normal(jax.random.PRNGKey(100), (1, HKV, live, D))
+        cache = pgc.paged_prefill(cache, jnp.asarray(0), alloc.table()[0],
+                                  k, v, jnp.asarray(live))
+        q = jax.random.normal(jax.random.PRNGKey(1), (1, QH, tc, D))
+        kc = rope_structured_keys(jax.random.PRNGKey(2), 1, HKV, tc, D)
+        vc = jax.random.normal(jax.random.PRNGKey(3), (1, HKV, tc, D))
+        row = alloc.table()[0]
+        start = jnp.asarray(live, jnp.int32)
+        clen = jnp.asarray(tc, jnp.int32)
+        wp = min(pow2_bucket(lay.pages_for(live + tc), 1),
+                 lay.pages_per_slot)
+
+        jnp_ref = jax.jit(ft.partial(pgc.paged_prefill_attention,
+                                     backend="jnp"))
+        fused = jax.jit(ft.partial(pgc.paged_prefill_attention,
+                                   backend="paged_fused"))
+        # few iters: the jnp arm's dense softmax over the full capacity is
+        # seconds per call on CPU at 8k (which is the point being measured)
+        us_jnp = time_fn(jnp_ref, cache, q, kc, vc, row, start, clen,
+                         iters=3, warmup=1)
+        us_fused = time_fn(fused, cache, q, kc, vc, row[:wp], start, clen,
+                           iters=3, warmup=1)
+        tag = f"paged_prefill/cap{cap_tokens}_live{live}_chunk{tc}"
+        emit(f"{tag}/jnp_gather", us_jnp,
+             "full-pool gather + dense softmax (O(capacity))")
+        emit(f"{tag}/page_native", us_fused,
+             f"fused over live pages, table width {wp} (O(live))")
+        emit(f"{tag}/speedup_jnp_over_page_native", 0.0,
+             f"ratio={us_jnp / max(us_fused, 1e-9):.2f}x")
+
+
 def run() -> None:
     g = 128
     for b, t in [(1, 4096), (8, 4096), (8, 8192), (1, 32768)]:
@@ -134,6 +193,7 @@ def run() -> None:
         emit(f"qk_latency/b{b}_t{t}/bytes_ratio_fp16_over_polar44", 0.0,
              f"ratio={ratio:.2f}x")
     run_paged()
+    run_prefill()
 
 
 if __name__ == "__main__":

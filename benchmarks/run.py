@@ -29,11 +29,13 @@ def main() -> None:
             "--requests", "10", "--slots", "3", "--max-len", "192",
             "--out-lo", "4", "--out-hi", "24",
             "--sweep", "192,512,2048", "--shared-prefix", "96",
+            "--prefill-sweep", "2048,4096,8192",
             "--json", "BENCH_serving.json"])
         if rc:
             raise RuntimeError(
                 "serving regression: continuous batching lost to the "
-                "static baseline, or prefix reuse changed greedy outputs")
+                "static baseline, prefix reuse or the fused prefill "
+                "backend changed greedy outputs")
 
     suites = [
         ("quant_error(T1)", bench_quant_error.run),

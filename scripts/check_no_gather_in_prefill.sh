@@ -1,0 +1,50 @@
+#!/usr/bin/env bash
+# Guard the serve chunked-prefill hot path against regressing to the
+# gathering formulation. `chunk_prefill_attention` materializes
+# `pool[page_row]` — a dense O(capacity) copy of the slot's entire page
+# table — every chunk. It is kept ONLY as the parity reference and the
+# fallback for codecs without a page-native prefill kernel
+# (KeyCodec.paged_prefill's base implementation). The hot path must go
+# through paged_prefill_attention (kernels/paged_prefill.py walks the
+# page table in place), so:
+#
+#   * kernels/, models/, serve/, launch/ must not call
+#     chunk_prefill_attention directly (they dispatch through
+#     paged_prefill_attention, which routes per cfg.prefill_backend and
+#     codec capability);
+#   * inside core/, chunk_prefill_attention may only be *called* from its
+#     own definition, the dispatcher (paged_prefill_attention), or the
+#     codec-default fallback (KeyCodec.paged_prefill in codecs.py).
+set -u
+cd "$(dirname "$0")/.."
+
+fail=0
+
+hot=$(grep -rn 'chunk_prefill_attention(' src/repro/kernels \
+      src/repro/models src/repro/serve src/repro/launch \
+      --include='*.py' 2>/dev/null || true)
+if [ -n "$hot" ]; then
+    echo "ERROR: serve prefill hot path calls chunk_prefill_attention —" >&2
+    echo "route through paged_prefill_attention instead:" >&2
+    echo "$hot" >&2
+    fail=1
+fi
+
+core=$(awk '
+    FNR == 1 { fn = "" }
+    /^[ \t]*def [A-Za-z_]+/ { fn = $2; sub(/\(.*/, "", fn) }
+    /chunk_prefill_attention\(/ {
+        if (fn !~ /^(chunk_prefill_attention|paged_prefill_attention|paged_prefill)$/)
+            print FILENAME ":" FNR ": " $0
+    }
+' src/repro/core/*.py)
+if [ -n "$core" ]; then
+    echo "ERROR: chunk_prefill_attention called outside its definition," >&2
+    echo "the paged_prefill_attention dispatcher, or the codec-default" >&2
+    echo "KeyCodec.paged_prefill fallback:" >&2
+    echo "$core" >&2
+    fail=1
+fi
+
+[ "$fail" -eq 0 ] || exit 1
+echo "no-gather prefill hot path check OK (page-native dispatch intact)"

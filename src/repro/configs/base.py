@@ -74,6 +74,16 @@ class ModelConfig:
     # fused kernel, the pre-page-native formulation kept for A/B). See
     # core.paged_cache.PAGED_BACKENDS.
     decode_backend: str = "jnp"
+    # chunked-prefill attention backend (paged serving only): "jnp" = the
+    # chunk_prefill_attention reference (full-pool gather + dense codec
+    # scores); "paged_fused" = page-native fused chunk prefill — the codec
+    # kernel walks the table row and LUT-scores the quantized prefix pages
+    # in place (resolved in paged_cache.paged_prefill_attention to the
+    # Pallas grid on TPU, the jitted jnp oracle elsewhere); "ref"|
+    # "interpret"|"pallas" pick the kernel execution mode explicitly.
+    # Codecs without a page-native prefill fall back to "jnp" per policy
+    # segment. See core.paged_cache.PREFILL_BACKENDS.
+    prefill_backend: str = "jnp"
 
     def __post_init__(self):
         if self.head_dim == 0 and self.num_heads > 0:

@@ -18,6 +18,10 @@ fused decode kernel     :meth:`KeyCodec.fused_decode` where
 paged fused decode      :meth:`KeyCodec.paged_decode` — page-native kernel
                         where ``supports_paged_decode`` is True, gathered
                         fallback otherwise
+paged fused prefill     :meth:`KeyCodec.paged_prefill` — page-native chunk
+                        prefill kernel where ``supports_paged_prefill`` is
+                        True, ``chunk_prefill_attention`` jnp fallback
+                        otherwise
 =====================  ======================================================
 
 The cache layers (``kv_cache.py`` dense/ring, ``paged_cache.py`` pools) own
@@ -98,6 +102,7 @@ class KeyCodec:
     quantizes: bool = True           # False => fp passthrough
     supports_fused_decode: bool = False
     supports_paged_decode: bool = False   # page-native fused decode kernel
+    supports_paged_prefill: bool = False  # page-native chunk-prefill kernel
 
     # -- accounting ---------------------------------------------------------
 
@@ -173,6 +178,24 @@ class KeyCodec:
         from repro.core import paged_cache as pgc  # cache layer; no cycle
         return pgc.gathered_decode_attention(cache, q, page_table,
                                              scale=scale, backend=backend)
+
+    # -- paged fused prefill (optional capability) ---------------------------
+
+    def paged_prefill(self, cache, q: Array, k_chunk: Array, v_chunk: Array,
+                      page_row: Array, start: Array, chunk_len: Array, *,
+                      scale: Optional[float], backend: str) -> Array:
+        """One prefill chunk's attention straight off a paged cache.
+
+        Codecs with a page-walking prefill kernel
+        (``supports_paged_prefill``) override this to score the quantized
+        prefix pages in place. The default is the jnp fallback:
+        ``chunk_prefill_attention`` gathers the page pool and runs the
+        codec score path densely (the pre-page-native formulation, kept as
+        the reference)."""
+        from repro.core import paged_cache as pgc  # cache layer; no cycle
+        return pgc.chunk_prefill_attention(cache, q, k_chunk, v_chunk,
+                                           page_row, start, chunk_len,
+                                           scale=scale)
 
 
 # ---------------------------------------------------------------------------
@@ -336,6 +359,7 @@ class PolarCodec(_GroupedCodec):
     name = "polar"
     supports_fused_decode = True
     supports_paged_decode = True
+    supports_paged_prefill = True
 
     def bits_per_element(self, cfg, head_dim):
         payload = (cfg.rho_bits + cfg.theta_bits) / 2.0
@@ -407,6 +431,24 @@ class PolarCodec(_GroupedCodec):
             cache.value_scale if quant_v else None,
             cache.value_zero if quant_v else None,
             page_table, cache.lengths, r_bits=cfg.rho_bits,
+            t_bits=cfg.theta_bits, softmax_scale=scale, backend=backend)
+
+    def paged_prefill(self, cache, q, k_chunk, v_chunk, page_row, start,
+                      chunk_len, *, scale, backend):
+        # page-native chunk prefill: LUT scores + online softmax walk the
+        # prefix pages in place; the chunk's fp causal tile shares the
+        # same flash carry — no full-pool gather, no dense score spill
+        from repro.kernels import ops
+        cfg = cache.cfg
+        sc = cache.key_scales
+        quant_v = cfg.value_bits > 0
+        return ops.polar_paged_prefill_attention(
+            q, k_chunk, v_chunk, cache.key_codes, sc["rho_scale"],
+            sc["rho_zero"], sc["theta_scale"], sc["theta_zero"],
+            cache.value_codes if quant_v else cache.value_fp,
+            cache.value_scale if quant_v else None,
+            cache.value_zero if quant_v else None,
+            page_row, start, chunk_len, r_bits=cfg.rho_bits,
             t_bits=cfg.theta_bits, softmax_scale=scale, backend=backend)
 
 

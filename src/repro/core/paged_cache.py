@@ -336,6 +336,52 @@ def chunk_prefill_attention(cache: PagedKVCache, q: Array, k_chunk: Array,
     return out.reshape(1, hq, tc, d).astype(q.dtype)
 
 
+# Prefill backends over a paged cache. "jnp" is the reference formulation
+# (full-pool gather + dense softmax above); the rest run page-native where
+# the codec supports it ("paged_fused" picks the platform-resolved mode —
+# the Pallas kernel on TPU, the jitted jnp oracle elsewhere; "ref"/
+# "interpret"/"pallas" select the kernel execution mode explicitly).
+PREFILL_BACKENDS = ("jnp", "paged_fused", "ref", "interpret", "pallas")
+
+
+def paged_prefill_attention(cache: PagedKVCache, q: Array, k_chunk: Array,
+                            v_chunk: Array, page_row: Array, start: Array,
+                            chunk_len: Array, scale: float | None = None,
+                            backend: str = "jnp") -> Array:
+    """Backend-dispatched chunk-prefill attention (the prefill twin of
+    :func:`paged_decode_attention`).
+
+    ``backend`` (see :data:`PREFILL_BACKENDS`):
+
+    * ``"jnp"`` — :func:`chunk_prefill_attention`: gather the page pool
+      (O(capacity)) and run the codec score path densely (the reference).
+    * ``"paged_fused"`` | ``"ref"`` | ``"interpret"`` | ``"pallas"`` —
+      page-native: the codec's ``paged_prefill`` walks the table row and
+      scores the quantized prefix pages in place with one fused online
+      softmax over prefix + chunk (``paged_fused`` resolves to the Pallas
+      kernel on TPU and the jitted jnp oracle elsewhere; the others pick
+      the kernel execution mode). Codecs without the capability fall back
+      to the jnp reference automatically, so mixed per-layer policies take
+      the fast path segment by segment.
+
+    ``page_row`` may be width-sliced to the pages covering
+    ``start + chunk_len`` (the engines bucket it), shrinking the per-chunk
+    read volume from O(capacity) to O(live prefix).
+    """
+    if backend not in PREFILL_BACKENDS:
+        raise ValueError(f"unknown paged prefill backend {backend!r}; "
+                         f"expected one of {PREFILL_BACKENDS}")
+    if backend == "jnp" or not cache.codec.supports_paged_prefill:
+        return chunk_prefill_attention(cache, q, k_chunk, v_chunk, page_row,
+                                       start, chunk_len, scale=scale)
+    if backend == "paged_fused":
+        # platform-resolved execution mode, matching paged_decode_attention
+        backend = "pallas" if jax.default_backend() == "tpu" else "ref"
+    return cache.codec.paged_prefill(cache, q, k_chunk, v_chunk, page_row,
+                                     start, chunk_len, scale=scale,
+                                     backend=backend)
+
+
 # ---------------------------------------------------------------------------
 # Copy-on-write page copy (device half of PageAllocator.cow)
 # ---------------------------------------------------------------------------

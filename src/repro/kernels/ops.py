@@ -27,6 +27,9 @@ from repro.kernels.polar_attention import (
 from repro.kernels.paged_decode import (
     polar_paged_decode_grouped as _paged_attn_pallas,
 )
+from repro.kernels.paged_prefill import (
+    polar_paged_prefill_grouped as _paged_prefill_pallas,
+)
 
 Array = jax.Array
 NEG_INF = -1e30
@@ -96,6 +99,40 @@ def polar_paged_decode_attention_grouped(q, codes, rs, rz, ts, tz, values,
                               vzero, page_table, flushed, r_bits=r_bits,
                               t_bits=t_bits,
                               interpret=(backend == "interpret"))
+
+
+def polar_paged_prefill_attention(q, k_chunk, v_chunk, codes, rs, rz, ts,
+                                  tz, values, vscale, vzero, page_row,
+                                  start, chunk_len, *, r_bits=4, t_bits=4,
+                                  softmax_scale: float | None = None,
+                                  backend: str = DEFAULT_BACKEND):
+    """Page-native fused chunk-prefill attention: one chunk's queries
+    against the slot's quantized prefix pages (LUT scores, in-place page
+    walk) + the chunk's own fp causal tile, one online softmax.
+
+    q: (1, Hq, Tc, d) UNscaled post-RoPE queries; k_chunk/v_chunk:
+    (1, Hkv, Tc, d); pools as in :func:`polar_paged_decode_attention_grouped`;
+    page_row: (N,) int32; start (page-aligned) / chunk_len: () int32.
+    Returns (1, Hq, Tc, d) in q.dtype.
+    """
+    _check_backend(backend)
+    if backend == "ref":
+        return ref_mod.ref_polar_paged_prefill_attention(
+            q, k_chunk, v_chunk, codes, rs, rz, ts, tz, values, vscale,
+            vzero, page_row, start, chunk_len, r_bits=r_bits, t_bits=t_bits,
+            softmax_scale=softmax_scale)
+    _, hq, tc, d = q.shape
+    hkv = codes.shape[1]
+    qpk = hq // hkv
+    scale = d ** -0.5 if softmax_scale is None else softmax_scale
+    # fold chunk queries onto the head axis (row = qh * Tc + t) and
+    # pre-scale — the kernel consumes one tall 2-D operand per kv head
+    qf = (q.astype(jnp.float32) * scale).reshape(hkv, qpk * tc, d)
+    out = _paged_prefill_pallas(
+        qf, k_chunk[0], v_chunk[0], codes, rs, rz, ts, tz, values, vscale,
+        vzero, page_row, start, chunk_len, r_bits=r_bits, t_bits=t_bits,
+        interpret=(backend == "interpret"))
+    return out.reshape(1, hq, tc, d).astype(q.dtype)
 
 
 def merge_softmax_partials(parts: list[tuple[Array, Array, Array]]) -> Array:

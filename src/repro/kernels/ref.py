@@ -83,6 +83,82 @@ def ref_polar_decode_attention(q, codes, rs, rz, ts, tz, values, length, *,
     return out, m, l
 
 
+def ref_polar_paged_prefill_attention(q, k_chunk, v_chunk, codes, rs, rz,
+                                      ts, tz, values, vscale, vzero,
+                                      page_row, start, chunk_len, *,
+                                      r_bits: int, t_bits: int,
+                                      softmax_scale: float | None = None):
+    """Page-native chunk-prefill oracle: one prefill chunk's attention over
+    the slot's quantized prefix pages + its own fp causal tile.
+
+    q: (1, Hq, Tc, d) post-RoPE queries at absolute positions
+    ``start + [0, Tc)`` (UNscaled); k_chunk/v_chunk: (1, Hkv, Tc, d);
+    codes: (PP, Hkv, g, P) page pool with stats (PP, Hkv, 1, P); values:
+    (PP, Hkv, g, d) fp rows or uint8 codes with vscale/vzero
+    (PP, Hkv, g, 1); page_row: (N,) int32 table row; start: () int32
+    page-aligned offset; chunk_len: () int32 real chunk tokens.
+
+    This mirrors ``paged_cache.chunk_prefill_attention`` *op for op* — the
+    same gather/zero/LUT/concat/softmax/einsum sequence in the same order
+    (the LUT runs the default select-tree, matching ``cfg.lut_impl``'s
+    default) — so at the polar defaults the page-native prefill backend
+    produces bit-identical outputs to the jnp fallback. The kernel is
+    parity-tested against this oracle, which carries the flash-rewrite
+    tolerance instead.
+
+    Returns (1, Hq, Tc, d) in q.dtype.
+    """
+    _, hq, tc, d = q.shape
+    hkv = codes.shape[1]
+    qpk = hq // hkv
+    n = page_row.shape[0]
+    g = codes.shape[2]
+    t_cap = n * g
+    num_pages = codes.shape[0] - 1          # last pool page is scratch
+    scale = d ** -0.5 if softmax_scale is None else softmax_scale
+    start = jnp.asarray(start, jnp.int32)
+    chunk_len = jnp.asarray(chunk_len, jnp.int32)
+    pvalid = (page_row >= 0) & (page_row < num_pages)
+
+    def gat(pool):  # (PP, H, a, b) -> (1, H, N, a, b), invalid pages zeroed
+        x = pool[page_row]
+        x = jnp.where(pvalid[:, None, None, None], x, jnp.zeros((), x.dtype))
+        return x.transpose(1, 0, 2, 3)[None]
+
+    def flat(x):  # (1, H, N, g, ·) -> (1, H, N*g, ·)
+        return x.reshape(1, hkv, t_cap, x.shape[-1])
+
+    q4 = (q.astype(jnp.float32) * scale).reshape(1, hkv, qpk, tc, d)
+
+    qf = q4.reshape(1, hkv, qpk * tc, d)
+    s_prefix = ref_polar_qk_scores(qf, gat(codes), gat(rs), gat(rz),
+                                   gat(ts), gat(tz), r_bits=r_bits,
+                                   t_bits=t_bits)
+    s_prefix = s_prefix.reshape(1, hkv, qpk, tc, t_cap)
+    pos = jnp.arange(t_cap, dtype=jnp.int32)
+    s_prefix = jnp.where((pos < start)[None, None, None, None, :],
+                         s_prefix, NEG_INF)
+
+    kf = k_chunk.astype(jnp.float32)
+    s_chunk = jnp.einsum("bhqtd,bhsd->bhqts", q4, kf)
+    i = jnp.arange(tc, dtype=jnp.int32)
+    cmask = (i[:, None] >= i[None, :]) & (i[None, :] < chunk_len)
+    s_chunk = jnp.where(cmask[None, None, None], s_chunk, NEG_INF)
+
+    probs = jax.nn.softmax(
+        jnp.concatenate([s_prefix, s_chunk], axis=-1), axis=-1)
+
+    if vscale is not None:
+        v_tilde = qz.decode_values(qz.QuantizedValues(
+            codes=flat(gat(values)), scale=flat(gat(vscale)),
+            zero=flat(gat(vzero)), bits=0))
+    else:
+        v_tilde = flat(gat(values)).astype(jnp.float32)
+    v_all = jnp.concatenate([v_tilde, v_chunk.astype(jnp.float32)], axis=2)
+    out = jnp.einsum("bhqts,bhsd->bhqtd", probs, v_all)
+    return out.reshape(1, hq, tc, d).astype(q.dtype)
+
+
 def ref_polar_paged_decode_attention(q, codes, rs, rz, ts, tz, values,
                                      vscale, vzero, page_table, flushed, *,
                                      r_bits: int, t_bits: int):

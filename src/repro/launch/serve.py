@@ -51,6 +51,12 @@ def main(argv=None) -> int:
                              "interpret", "pallas"],
                     help="decode-attention backend (paged_fused = "
                          "page-native fused kernel on the paged path)")
+    ap.add_argument("--prefill-backend", default="jnp",
+                    choices=["jnp", "paged_fused", "ref", "interpret",
+                             "pallas"],
+                    help="chunked-prefill attention backend (cb engine "
+                         "with --prefill-chunk; paged_fused = page-native "
+                         "fused kernel over the quantized prefix pages)")
     ap.add_argument("--engine", default="static", choices=["static", "cb"],
                     help="static = one-shot batched ServeEngine; cb = "
                          "continuous batching over the paged cache")
@@ -89,7 +95,8 @@ def main(argv=None) -> int:
             dataclasses.replace(quant, method="int", key_bits=8),
             quant)
     cfg = dataclasses.replace(cfg, quant=quant, cache_policy=policy,
-                              decode_backend=args.decode_backend)
+                              decode_backend=args.decode_backend,
+                              prefill_backend=args.prefill_backend)
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
 

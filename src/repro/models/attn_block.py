@@ -171,16 +171,20 @@ def attention_prefill_chunk(params: Params, x: Array, cfg: ModelConfig,
     ``[0, chunk_len)``, the tail is padding. RoPE runs at the absolute
     positions ``start + i``; queries attend to the slot's cached
     (quantized) prefix ``[0, start)`` through the codec score path plus fp
-    causal attention within the chunk (``pgc.chunk_prefill_attention``).
-    Returns (y (1, Tc, D), cache).
+    causal attention within the chunk, dispatched per
+    ``cfg.prefill_backend`` (``pgc.paged_prefill_attention``: page-native
+    fused kernel where the codec supports it, the gathering jnp reference
+    otherwise). Returns (y (1, Tc, D), cache).
     """
     b, t, _ = x.shape
     positions = start + jnp.arange(t, dtype=jnp.int32)
     q, k, v = _qkv(params, x, cfg, positions, rope=True)
     cache = pgc.paged_prefill(cache, slot, page_row, k, v, chunk_len,
                               start=start)
-    out = pgc.chunk_prefill_attention(cache, q, k, v, page_row, start,
-                                      chunk_len)
+    # codec-capability fallback happens inside paged_prefill_attention,
+    # mirroring the decode dispatch below
+    out = pgc.paged_prefill_attention(cache, q, k, v, page_row, start,
+                                      chunk_len, backend=cfg.prefill_backend)
     return L.linear(L.merge_heads(out), params["wo"]), cache
 
 

@@ -43,7 +43,9 @@ class Model:
     # init_paged_state(layout) -> per-segment stacked PagedKVCaches
     # prefill_paged(params, tokens (1,Tp), state, slot, page_row, true_len)
     # prefill_paged_chunk(params, tokens (1,Tc), state, slot, page_row,
-    #                     start, chunk_len) — chunked prefill at an offset
+    #                     start, chunk_len) — chunked prefill at an offset;
+    #                     chunk attention dispatches per cfg.prefill_backend
+    #                     (page-native fused kernel vs gathering jnp ref)
     # decode_paged(params, state, token (S,), page_table, active)
     # copy_pages(state, src, dst) — COW page copy across segment pools
     init_paged_state: Callable[..., Any] | None = None

@@ -363,8 +363,11 @@ def prefill_paged_chunk_fn(params: Params, tokens: Array, cfg: ModelConfig,
     tokens: (1, Tc) int32, Tc the static chunk bucket (real tokens = first
     ``chunk_len``). Compiles once for the whole workload — every chunk of
     every prompt reuses the same (1, Tc) shape, unlike the per-bucket
-    one-shot prefill. Returns (last-real-token logits (1, V), caches);
-    the logits are meaningful only on a request's final chunk.
+    one-shot prefill. Chunk attention over the cached prefix dispatches
+    per ``cfg.prefill_backend`` segment by segment (page-native fused
+    kernel for codecs that support it, the gathering jnp reference
+    otherwise). Returns (last-real-token logits (1, V), caches); the
+    logits are meaningful only on a request's final chunk.
     """
     x = embed_tokens(params, tokens, cfg)
 

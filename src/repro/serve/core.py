@@ -226,6 +226,14 @@ class EngineCore:
         # step — the pre-width-bucketing behavior, kept as a benchmark
         # baseline (decode cost then scales with pool capacity)
         self.table_slicing = table_slicing
+        # chunk prefill width-slices the slot's table row only on the
+        # page-native backends: the kernel's read volume then tracks the
+        # live prefix instead of the pool capacity. The jnp reference
+        # keeps the full row (it gathers the whole pool regardless — the
+        # benchmark contrast), and decode slicing stays independent, so
+        # A/B arms share bit-identical decode steps.
+        self._prefill_slicing = (table_slicing
+                                 and model.cfg.prefill_backend != "jnp")
         # page == quantization group: every layer of the policy must agree
         # on the group size (bit-widths/methods may differ per layer)
         g = model.cfg.policy.page_group_size()
@@ -387,6 +395,17 @@ class EngineCore:
                 return w
         return self.layout.pages_per_slot
 
+    def _prefill_widths(self, prompt_lens: list[int]) -> list[int]:
+        """Table-row width buckets the chunk prefill compiles against:
+        the pow2 decode buckets up to the largest prompt's page count when
+        the page-native backends slice the row, the full width otherwise."""
+        if not self._prefill_slicing:
+            return [self.layout.pages_per_slot]
+        maxw = self._step_width(
+            self.layout.pages_for(max(prompt_lens))
+            if prompt_lens else self.layout.pages_per_slot)
+        return [w for w in self._decode_widths() if w <= maxw]
+
     def _ctx(self):
         if self.mesh is not None and self.rules is not None:
             return ctx.use_sharding(self.mesh, self.rules)
@@ -408,13 +427,17 @@ class EngineCore:
         s = self.layout.slots
         with self._ctx():
             if self.prefill_chunk:
-                # one compile covers every chunk of every prompt
+                # one compile per table-row width covers every chunk of
+                # every prompt (a single full-width compile unless the
+                # page-native prefill backends slice the row)
                 c = self.prefill_chunk
-                logits, state = self._prefill_chunk(
-                    self.params, jnp.zeros((1, c), jnp.int32), state,
-                    jnp.zeros((), jnp.int32), sched.alloc.table()[0],
-                    jnp.zeros((), jnp.int32), jnp.asarray(c, jnp.int32))
-                jax.block_until_ready(self._sample(logits, key, gen))
+                for w in self._prefill_widths(prompt_lens):
+                    logits, state = self._prefill_chunk(
+                        self.params, jnp.zeros((1, c), jnp.int32), state,
+                        jnp.zeros((), jnp.int32),
+                        sched.alloc.table()[0][:w],
+                        jnp.zeros((), jnp.int32), jnp.asarray(c, jnp.int32))
+                    jax.block_until_ready(self._sample(logits, key, gen))
             else:
                 for tp in sorted({self._bucket(t) for t in prompt_lens}):
                     logits, state = self._prefill(
@@ -542,11 +565,17 @@ class EngineCore:
         clen = min(c, tl - off)
         toks = np.zeros((1, c), np.int32)
         toks[0, :clen] = ctx_toks[off:off + clen]
+        row = self.sched.alloc.table()[slot]
+        if self._prefill_slicing:
+            # width-slice the row to the pages this chunk touches: the
+            # page-native kernel then reads O(live prefix), not
+            # O(capacity) (one compile per pow2 bucket, as in decode)
+            row = row[:self._step_width(
+                cdiv(off + clen, self.layout.page_size))]
         t0 = time.monotonic()
         logits, self.state = self._prefill_chunk(
             self.params, jnp.asarray(toks), self.state,
-            jnp.asarray(slot, jnp.int32),
-            self.sched.alloc.table()[slot],
+            jnp.asarray(slot, jnp.int32), row,
             jnp.asarray(off, jnp.int32),
             jnp.asarray(clen, jnp.int32))
         self._progressed = True
@@ -726,6 +755,7 @@ class EngineCore:
             "decode_step_s_p50": float(np.median(step_times)) if step_times
             else 0.0,
             "decode_backend": self.model.cfg.decode_backend,
+            "prefill_backend": self.model.cfg.prefill_backend,
             "mean_active_slots": float(np.mean(self._active_hist))
             if self._active_hist else 0.0,
             "mean_page_utilization": float(np.mean(self._util))
