@@ -296,6 +296,92 @@ def run_context_sweep(cfg, params, args) -> list[dict]:
     return arms
 
 
+def _spec_workload(cfg, kind: str, n: int, seed: int,
+                   max_new: int) -> list[Request]:
+    """Spec-decode workloads. ``repetitive``: every prompt is one token
+    repeated — greedy continuations tend to fall into short cycles that
+    ngram self-speculation rides (the favorable regime). ``random``:
+    i.i.d. prompts whose continuations rarely repeat — the adversarial
+    regime where acceptance, and any speedup, should collapse."""
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(n):
+        if kind == "repetitive":
+            prompt = np.full((36,), rng.randint(0, cfg.vocab_size),
+                             np.int32)
+        else:
+            prompt = rng.randint(0, cfg.vocab_size, (36,)).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new_tokens=max_new,
+                            arrival_time=i * 0.002))
+    return reqs
+
+
+def run_spec_sweep(cfg, params, args) -> dict:
+    """Speculative-decode A/B: ngram self-speculation vs plain decode.
+
+    Low-batch serving (2 slots) is the regime speculation targets: the
+    per-dispatch overhead dominates per-token cost, so retiring several
+    tokens per dispatch is a real win *when drafts get accepted*. Each
+    arm must stay bit-identical to the baseline — a mismatch fails the
+    whole benchmark (nonzero rc), speedups are only reported for correct
+    runs. The sweep runs the span verifier's reference formulation
+    (decode_backend="jnp", the backend the batched verifier reproduces
+    bit-for-bit)."""
+    from repro.spec import SpecConfig
+    model = get_model(dataclasses.replace(cfg, decode_backend="jnp"))
+    slots, max_len, max_new = 2, 512, args.spec_gen
+    out: dict = {"slots": slots, "max_new": max_new,
+                 "k_sweep": args.spec_sweep, "workloads": {}}
+    rc_ok = True
+    for kind in ("repetitive", "random"):
+        wl = lambda: _spec_workload(cfg, kind, 6, args.seed + 3, max_new)
+        arms = []
+        base = None
+        base_toks = None
+        for k in [0] + args.spec_sweep:
+            spec = SpecConfig(mode="ngram", k=k) if k else None
+            eng = ContinuousBatchingEngine(
+                model, params, max_slots=slots, max_len=max_len, spec=spec)
+            reqs = wl()
+            eng.warmup([r.prompt_len for r in reqs])
+            r = eng.run(reqs, GenerationConfig())
+            toks = {q.rid: list(q.out_tokens) for q in r["requests"]}
+            if k == 0:
+                base, base_toks = r, toks
+                continue
+            same = toks == base_toks
+            rc_ok &= same
+            sp = r["spec"]
+            arms.append({
+                "k": k,
+                "tokens_per_s": r["tokens_per_s"],
+                "speedup_vs_baseline": r["tokens_per_s"]
+                / max(base["tokens_per_s"], 1e-9),
+                "acceptance_rate": sp["acceptance_rate"],
+                "mean_accepted_per_step": sp["mean_accepted_per_step"],
+                "spec_steps": sp["steps"],
+                "decode_steps": r["decode_steps"],
+                "outputs_bit_identical": same,
+            })
+            print(f"spec/{kind:10s} k={k}: "
+                  f"tok/s={r['tokens_per_s']:8.1f} "
+                  f"({arms[-1]['speedup_vs_baseline']:.2f}x) "
+                  f"acc={sp['acceptance_rate'] * 100:5.1f}% "
+                  f"acc/step={sp['mean_accepted_per_step']:.2f} "
+                  f"bit-identical={same}")
+        out["workloads"][kind] = {
+            "baseline_tokens_per_s": base["tokens_per_s"],
+            "baseline_decode_steps": base["decode_steps"],
+            "arms": arms,
+        }
+        print(f"spec/{kind:10s} base: tok/s={base['tokens_per_s']:8.1f}")
+    rep = out["workloads"]["repetitive"]["arms"]
+    out["best_speedup_repetitive"] = max(
+        (a["speedup_vs_baseline"] for a in rep), default=0.0)
+    out["outputs_bit_identical"] = rc_ok
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
@@ -332,11 +418,19 @@ def main(argv=None):
                     help="chunked-prefill size for the shared-prefix arms")
     ap.add_argument("--suffix-lo", type=int, default=8)
     ap.add_argument("--suffix-hi", type=int, default=32)
+    ap.add_argument("--spec-sweep", default="",
+                    help="comma-separated draft-length sweep for the "
+                         "speculative-decode A/B arms (ngram proposer, "
+                         "e.g. '2,4,8'; empty = skip)")
+    ap.add_argument("--spec-gen", type=int, default=192,
+                    help="output tokens per request in the spec-sweep "
+                         "arms")
     ap.add_argument("--json", default="",
                     help="write machine-readable results to this path")
     args = ap.parse_args(argv)
     args.sweep = [int(x) for x in args.sweep.split(",") if x]
     args.prefill_sweep = [int(x) for x in args.prefill_sweep.split(",") if x]
+    args.spec_sweep = [int(x) for x in args.spec_sweep.split(",") if x]
 
     cfg = reduce_for_smoke(get_config(args.arch))
     # the static arm shares the requested backend (dense path normalizes
@@ -397,6 +491,8 @@ def main(argv=None):
                      if args.prefill_sweep else [])
     shared = (run_shared_prefix(cfg, params, args)
               if args.shared_prefix else None)
+    spec_sweep = (run_spec_sweep(cfg, params, args)
+                  if args.spec_sweep else None)
 
     if args.json:
         import json
@@ -418,6 +514,7 @@ def main(argv=None):
             "context_sweep": sweep,
             "prefill_sweep": prefill_sweep,
             "shared_prefix": shared,
+            "spec_sweep": spec_sweep,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
@@ -426,6 +523,8 @@ def main(argv=None):
         return 1   # prefix reuse must never change greedy outputs
     if any(not a["outputs_bit_identical"] for a in prefill_sweep):
         return 1   # the fused prefill must never change greedy outputs
+    if spec_sweep is not None and not spec_sweep["outputs_bit_identical"]:
+        return 1   # speculation must never change greedy outputs
     # when both engines keep up with the Poisson arrivals, tokens/s
     # converges to the offered load for everyone — the continuous-batching
     # win then shows up as per-request latency, not throughput

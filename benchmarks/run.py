@@ -30,12 +30,13 @@ def main() -> None:
             "--out-lo", "4", "--out-hi", "24",
             "--sweep", "192,512,2048", "--shared-prefix", "96",
             "--prefill-sweep", "2048,4096,8192",
+            "--spec-sweep", "2,4,8",
             "--json", "BENCH_serving.json"])
         if rc:
             raise RuntimeError(
                 "serving regression: continuous batching lost to the "
-                "static baseline, prefix reuse or the fused prefill "
-                "backend changed greedy outputs")
+                "static baseline, or prefix reuse / the fused prefill "
+                "backend / speculative decode changed greedy outputs")
 
     suites = [
         ("quant_error(T1)", bench_quant_error.run),

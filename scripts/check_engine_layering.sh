@@ -15,6 +15,10 @@
 #      allocator + PrefixIndex themselves). bench_kernel_latency.py is
 #      exempt: it microbenchmarks the paged layout directly, below the
 #      serve stack.
+#   3. jax/jnp usage inside src/repro/spec/ is allowed only in verify.py
+#      (the paged span verifier) and draft.py (the draft-model proposer's
+#      forwards). Proposer bookkeeping (ngram index, registry, config)
+#      stays host-side so proposing never blocks on the device.
 set -u
 cd "$(dirname "$0")/.."
 
@@ -28,6 +32,17 @@ if [ -n "$jaxuse" ]; then
     echo "front door and batch adapter must stay host-side-only; route" >&2
     echo "device work through EngineCore.step():" >&2
     echo "$jaxuse" >&2
+    fail=1
+fi
+
+specjax=$(grep -rnE '(import[[:space:]]+jax|from[[:space:]]+jax|jax\.|jnp\.)' \
+    src/repro/spec --include='*.py' \
+    | grep -vE 'src/repro/spec/(verify|draft)\.py' || true)
+if [ -n "$specjax" ]; then
+    echo "ERROR: device dispatch in src/repro/spec outside verify.py /" >&2
+    echo "draft.py — proposers and the registry must stay host-side so" >&2
+    echo "drafting never blocks on the device:" >&2
+    echo "$specjax" >&2
     fail=1
 fi
 

@@ -504,6 +504,96 @@ def paged_append(cache: PagedKVCache, k_new: Array, v_new: Array,
     return dataclasses.replace(cache, lengths=lengths, **updates)
 
 
+def paged_append_span(cache: PagedKVCache, k_span: Array, v_span: Array,
+                      page_table: Array, n_keep: Array) -> PagedKVCache:
+    """Append the first ``n_keep[s]`` span tokens per slot in ONE shot.
+
+    k_span/v_span: (S, Hkv, Q, d) post-RoPE (the speculative verifier's
+    collected span kv); ``n_keep``: (S,) int32 tokens to commit (0 = slot
+    untouched). Bit-identical — outside the never-read scratch page — to
+    ``n_keep`` sequential masked :func:`paged_append` calls PROVIDED the
+    kept rows stay inside the slot's current group
+    (``n_keep <= g - lengths % g``; the engine's span clamp guarantees
+    it): the multi-row residual/value writes leave exactly the bytes the
+    sequential appends would, and the at-most-one group flush (kept row
+    ``g-1``, necessarily the last) encodes exactly the residual state a
+    sequential flush would see at that moment. One codec encode per layer
+    instead of Q — the reason the spec step's commit is ~flat in Q.
+    """
+    cfg = cache.cfg
+    codec = cache.codec
+    lay = cache.layout
+    s, h, qn, d = k_span.shape
+    g = lay.page_size
+    scratch = lay.scratch_page
+    pos = cache.lengths                            # (S,)
+    r0 = pos % g
+    keep = jnp.arange(qn, dtype=jnp.int32)[None, :] < n_keep[:, None]
+    gidx = jnp.minimum(pos // g, page_table.shape[1] - 1)
+    page = jnp.take_along_axis(page_table, gidx[:, None], axis=1)[:, 0]
+    page = jnp.where(n_keep > 0, page, scratch)    # (S,)
+    sid = jnp.arange(s)
+    updates: dict[str, Any] = {}
+
+    # token-major page rows: kept rows land at (page, r0+j), rejected /
+    # inactive rows are redirected to the scratch page
+    rows = jnp.minimum(r0[:, None] + jnp.arange(qn)[None, :], g - 1)
+    pages_j = jnp.where(keep, page[:, None], scratch)
+    pf = pages_j.reshape(s * qn)
+    rf = rows.reshape(s * qn)
+
+    def sc_rows(pool, upd):  # upd (S, H, Q, b) -> scatter S*Q page rows
+        u = upd.transpose(0, 2, 1, 3).reshape(s * qn, h, upd.shape[-1])
+        return _scatter_rows(pool, pf, rf, u)
+
+    # --- values ---
+    if cfg.value_bits > 0:
+        qv = qz.encode_values(v_span, cfg.value_bits, cfg.scale_dtype)
+        updates["value_codes"] = sc_rows(cache.value_codes, qv.codes)
+        updates["value_scale"] = sc_rows(cache.value_scale, qv.scale)
+        updates["value_zero"] = sc_rows(cache.value_zero, qv.zero)
+    else:
+        updates["value_fp"] = sc_rows(cache.value_fp, v_span)
+
+    # --- keys ---
+    if not codec.grouped:
+        codes, scales = codec.encode(cfg, k_span)
+        updates["key_codes"] = sc_rows(cache.key_codes, codes)
+        updates["key_scales"] = {
+            key: sc_rows(cache.key_scales[key], scales[key])
+            for key in cache.key_scales}
+    else:
+        # masked multi-row residual write: rejected rows go to a discard
+        # zone past the real buffer (the double-width trick)
+        res = cache.key_residual
+        ext = jnp.concatenate([res, jnp.zeros_like(res)], axis=2)
+        extT = ext.transpose(0, 2, 1, 3)           # (S, 2g, H, d)
+        wrows = jnp.where(keep, rows, 2 * g - 1)
+        extT = extT.at[sid[:, None], wrows].set(
+            k_span.transpose(0, 2, 1, 3).astype(res.dtype))
+        residual = extT[:, :g].transpose(0, 2, 1, 3)
+        flush = (n_keep > 0) & (r0 + n_keep == g)
+
+        # the group-boundary flush is rare (at most once per g committed
+        # tokens per slot): gate the codec encode + page scatters behind
+        # it so the steady-state commit is just the residual/value writes
+        def _do_flush(pools):
+            codes_p, scales_p = pools
+            fcodes, fscales = codec.encode(cfg, residual)  # (S,H,1,g,·)
+            fpage = jnp.where(flush, page, scratch)
+            return (_scatter_pages(codes_p, fpage, fcodes[:, :, 0]),
+                    {key: _scatter_pages(scales_p[key], fpage,
+                                         fscales[key][:, :, 0])
+                     for key in scales_p})
+
+        updates["key_codes"], updates["key_scales"] = jax.lax.cond(
+            jnp.any(flush), _do_flush, lambda pools: pools,
+            (cache.key_codes, cache.key_scales))
+        updates["key_residual"] = residual
+
+    return dataclasses.replace(cache, lengths=pos + n_keep, **updates)
+
+
 # ---------------------------------------------------------------------------
 # Gathered dense view + decode attention
 # ---------------------------------------------------------------------------
@@ -629,3 +719,152 @@ def paged_decode_attention(cache: PagedKVCache, q: Array, page_table: Array,
         backend = resolved
     return cache.codec.paged_decode(cache, q, page_table, scale=scale,
                                     backend=backend)
+
+
+def span_verify_attention(cache: PagedKVCache, q: Array, k_span: Array,
+                          v_span: Array, page_table: Array,
+                          scale: float | None = None) -> Array:
+    """Speculative-span attention: Q draft positions per slot in ONE
+    dispatch, reproducing the sequential decode view bit-for-bit.
+
+    q: (S, Hq, Q, d) post-RoPE queries at absolute positions
+    ``lengths + [0, Q)``; k_span/v_span: (S, Hkv, Q, d) the span's own
+    post-RoPE fp keys/values. The cache is NOT mutated — the engine
+    commits accepted positions afterwards (:func:`paged_append_span`).
+
+    Sequential decode at span position j appends its own kv first, then
+    attends over (grouped codecs):
+
+    * groups ``[0, flushed)`` — codec scores over the page pool;
+    * residual rows ``[flushed, L+j+1)`` — fp scores against the rolling
+      residual, span keys ROUNDED to ``cfg.residual_dtype`` by the append;
+    * if row ``(L+j) % g == g-1``, the append flushed the current group:
+      position j scores it through the codec instead.
+
+    All three are emulated against the *original* cache: span keys are
+    written (rounded) into a copy of the residual, span values into the
+    gathered value view, and the possible boundary flush is reproduced by
+    encoding the final residual buffer once — the same bytes a sequential
+    flush would encode, because callers guarantee the span never extends
+    past the slot's current group (``span <= g - lengths % g``; the
+    engine clamps drafts), so at most the LAST span position crosses.
+    Token-wise codecs need no residual/flush emulation: span keys are
+    encoded per row and scattered into the gathered code view. Positions
+    past a slot's real span (the batch pads to a shared Q) produce
+    don't-care outputs, finite by construction.
+    """
+    cfg = cache.cfg
+    codec = cache.codec
+    lay = cache.layout
+    s, hq, qn, d = q.shape
+    hkv = cache.num_kv_heads
+    qpk = hq // hkv
+    g = lay.page_size
+    t_cap = page_table.shape[1] * g
+    scale = scale if scale is not None else d ** -0.5
+    lengths = cache.lengths                        # (S,)
+    flushed0 = (lengths // g) * g
+    sid = jnp.arange(s)
+    pvalid = (page_table >= 0) & (page_table < lay.num_pages)
+
+    def masked(x):  # (PP, H, a, b) -> (S, H, N, a, b), invalid pages zeroed
+        gathered = _gather_pages(x, page_table)
+        return jnp.where(pvalid[:, None, :, None, None], gathered,
+                         jnp.zeros((), x.dtype))
+
+    def flat(x):    # (S, H, N, g, ·) -> (S, H, N*g, ·)
+        return x.reshape(s, hkv, t_cap, x.shape[-1])
+
+    def sc_span(view, upd, tpos):  # scatter span rows into a (S,H,T,·) view
+        vT = view.transpose(0, 2, 1, 3)
+        vT = vT.at[sid[:, None], tpos].set(
+            upd.transpose(0, 2, 1, 3).astype(view.dtype), mode="drop")
+        return vT.transpose(0, 2, 1, 3)
+
+    # fold span positions onto the query-head axis, exactly like the
+    # decode path folds GQA heads: scores/probs rows stay (·, t_cap)
+    q4 = (q.astype(jnp.float32) * scale).reshape(s, hkv, qpk, qn, d)
+    qf = q4.reshape(s, hkv, qpk * qn, d)
+    pos = jnp.arange(t_cap, dtype=jnp.int32)[None, None, :]
+    vl = (lengths[:, None] + 1
+          + jnp.arange(qn, dtype=jnp.int32)[None, :])[:, :, None]  # (S,Q,1)
+    tpos = jnp.minimum(lengths[:, None] + jnp.arange(qn)[None, :],
+                       t_cap)                       # (S, Q); == t_cap drops
+
+    def bc(m):  # (S, Q, T) -> broadcast against (S, Hkv, qpk, Q, T)
+        return m[:, None, None]
+
+    if cache.grouped:
+        # final residual: span keys rounded+written at rows r0..r0+Q-1
+        # (overflow rows land in a discard zone — the double-width trick)
+        res = cache.key_residual
+        ext = jnp.concatenate([res, jnp.zeros_like(res)], axis=2)
+        extT = ext.transpose(0, 2, 1, 3)            # (S, 2g, H, d)
+        rows = jnp.minimum((lengths % g)[:, None] + jnp.arange(qn)[None, :],
+                           2 * g - 1)
+        extT = extT.at[sid[:, None], rows].set(
+            k_span.transpose(0, 2, 1, 3).astype(res.dtype))
+        res_new = extT[:, :g].transpose(0, 2, 1, 3)  # (S, Hkv, g, d)
+
+        s_pages = codec.scores(cfg, qf, masked(cache.key_codes),
+                               {kk: masked(vv)
+                                for kk, vv in cache.key_scales.items()})
+        # the flush emulation (encode + LUT scores over the completed
+        # group) only matters when some span position can fill its slot's
+        # current group (m_flush below is all-False otherwise, which the
+        # engine's span clamp makes the common case) — skip the encode
+        # entirely on the other steps instead of scoring dead work
+        def _flush_scores(r):
+            fc, fs = codec.encode(cfg, r)                # (S, H, 1, g, ·)
+            return codec.scores(cfg, qf, fc, fs)          # (·, g)
+
+        proto = jax.eval_shape(_flush_scores, res_new)
+        s_flush = jax.lax.cond(
+            jnp.any((lengths % g) + qn >= g), _flush_scores,
+            lambda r: jnp.zeros(proto.shape, proto.dtype), res_new)
+        s_res = jnp.einsum("bhqd,bhgd->bhqg", qf,
+                           res_new.astype(jnp.float32))   # (·, g)
+
+        reps = t_cap // g
+        s5 = lambda x: x.reshape(s, hkv, qpk, qn, -1)  # noqa: E731
+        s_pages = s5(s_pages)
+        s_flush = s5(jnp.tile(s_flush, (1, 1, 1, reps)))
+        s_res = s5(jnp.tile(s_res, (1, 1, 1, reps)))
+
+        base = flushed0[:, None, None]                   # (S, 1, 1)
+        m_pages = pos < base
+        m_flush = (pos >= base) & (pos < base + g) & (vl >= base + g)
+        m_res = (pos >= base) & (pos < vl) & (vl < base + g)
+        scores = jnp.where(bc(m_res), s_res,
+                           jnp.where(bc(m_flush), s_flush,
+                                     jnp.where(bc(m_pages), s_pages,
+                                               kvc.NEG_INF)))
+    else:
+        # token-wise: encode span keys per row into the gathered view
+        kc = flat(masked(cache.key_codes))
+        ks = {kk: flat(masked(vv)) for kk, vv in cache.key_scales.items()}
+        codes, scales = codec.encode(cfg, k_span)
+        kc = sc_span(kc, codes, tpos)
+        ks = {kk: sc_span(ks[kk], scales[kk], tpos) for kk in ks}
+        scores = codec.scores(cfg, qf, kc, ks).reshape(
+            s, hkv, qpk, qn, t_cap)
+        scores = jnp.where(bc(pos < vl), scores, kvc.NEG_INF)
+
+    probs = jax.nn.softmax(scores, axis=-1)
+
+    # --- values: dequantized page rows + the span's own rows, written
+    # through the same encode/rounding the append would apply ---
+    if cfg.value_bits > 0:
+        qv = qz.encode_values(v_span, cfg.value_bits, cfg.scale_dtype)
+        v_tilde = qz.decode_values(qz.QuantizedValues(
+            codes=sc_span(flat(masked(cache.value_codes)), qv.codes, tpos),
+            scale=sc_span(flat(masked(cache.value_scale)), qv.scale, tpos),
+            zero=sc_span(flat(masked(cache.value_zero)), qv.zero, tpos),
+            bits=cfg.value_bits))
+    else:
+        v_tilde = flat(masked(cache.value_fp))
+        v_tilde = sc_span(v_tilde, v_span, tpos).astype(jnp.float32)
+
+    out = jnp.einsum("bhqt,bhtd->bhqd",
+                     probs.reshape(s, hkv, qpk * qn, t_cap), v_tilde)
+    return out.reshape(s, hq, qn, d).astype(q.dtype)

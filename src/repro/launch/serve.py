@@ -71,6 +71,13 @@ def main(argv=None) -> int:
                     help="cb engine: serve through the streaming API, "
                          "printing tokens as they arrive and per-token "
                          "TTFT/ITL percentiles")
+    ap.add_argument("--spec-mode", default="off",
+                    choices=["off", "ngram", "draft"],
+                    help="cb engine: speculative multi-token decode — "
+                         "ngram self-speculation or a smaller draft model "
+                         "(greedy outputs stay bit-identical to off)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max draft tokens per speculative step")
     ap.add_argument("--shared-prefix-len", type=int, default=64,
                     help="cb engine: common system-prompt length prepended "
                          "to every request (demo workload for "
@@ -123,10 +130,14 @@ def main(argv=None) -> int:
                         max_new_tokens=args.gen,
                         arrival_time=0.0 if i == 0 else 100.0 + 0.01 * i)
                 for i in range(args.batch)]
+        spec = None
+        if args.spec_mode != "off":
+            from repro.spec import SpecConfig
+            spec = SpecConfig(mode=args.spec_mode, k=args.spec_k)
         eng = ContinuousBatchingEngine(
             model, params, max_slots=args.batch, max_len=args.max_len,
             prefix_cache=args.prefix_cache,
-            prefill_chunk=args.prefill_chunk)
+            prefill_chunk=args.prefill_chunk, spec=spec)
         eng.warmup([r.prompt_len for r in reqs] + [args.max_len],
                    GenerationConfig(max_new_tokens=args.gen))
         gen = GenerationConfig(max_new_tokens=args.gen,
@@ -162,6 +173,15 @@ def main(argv=None) -> int:
                   f"p99 {lat['ttft_s']['p99'] * 1e3:.1f}ms  "
                   f"itl p50 {lat['itl_s']['p50'] * 1e3:.1f}ms "
                   f"p99 {lat['itl_s']['p99'] * 1e3:.1f}ms")
+            if "spec" in out:
+                sp = out["spec"]
+                print(f"[serve] spec mode={sp['mode']} k={sp['k']}  "
+                      f"acceptance {sp['acceptance_rate'] * 100:.1f}%  "
+                      f"({sp['accepted_tokens']}/{sp['drafted_tokens']} "
+                      "drafts)")
+                print(f"[serve] spec mean accepted/step "
+                      f"{sp['mean_accepted_per_step']:.2f} over "
+                      f"{sp['steps']} speculative steps")
             print(f"[serve] first sequence: {texts[reqs[0].rid]}")
             return 0
         out = eng.run(reqs, gen)
@@ -169,6 +189,11 @@ def main(argv=None) -> int:
               f"p50 {out['p50_latency_s'] * 1e3:.1f}ms  "
               f"cache {out['cache_bytes'] / 2**20:.2f} MiB  "
               f"prefill-chunk {out['prefill_chunk']}")
+        if "spec" in out:
+            sp = out["spec"]
+            print(f"[serve] spec mode={sp['mode']} k={sp['k']}  "
+                  f"acceptance {sp['acceptance_rate'] * 100:.1f}%  "
+                  f"mean accepted/step {sp['mean_accepted_per_step']:.2f}")
         if args.prefix_cache:
             print(f"[serve] prefix hit rate "
                   f"{out['prefix_hit_rate'] * 100:.1f}%  "

@@ -190,12 +190,14 @@ def attention_prefill_chunk(params: Params, x: Array, cfg: ModelConfig,
 
 def attention_decode_paged(params: Params, x: Array, cfg: ModelConfig,
                            cache: pgc.PagedKVCache, *, page_table: Array,
-                           active: Array):
+                           active: Array, return_kv: bool = False):
     """Batched single-token decode over continuous-batching slots.
 
     x: (S, 1, D); every slot sits at its own position (cache.lengths), so
     RoPE uses per-slot positions and attention masks per-slot lengths.
-    Returns (y (S, 1, D), cache).
+    Returns (y (S, 1, D), cache) — or (y, cache, (k, v)) with
+    ``return_kv``, exposing the post-RoPE kv so the speculative verifier
+    can re-commit accepted span tokens without a second forward.
     """
     s = x.shape[0]
     q = L.split_heads(L.linear(x, params["wq"], params.get("bq")),
@@ -213,7 +215,35 @@ def attention_decode_paged(params: Params, x: Array, cfg: ModelConfig,
     # — so mixed per-layer policies pick the fast path per segment
     out = pgc.paged_decode_attention(cache, q[:, :, 0], page_table,
                                      backend=cfg.decode_backend)
-    return L.linear(out.reshape(s, 1, -1), params["wo"]), cache
+    y = L.linear(out.reshape(s, 1, -1), params["wo"])
+    if return_kv:
+        return y, cache, (k, v)
+    return y, cache
+
+
+def attention_verify_span(params: Params, x: Array, cfg: ModelConfig,
+                          cache: pgc.PagedKVCache, *, page_table: Array):
+    """Speculative-span attention block: Q positions per slot in one
+    batched forward, cache untouched (verify-then-commit — accepted
+    positions are appended later via ``paged_append_span``).
+
+    x: (S, Q, D) at absolute positions ``cache.lengths + [0, Q)``.
+    Returns (y (S, Q, D), (k, v)) with the span's post-RoPE kv
+    (S, Hkv, Q, hd) for the commit.
+    """
+    qn = x.shape[1]
+    q = L.split_heads(L.linear(x, params["wq"], params.get("bq")),
+                      cfg.num_heads)                      # (S, H, Q, hd)
+    k = L.split_heads(L.linear(x, params["wk"], params.get("bk")),
+                      cfg.num_kv_heads)
+    v = L.split_heads(L.linear(x, params["wv"], params.get("bv")),
+                      cfg.num_kv_heads)
+    pos = cache.lengths[:, None] + jnp.arange(qn, dtype=jnp.int32)[None, :]
+    q = L.apply_rope(q, pos, cfg.rope_base, cfg.rope_ntk_scale)
+    k = L.apply_rope(k, pos, cfg.rope_base, cfg.rope_ntk_scale)
+    out = pgc.span_verify_attention(cache, q, k, v, page_table)
+    y = L.linear(L.merge_heads(out), params["wo"])
+    return y, (k, v)
 
 
 def make_cache(cfg: ModelConfig, batch: int, max_len: int,

@@ -48,11 +48,21 @@ class Model:
     #                     (page-native fused kernel vs gathering jnp ref)
     # decode_paged(params, state, token (S,), page_table, active)
     # copy_pages(state, src, dst) — COW page copy across segment pools
+    # decode_paged_collect / commit_paged — the speculative verify split
+    # (sequential reference): collect is decode_paged that also returns
+    # per-layer post-RoPE kv; commit re-appends one span position's saved
+    # kv. verify_span / commit_span are the batched production pair: all
+    # Q span positions in one dispatch + one fused multi-row append
+    # (spec/verify.py picks the pair per cfg.decode_backend)
     init_paged_state: Callable[..., Any] | None = None
     prefill_paged: Callable[..., Any] | None = None
     prefill_paged_chunk: Callable[..., Any] | None = None
     decode_paged: Callable[..., Any] | None = None
     copy_pages: Callable[..., Any] | None = None
+    decode_paged_collect: Callable[..., Any] | None = None
+    commit_paged: Callable[..., Any] | None = None
+    verify_span: Callable[..., Any] | None = None
+    commit_span: Callable[..., Any] | None = None
     # cache_layer_bytes(state) -> physical cache bytes per layer (None for
     # families without per-layer KV caches)
     cache_layer_bytes: Callable[[Any], list[int]] | None = None
@@ -114,6 +124,14 @@ def get_model(cfg: ModelConfig) -> Model:
                 decode_paged=lambda p, s, t, table, active:
                     TF.decode_paged_fn(p, s, t, table, active, cfg),
                 copy_pages=TF.copy_state_pages,
+                decode_paged_collect=lambda p, s, t, table, active:
+                    TF.decode_paged_collect_fn(p, s, t, table, active, cfg),
+                commit_paged=lambda s, kv, table, keep:
+                    TF.commit_paged_fn(s, kv, table, keep, cfg),
+                verify_span=lambda p, s, t, table, active:
+                    TF.verify_span_fn(p, s, t, table, active, cfg),
+                commit_span=lambda s, kv, table, n_keep:
+                    TF.commit_span_paged_fn(s, kv, table, n_keep, cfg),
             )
         return Model(
             cfg=cfg,

@@ -413,3 +413,120 @@ def decode_paged_fn(params: Params, caches, token: Array, page_table: Array,
     x, caches = _scan_segments(params, x, caches, cfg, body)
     logits = lm_logits(params, x, cfg)
     return logits[:, 0], caches
+
+
+def decode_paged_collect_fn(params: Params, caches, token: Array,
+                            page_table: Array, active: Array,
+                            cfg: ModelConfig):
+    """``decode_paged_fn`` that additionally returns every layer's
+    post-RoPE (k, v) — the speculative verify scan (spec/verify.py) runs
+    this per span position on a throwaway cache copy and later re-commits
+    accepted positions' kv via :func:`commit_paged_fn`, so verification
+    and the vanilla decode step share one graph (bit-identical logits).
+
+    Returns (logits (S, V), caches, kvs) with ``kvs`` a per-segment tuple
+    of ((Lseg, S, Hkv, 1, hd), ...) key/value pairs.
+    """
+    x = embed_tokens(params, token[:, None], cfg)
+
+    def body(h, xs):
+        lp, cache = xs
+        h1 = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        y, cache, kv = AB.attention_decode_paged(
+            lp["attn"], h1, cfg, cache, page_table=page_table,
+            active=active, return_kv=True)
+        h = h + y
+        h2 = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        f, _ = _ffn_apply(lp, h2, cfg)
+        return h + f, (cache, kv)
+
+    out, kvs = [], []
+    for (lo, hi, _), cache in zip(cfg.policy.segments(cfg.num_layers),
+                                  caches):
+        lp = _segment_params(params["layers"], lo, hi)
+        x, (cache, kv) = jax.lax.scan(body, x, (lp, cache))
+        out.append(cache)
+        kvs.append(kv)
+    logits = lm_logits(params, x, cfg)
+    return logits[:, 0], tuple(out), tuple(kvs)
+
+
+def verify_span_fn(params: Params, caches, tokens: Array,
+                   page_table: Array, active: Array, cfg: ModelConfig):
+    """Speculative verify forward: all Q span positions of every slot in
+    ONE batched dispatch (vs. the per-position scan of
+    :func:`decode_paged_collect_fn` — same math, ~Q× fewer op
+    executions, which is what makes the spec step cheaper than Q decode
+    steps). tokens: (S, Q) int32, column 0 the real next token, columns
+    1..Q-1 the zero-padded drafts.
+
+    Returns (logits (S, Q, V), kvs); the caches are NOT mutated — the
+    engine commits accepted positions via :func:`commit_span_paged_fn`.
+    ``kvs`` is a per-segment tuple of ((Lseg, S, Hkv, Q, hd) k, same v).
+    Bitwise equal per column to the sequential decode graph as long as
+    the engine's span clamp holds (``span <= g - lengths % g`` per slot;
+    see ``paged_cache.span_verify_attention``). ``active`` only gates the
+    later commit; inactive slots produce don't-care logits here.
+    """
+    del active  # verification is read-only; the commit masks by activity
+    x = embed_tokens(params, tokens, cfg)
+
+    def body(h, xs):
+        lp, cache = xs
+        h1 = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        y, kv = AB.attention_verify_span(lp["attn"], h1, cfg, cache,
+                                         page_table=page_table)
+        h = h + y
+        h2 = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        f, _ = _ffn_apply(lp, h2, cfg)
+        return h + f, kv
+
+    kvs = []
+    for (lo, hi, _), cache in zip(cfg.policy.segments(cfg.num_layers),
+                                  caches):
+        lp = _segment_params(params["layers"], lo, hi)
+        x, kv = jax.lax.scan(body, x, (lp, cache))
+        kvs.append(kv)
+    logits = lm_logits(params, x, cfg)
+    return logits, tuple(kvs)
+
+
+def commit_span_paged_fn(caches, kvs, page_table: Array, n_keep: Array,
+                         cfg: ModelConfig):
+    """Commit the first ``n_keep[s]`` span positions of every slot in one
+    fused multi-row append per layer (vs. the per-position scan of
+    :func:`commit_paged_fn`): masked residual/value row writes plus at
+    most one group-boundary flush encode — see
+    ``paged_cache.paged_append_span``. ``kvs`` is the per-segment
+    ((Lseg, S, Hkv, Q, hd), ...) layout :func:`verify_span_fn` returns."""
+    from repro.core import paged_cache as pgc
+
+    def body(carry, xs):
+        cache, k, v = xs
+        return carry, pgc.paged_append_span(cache, k, v, page_table, n_keep)
+
+    out = []
+    for cache, (k, v) in zip(caches, kvs):
+        _, cache = jax.lax.scan(body, 0, (cache, k, v))
+        out.append(cache)
+    return tuple(out)
+
+
+def commit_paged_fn(caches, kvs, page_table: Array, active: Array,
+                    cfg: ModelConfig):
+    """Append one span position's saved per-layer (k, v) through the
+    standard ``paged_append`` path (residual rounding, group flush,
+    masked lengths). No model forward happens here — the kv were captured
+    by :func:`decode_paged_collect_fn` during verification; only slots
+    with ``active`` advance."""
+    from repro.core import paged_cache as pgc
+
+    def body(carry, xs):
+        cache, k, v = xs
+        return carry, pgc.paged_append(cache, k, v, page_table, active)
+
+    out = []
+    for cache, (k, v) in zip(caches, kvs):
+        _, cache = jax.lax.scan(body, 0, (cache, k, v))
+        out.append(cache)
+    return tuple(out)

@@ -135,7 +135,13 @@ def stream_latency_stats(events: Iterable[TokenEvent],
     * **ITL** — gaps between consecutive token-bearing events
       (``first_token``/``token``) of the same request. Preemption shows
       up as one long gap (the recompute), exactly as a client would
-      experience it.
+      experience it. A speculative step retires a whole span of tokens
+      from ONE dispatch (``TokenEvent.span``/``span_ix``): every token
+      of the span carries the same timestamp, so the intra-span gaps
+      count as ~0 ITL — the client really does receive them together —
+      and the gap to the *next* step carries the full step latency.
+      Gaps are clamped at zero so replayed or merged event streams can
+      never produce negative ITL entries.
 
     Returns ``{"ttft_s": {p50,p95,p99,mean,n}, "itl_s": {...}}`` (zeros
     when the stream is empty).
@@ -164,7 +170,7 @@ def stream_latency_stats(events: Iterable[TokenEvent],
             if ev.rid in arrival:
                 ttft_by[ev.rid] = ev.t - arrival[ev.rid]
         else:
-            itls.append(ev.t - last_t[ev.rid])
+            itls.append(max(ev.t - last_t[ev.rid], 0.0))
         last_t[ev.rid] = ev.t
     ttfts = list(ttft_by.values())
 

@@ -43,6 +43,7 @@ from repro.core.cache_layout import PagedLayout, PrefixIndex
 from repro.distributed import ctx
 from repro.models.registry import Model
 from repro.serve.scheduler import Request, Scheduler
+from repro.spec import SpecConfig, make_proposer, make_verifier
 from repro.utils import (
     cdiv, nearest_rank_pct, pow2_bucket, tree_bytes as _tree_bytes,
 )
@@ -96,13 +97,25 @@ class TokenEvent:
     streamed tokens must drop its last token for that rid when a
     ``preempt`` arrives. None otherwise. ``slot`` is the cache slot
     involved (-1 when the request never held one, e.g. a queued
-    cancel)."""
+    cancel).
+
+    ``ordinal`` is the token's 0-based index in the request's output
+    stream (monotone per rid; a preempt retraction rewinds it by one,
+    matching the drop-last-token rule above). Speculative decode
+    (DESIGN.md §15) can retire several tokens from one dispatch: each
+    gets its own event sharing one clock stamp, with ``span`` the total
+    tokens that dispatch retired for the rid and ``span_ix`` the event's
+    position inside the span — plain decode is the degenerate
+    ``span=1, span_ix=0``."""
 
     kind: str
     rid: int
     t: float
     token: Optional[int] = None
     slot: int = -1
+    ordinal: int = -1
+    span: int = 1
+    span_ix: int = 0
 
 
 class ServeEngine:
@@ -214,7 +227,8 @@ class EngineCore:
                  max_len: int = 256, num_pages: Optional[int] = None,
                  mesh=None, rules: Optional[dict] = None,
                  table_slicing: bool = True, prefix_cache: bool = False,
-                 prefill_chunk: int = 0, prefill_budget: int = 0):
+                 prefill_chunk: int = 0, prefill_budget: int = 0,
+                 spec: Optional[SpecConfig] = None):
         if model.decode_paged is None:
             raise ValueError(
                 f"family {model.cfg.family!r} has no paged decode path")
@@ -266,6 +280,16 @@ class EngineCore:
         # donate the paged state: page pools update in place each step
         self._decode = jax.jit(model.decode_paged, donate_argnums=(1,))
         self._sample = jax.jit(_sample, static_argnames=("gen",))
+        # speculative decode (DESIGN.md §15): a host-side proposer guesses
+        # up to spec.k tokens per slot; one verify dispatch scores the
+        # whole span and commits only accepted tokens through the vanilla
+        # append path. Greedy-only — reset() enforces temperature 0.
+        self.spec = spec if spec is not None and spec.mode != "off" else None
+        if self.spec is not None:
+            self._verify = jax.jit(make_verifier(model), donate_argnums=(1,))
+            self._proposer = make_proposer(
+                self.spec, target_cfg=model.cfg, target_model=model,
+                target_params=params, max_len=self.layout.tokens_per_slot)
         self.reset()
 
     # --- session lifecycle ------------------------------------------------
@@ -276,6 +300,13 @@ class EngineCore:
         sampling configuration (per-request budgets still come from
         ``Request.max_new_tokens``)."""
         self.gen = gen if gen is not None else GenerationConfig()
+        if self.spec is not None:
+            if self.gen.temperature > 0.0:
+                raise ValueError(
+                    "speculative decoding requires greedy sampling "
+                    "(temperature 0): acceptance compares the target "
+                    "model's argmax per position")
+            self._proposer.reset()
         self.prefix = (PrefixIndex(self.layout, self.prefill_chunk)
                        if self.prefix_cache else None)
         self.sched = Scheduler(self.layout, prefix_index=self.prefix,
@@ -308,6 +339,9 @@ class EngineCore:
         self.prefill_computed = 0   # prefill tokens run through the model
         self.prefill_skipped = 0    # prefill tokens served from adoption
         self.cow_splits = 0
+        self.spec_steps = 0         # decode steps that verified >=1 draft
+        self.spec_drafted = 0       # draft tokens sent to verification
+        self.spec_accepted = 0      # draft tokens accepted
 
     # --- request intake ---------------------------------------------------
 
@@ -355,6 +389,8 @@ class EngineCore:
         if slot >= 0:
             self._prefilling.pop(slot, None)
             self._eff_max.pop(rid, None)
+        if self.spec is not None:
+            self._proposer.release(rid)
         return self._cancelled(req, slot)
 
     def _cancelled(self, req: Request, slot: int = -1) -> list[TokenEvent]:
@@ -381,6 +417,27 @@ class EngineCore:
             w *= 2
         widths.append(n)
         return widths
+
+    def _spec_q_buckets(self) -> list[int]:
+        """Span-width buckets (Q = 1 bonus + drafts) the verify dispatch
+        compiles against: 1 + pow2 draft counts, capped at ``spec.k + 1``
+        — and at the group size, since the span clamp
+        (:meth:`_propose_drafts`) keeps every span inside its slot's
+        current quantization group."""
+        cap = min(self.spec.k + 1, self.layout.page_size)
+        out, q = [], 2
+        while q < cap:
+            out.append(q)
+            q = 2 * (q - 1) + 1
+        out.append(cap)
+        return out
+
+    def _spec_q(self, q_needed: int) -> int:
+        """Smallest span-width bucket covering ``q_needed`` positions."""
+        for q in self._spec_q_buckets():
+            if q >= q_needed:
+                return q
+        return self.spec.k + 1
 
     def _step_width(self, pages_needed: int) -> int:
         """Smallest width bucket covering ``pages_needed`` live pages.
@@ -450,6 +507,15 @@ class EngineCore:
                     self.params, state, jnp.zeros((s,), jnp.int32),
                     sched.alloc.table()[:, :w], jnp.zeros((s,), bool))
                 jax.block_until_ready(self._sample(logits, key, gen))
+                if self.spec is not None:
+                    for q in self._spec_q_buckets():
+                        preds, _, state = self._verify(
+                            self.params, state,
+                            jnp.zeros((s, q), jnp.int32),
+                            jnp.zeros((s,), jnp.int32),
+                            sched.alloc.table()[:, :w],
+                            jnp.zeros((s,), bool))
+                        jax.block_until_ready(preds)
 
     # --- the step loop ----------------------------------------------------
 
@@ -609,7 +675,8 @@ class EngineCore:
         self._lengths[slot] = tl
         # a preemption-resume re-prefill is not the stream's first token
         events = [TokenEvent("first_token" if first else "token",
-                             req.rid, self.clock, token=tok0, slot=slot)]
+                             req.rid, self.clock, token=tok0, slot=slot,
+                             ordinal=req.done_tokens - 1)]
         if (self.gen.eos_id >= 0 and tok0 == self.gen.eos_id) or \
                 req.done_tokens >= self._eff_max[req.rid]:
             events += self._finish(slot)
@@ -620,6 +687,8 @@ class EngineCore:
         req.state = FINISHED
         req.t_done = self.clock
         self._eff_max.pop(req.rid, None)
+        if self.spec is not None:
+            self._proposer.release(req.rid)
         self.completed.append(self.sched.finish(slot))
         return [TokenEvent("finish", req.rid, self.clock, slot=slot)]
 
@@ -630,8 +699,28 @@ class EngineCore:
         sched, g = self.sched, self.layout.page_size
         if not sched.active:
             return []   # cancellation emptied the cycle mid-flight
+        drafts: dict[int, list[int]] = {}
+        spans = None
+        if self.spec is not None:
+            # proposer work bills to the session clock: for ngram it is
+            # microseconds of suffix matching, but a draft-model proposer
+            # runs real forwards and must not get them for free in tok/s
+            t0 = time.monotonic()
+            drafts = self._propose_drafts()
+            self.clock += time.monotonic() - t0
+            spans = {sl: 1 + len(d) for sl, d in drafts.items()}
         stalled = set(sched.ensure_pages(self._lengths,
-                                         skip=self._prefilling.keys()))
+                                         skip=self._prefilling.keys(),
+                                         spans=spans))
+        if self.spec is not None:
+            # shed drafts the pool couldn't back: the accepted span must
+            # stay inside the slot's allocated pages (only the *verify*
+            # copy may spill to scratch, never the committed state)
+            for sl, d in drafts.items():
+                cap = (sched.alloc.slot_pages(sl) * g
+                       - int(self._lengths[sl]) - 1)
+                if len(d) > max(cap, 0):
+                    del d[max(cap, 0):]
         step_slots = [sl for sl in sched.active
                       if sl not in stalled and sl not in self._prefilling]
 
@@ -639,25 +728,33 @@ class EngineCore:
         # Chunk-aligned adoption makes this a no-op in steady state
         # (adopted pages all precede the write frontier), but it is the
         # invariant that keeps sharing safe under any adoption policy
-        # (DESIGN.md §12).
+        # (DESIGN.md §12). A speculative span may cross into further
+        # pages, so every page the commit could touch is checked.
         if step_slots and (self.prefix_cache or self.cow_splits):
             safe = []
             for sl in step_slots:
-                pidx = int(self._lengths[sl]) // g
-                if (pidx < sched.alloc.slot_pages(sl) and
-                        sched.alloc.refcount(
-                            sched.alloc.page_at(sl, pidx)) > 1):
+                lo = int(self._lengths[sl]) // g
+                hi = (int(self._lengths[sl])
+                      + len(drafts.get(sl, ()))) // g
+                ok = True
+                for pidx in range(lo, hi + 1):
+                    if not (pidx < sched.alloc.slot_pages(sl) and
+                            sched.alloc.refcount(
+                                sched.alloc.page_at(sl, pidx)) > 1):
+                        continue
                     if not sched.alloc.can_alloc(1):
                         sched.reclaim(1)
                     if not sched.alloc.can_alloc(1):
                         stalled.add(sl)
-                        continue
+                        ok = False
+                        break
                     src, dst = sched.alloc.cow(sl, pidx)
                     self.state = self._copy_pages(
                         self.state, jnp.asarray(src, jnp.int32),
                         jnp.asarray(dst, jnp.int32))
                     self.cow_splits += 1
-                safe.append(sl)
+                if ok:
+                    safe.append(sl)
             step_slots = safe
 
         if not step_slots:
@@ -678,6 +775,8 @@ class EngineCore:
             if vreq.out_tokens:
                 retracted = vreq.out_tokens.pop()   # un-fed; re-sampled
             self._eff_max.pop(vreq.rid, None)
+            if self.spec is not None:
+                self._proposer.release(vreq.rid)
             sched.preempt(victim)
             vreq.state = PREEMPTED
             # the preempt event carries the retracted token: streaming
@@ -685,6 +784,15 @@ class EngineCore:
             return [TokenEvent("preempt", vreq.rid, self.clock,
                                token=retracted, slot=victim)]
 
+        if self.spec is not None and any(drafts.get(sl) for sl in
+                                         step_slots):
+            return self._spec_dispatch(step_slots, drafts)
+        return self._decode_dispatch(step_slots)
+
+    def _decode_dispatch(self, step_slots: list[int]) -> list[TokenEvent]:
+        """The vanilla one-token decode dispatch (also the fast path of a
+        spec session when no slot has drafts this step)."""
+        sched, g = self.sched, self.layout.page_size
         s = self.layout.slots
         mask = np.zeros((s,), bool)
         mask[step_slots] = True
@@ -715,9 +823,117 @@ class EngineCore:
             req.out_tokens.append(t)
             self._next_tok[sl] = t
             events.append(TokenEvent("token", req.rid, self.clock,
-                                     token=t, slot=sl))
+                                     token=t, slot=sl,
+                                     ordinal=req.done_tokens - 1))
             if (self.gen.eos_id >= 0 and t == self.gen.eos_id) or \
                     req.done_tokens >= self._eff_max[req.rid]:
+                events += self._finish(sl)
+        return events
+
+    # --- speculative decode (DESIGN.md §15) -------------------------------
+
+    def _propose_drafts(self) -> dict[int, list[int]]:
+        """Up to ``spec.k`` draft tokens per decode-ready slot, clamped so
+        (a) a fully-accepted span can never overshoot the request's
+        effective budget (the bonus token is always emitted on top of the
+        drafts), and (b) the span never extends past the slot's current
+        quantization group (``span <= g - length % g``) — the invariant
+        the batched span verifier and the fused span commit rely on: at
+        most the LAST span position can trigger a group flush, so one
+        residual buffer represents every per-position view bit-exactly
+        (``paged_cache.span_verify_attention``). At worst — a slot one
+        token shy of a boundary — the step degrades to plain decode."""
+        g = self.layout.page_size
+        drafts: dict[int, list[int]] = {}
+        for sl, req in self.sched.active.items():
+            if sl in self._prefilling:
+                continue
+            want = min(self.spec.k,
+                       self._eff_max[req.rid] - req.done_tokens - 1,
+                       g - int(self._lengths[sl]) % g - 1)
+            d = self._proposer.propose(req, want) if want > 0 else []
+            drafts[sl] = [int(t) for t in d[:max(want, 0)]]
+        return drafts
+
+    def _spec_dispatch(self, step_slots: list[int],
+                       drafts: dict[int, list[int]]) -> list[TokenEvent]:
+        """One verify dispatch retiring 1..k+1 tokens per stepped slot.
+
+        Column 0 of the span is the step's real next token (vanilla would
+        have fed exactly it), columns 1..k the zero-padded drafts. The
+        verifier returns the target argmax per position and the accepted
+        count; emitted tokens are the argmaxes of column 0 plus the
+        accepted drafts — precisely what vanilla greedy decode would have
+        emitted over the next ``n_acc + 1`` steps — and the committed
+        cache equals the vanilla one bitwise (spec/verify.py)."""
+        sched, g = self.sched, self.layout.page_size
+        s = self.layout.slots
+        # bucket the span width to this step's longest draft (pow2-ish,
+        # one compile per bucket): a step where every proposer came back
+        # short doesn't pay for k+1 verify positions
+        q = self._spec_q(1 + max(len(drafts.get(sl, ()))
+                                 for sl in step_slots))
+        mask = np.zeros((s,), bool)
+        mask[step_slots] = True
+        toks = np.zeros((s, q), np.int32)
+        toks[:, 0] = self._next_tok
+        dlen = np.zeros((s,), np.int32)
+        for sl in step_slots:
+            d = drafts.get(sl, [])
+            toks[sl, 1:1 + len(d)] = d
+            dlen[sl] = len(d)
+        # width must cover every span position; span pages the scheduler
+        # couldn't (or didn't need to) allocate resolve to the scratch
+        # page, touched only by the discarded verify copy
+        w = self._step_width(
+            max((int(self._lengths[sl]) + q - 1) // g + 1
+                for sl in step_slots))
+        t0 = time.monotonic()
+        preds, n_acc, self.state = self._verify(
+            self.params, self.state, jnp.asarray(toks), jnp.asarray(dlen),
+            sched.alloc.table()[:, :w], jnp.asarray(mask))
+        preds = np.asarray(jax.block_until_ready(preds))
+        n_acc = np.asarray(n_acc)
+        step_s = time.monotonic() - t0
+        self.clock += step_s
+        self.decode_steps += 1
+        self.spec_steps += 1
+        self._step_times.append(step_s)
+        self._util.append(sched.utilization())
+        self._active_hist.append(len(step_slots))
+
+        events = []
+        for sl in step_slots:
+            req = sched.active[sl]
+            n = int(n_acc[sl])
+            self.spec_drafted += int(dlen[sl])
+            self.spec_accepted += n
+            self._proposer.feedback(req.rid, int(dlen[sl]), n)
+            # emit the argmax chain, truncating at EOS (the budget clamp
+            # in _propose_drafts means eff_max can only bind at the last
+            # span position, exactly like vanilla)
+            emit: list[int] = []
+            finished = False
+            for j in range(n + 1):
+                t = int(preds[sl, j])
+                emit.append(t)
+                if (self.gen.eos_id >= 0 and t == self.gen.eos_id) or \
+                        req.done_tokens + len(emit) >= \
+                        self._eff_max[req.rid]:
+                    finished = True
+                    break
+            span = len(emit)
+            for j, t in enumerate(emit):
+                req.out_tokens.append(t)
+                events.append(TokenEvent(
+                    "token", req.rid, self.clock, token=t, slot=sl,
+                    ordinal=req.done_tokens - 1, span=span, span_ix=j))
+            # device lengths advanced by n+1 (the full accepted span);
+            # when EOS truncates the emission the slot finishes and its
+            # pages are reclaimed, so the host length is moot
+            self._lengths[sl] += n + 1
+            self._next_tok[sl] = emit[-1]
+            if finished:
                 events += self._finish(sl)
         return events
 
@@ -776,6 +992,18 @@ class EngineCore:
             "cancelled_requests": self.cancelled,
             "n_cancelled": len(self.cancelled),
         }
+        if self.spec is not None:
+            res["spec"] = {
+                "mode": self.spec.mode,
+                "k": self.spec.k,
+                "steps": self.spec_steps,
+                "drafted_tokens": self.spec_drafted,
+                "accepted_tokens": self.spec_accepted,
+                "acceptance_rate": self.spec_accepted / max(
+                    self.spec_drafted, 1),
+                "mean_accepted_per_step": self.spec_accepted / max(
+                    self.spec_steps, 1),
+            }
         if self.prefix is not None:
             from repro.core import paged_cache as pgc
             page_bytes = sum(pgc.pool_page_bytes(c) for c in self.state)

@@ -66,12 +66,14 @@ class ContinuousBatchingEngine:
                  max_len: int = 256, num_pages: Optional[int] = None,
                  mesh=None, rules: Optional[dict] = None,
                  table_slicing: bool = True, prefix_cache: bool = False,
-                 prefill_chunk: int = 0, prefill_budget: int = 0):
+                 prefill_chunk: int = 0, prefill_budget: int = 0,
+                 spec=None):
         self.core = EngineCore(
             model, params, max_slots=max_slots, max_len=max_len,
             num_pages=num_pages, mesh=mesh, rules=rules,
             table_slicing=table_slicing, prefix_cache=prefix_cache,
-            prefill_chunk=prefill_chunk, prefill_budget=prefill_budget)
+            prefill_chunk=prefill_chunk, prefill_budget=prefill_budget,
+            spec=spec)
 
     # the knobs tests/benchmarks introspect, forwarded from the core
     @property

@@ -213,8 +213,8 @@ class Scheduler:
 
     # --- decode-step paging ----------------------------------------------
 
-    def ensure_pages(self, lengths: np.ndarray,
-                     skip: Iterable[int] = ()) -> list[int]:
+    def ensure_pages(self, lengths: np.ndarray, skip: Iterable[int] = (),
+                     spans: Optional[dict] = None) -> list[int]:
         """Allocate next-group pages for slots about to cross a page
         boundary; returns slots that must stall this step (pool empty even
         after evicting index-only pages).
@@ -222,6 +222,13 @@ class Scheduler:
         ``lengths``: (slots,) current per-slot token counts — the next
         append writes at ``lengths[slot]``. ``skip``: slots to leave alone
         (mid-prefill slots, whose pages were fully reserved at admission).
+        ``spans``: optional slot -> tokens the next dispatch may append
+        (>= 1, speculative decode). Without it — or for span 1 — behavior
+        is the classic single-token rule. A wider span asks for every
+        page covering ``[pos, pos + span)``; under a dry pool the
+        trailing *draft* pages are shed one at a time (the engine then
+        trims the drafts to the allocated capacity), and the slot only
+        stalls when even its first append position has no page.
         """
         g = self.layout.page_size
         skip = set(skip)
@@ -230,12 +237,29 @@ class Scheduler:
             if slot in skip:
                 continue
             pos = int(lengths[slot])
-            need_page = pos // g
-            if pos % g == 0 and self.alloc.slot_pages(slot) <= need_page:
-                if not self.alloc.can_alloc(1):
-                    self.reclaim(1)
-                if not self.alloc.alloc(slot, 1):
-                    stalled.append(slot)
+            span = min(spans.get(slot, 1) if spans else 1,
+                       self.layout.tokens_per_slot - pos)
+            if span <= 1:
+                need_page = pos // g
+                if pos % g == 0 and self.alloc.slot_pages(slot) <= need_page:
+                    if not self.alloc.can_alloc(1):
+                        self.reclaim(1)
+                    if not self.alloc.alloc(slot, 1):
+                        stalled.append(slot)
+                continue
+            want = self.layout.pages_for(pos + span)
+            need_min = self.layout.pages_for(pos + 1)
+            while self.alloc.slot_pages(slot) < want:
+                n = want - self.alloc.slot_pages(slot)
+                if not self.alloc.can_alloc(n):
+                    self.reclaim(n)
+                if self.alloc.alloc(slot, n):
+                    break
+                if want <= need_min:
+                    break
+                want -= 1
+            if self.alloc.slot_pages(slot) < need_min:
+                stalled.append(slot)
         return stalled
 
     # --- cancellation ----------------------------------------------------

@@ -1,0 +1,126 @@
+"""Draft-model proposer: a small dense-cache model guesses the span.
+
+jax is allowed here (the draft runs real forwards); everything stays on
+the *draft* model's own linear cache — the target's paged state is never
+touched by proposal, only by verification (spec/verify.py).
+
+Per request the proposer keeps a batch-1 dense decode cache plus the
+count of context tokens it has absorbed. Each ``propose()`` feeds the
+context delta token-by-token (cheap: the delta is the last accepted
+span), then greedily rolls out k guesses. The speculative guesses are
+appended into the draft cache too, so before returning we rewind by
+resetting the cache ``length`` back to the real context size. For
+grouped codecs that rewind is lossy at group boundaries (flushed rows
+aren't un-flushed) — harmless, it can only degrade future draft quality,
+and the default derived draft config quantizes nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.spec.config import SpecConfig
+from repro.spec.propose import DraftProposer, register_proposer
+
+
+def _derive_draft_cfg(target_cfg, spec: SpecConfig):
+    """A shrunk, unquantized copy of the target config (first
+    ``draft_layers`` layers' worth of depth, same vocab so proposed ids
+    are meaningful)."""
+    from repro.core.quantizers import QuantConfig
+    return dataclasses.replace(
+        target_cfg,
+        name=f"{target_cfg.name}-draft{spec.draft_layers}",
+        num_layers=max(1, min(spec.draft_layers, target_cfg.num_layers)),
+        cache_policy=None,
+        quant=QuantConfig(method="none", value_bits=0,
+                          group_size=target_cfg.quant.group_size),
+        decode_backend="jnp",
+        prefill_backend="jnp",
+    )
+
+
+@register_proposer
+class DraftModelProposer(DraftProposer):
+    """Classic speculative sampling's proposer half, greedy flavor."""
+
+    name = "draft"
+
+    def __init__(self, spec: SpecConfig, *, target_cfg=None,
+                 target_model=None, target_params=None,
+                 max_len: int = 0) -> None:
+        super().__init__(spec, target_cfg=target_cfg)
+        from repro.models.registry import get_model
+        if spec.draft_arch == "self":
+            if target_model is None or target_params is None:
+                raise ValueError(
+                    "draft_arch='self' needs the target model and params")
+            self.model, self.params = target_model, target_params
+        else:
+            if spec.draft_arch:
+                from repro.configs import get_config
+                base = get_config(spec.draft_arch)
+                cfg = dataclasses.replace(
+                    _derive_draft_cfg(base, spec),
+                    vocab_size=target_cfg.vocab_size)
+            else:
+                cfg = _derive_draft_cfg(target_cfg, spec)
+            self.model = get_model(cfg)
+            self.params = self.model.init(jax.random.PRNGKey(spec.draft_seed))
+        self.max_len = int(max_len) or 4096
+        self._decode = jax.jit(self.model.decode, donate_argnums=(1,))
+        self._by_rid: Dict[str, Dict[str, Any]] = {}
+
+    def reset(self) -> None:
+        self._by_rid.clear()
+
+    def release(self, rid: str) -> None:
+        self._by_rid.pop(rid, None)
+
+    @staticmethod
+    def _rewind(caches, n: int):
+        """Forget everything past the first ``n`` tokens by resetting the
+        per-segment cache lengths (positions >= length are masked out of
+        attention, so stale rows are unreachable)."""
+        return tuple(
+            dataclasses.replace(c, length=jnp.full_like(c.length, n))
+            for c in caches)
+
+    def propose(self, req, k: int) -> List[int]:
+        ctx = [int(t) for t in req.prompt] + [int(t) for t in req.out_tokens]
+        n = len(ctx)
+        k = min(k, self.max_len - n)
+        if k <= 0 or n == 0:
+            return []
+        st = self._by_rid.get(req.rid)
+        if st is None or st["n"] > n:
+            # fresh request, or the context shrank under us (preemption
+            # retracted a token) — start over
+            st = {"caches": self.model.init_decode_state(1, self.max_len),
+                  "n": 0}
+            self._by_rid[req.rid] = st
+        caches = st["caches"]
+        # absorb the context delta; the loop always runs at least once
+        # (the engine emits >= 1 token between proposals), leaving
+        # `logits` = the draft's prediction for the next position
+        logits = None
+        for t in ctx[st["n"]:]:
+            logits, caches = self._decode(
+                self.params, caches, jnp.full((1,), t, jnp.int32))
+        st["n"] = n
+        if logits is None:  # context unchanged — nothing new to say
+            st["caches"] = caches
+            return []
+        out: List[int] = []
+        while True:
+            out.append(int(np.asarray(jnp.argmax(logits[0]))))
+            if len(out) >= k:
+                break
+            logits, caches = self._decode(
+                self.params, caches, jnp.full((1,), out[-1], jnp.int32))
+        st["caches"] = self._rewind(caches, n)
+        return out

@@ -1,0 +1,132 @@
+"""Score + accept + commit a draft span in one device dispatch.
+
+The verifier is the correctness heart of speculative decode (DESIGN.md
+§15). Whatever the implementation, the contract is fixed: score the Q =
+k+1 span token columns (column 0 the step's real next token, columns
+1..k the zero-padded drafts) against the slot's paged quantized context
+*without mutating it*, compute the greedy longest-matching-prefix
+acceptance on device, and commit exactly the accepted positions through
+the standard append path — rejected positions never touch the committed
+state, so the group-residual/flush invariants hold by construction and
+no rollback machinery exists anywhere.
+
+Two interchangeable implementations, both bitwise faithful to vanilla
+greedy decode:
+
+* **Span verifier** (:func:`make_span_verifier`, the production path for
+  the ``"jnp"`` decode backend) — ONE batched forward over all Q span
+  positions (``model.verify_span``): projections/FFN/logits run with the
+  span folded into the row axis, attention reproduces the sequential
+  per-position decode view exactly (residual-dtype rounding of span
+  keys, per-position masks, the at-most-one group-boundary flush — see
+  ``paged_cache.span_verify_attention``), and the commit is one fused
+  multi-row append (``model.commit_span``). Cost is ~flat in Q — the
+  reason a spec step can beat Q vanilla steps.
+* **Scan verifier** (:func:`make_scan_verifier`, the reference oracle
+  and the fallback for non-``"jnp"`` decode backends) — ``lax.scan`` of
+  the *exact* vanilla decode-step graph (``model.decode_paged_collect``)
+  over the token columns on a throwaway cache copy, then a masked
+  per-position commit scan (``model.commit_paged``). Trivially bitwise —
+  it IS the vanilla graph — but does Q sequential forwards, so it never
+  beats plain decode; it exists to prove the span verifier right
+  (tests/test_spec_decode.py asserts span == scan bit-for-bit).
+
+Acceptance (shared): ``n_acc = Σ cumprod(draft_j == argmax_j)`` over the
+real draft columns. The accepted span is column 0's token plus the first
+``n_acc`` drafts; their argmaxes (``n_acc + 1`` of them) are the emitted
+tokens, exactly the tokens vanilla greedy decode would emit.
+
+Out-of-range span positions (drafts beyond the slot's allocated pages)
+are safe: unassigned page-table entries point at the pool's scratch
+page, verification is read-only (span) or writes only a discarded copy
+(scan), and the commit masks to ``active & (position <= n_acc)`` — the
+committed state only ever receives positions the scheduler allocated
+pages for.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _accept(tokens, preds, draft_len):
+    """Greedy longest-matching-prefix: n_acc (S,) accepted drafts."""
+    s, q = tokens.shape
+    if q <= 1:
+        return jnp.zeros((s,), jnp.int32)
+    match = (tokens[:, 1:] == preds[:, :q - 1]) & (
+        jnp.arange(q - 1)[None, :] < draft_len[:, None])
+    return jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1),
+                   axis=1).astype(jnp.int32)
+
+
+def make_verifier(model, *, force_scan: bool = False):
+    """Build ``verify(params, caches, tokens, draft_len, page_table,
+    active) -> (preds, n_acc, caches)`` for a registry model.
+
+    tokens: (S, Q) int32 — column 0 the real next token, 1..k drafts
+    (zero-padded); draft_len: (S,) int32 valid-draft counts; page_table:
+    (S, W) int32; active: (S,) bool. Returns preds (S, Q) target argmaxes
+    per span position, n_acc (S,) accepted-draft counts, and the
+    committed caches. Jit with ``donate_argnums=(1,)``.
+
+    Picks the batched span verifier when the model has one and decodes
+    through the ``"jnp"`` reference backend (whose gathered formulation
+    the span attention reproduces bit-for-bit); any other backend — or
+    ``force_scan`` — gets the sequential scan verifier, which shares the
+    vanilla decode graph whatever the backend.
+    """
+    if (not force_scan and model.verify_span is not None
+            and model.commit_span is not None
+            and model.cfg.decode_backend == "jnp"):
+        return make_span_verifier(model)
+    return make_scan_verifier(model)
+
+
+def make_span_verifier(model):
+    """Batched verifier: one span forward + one fused span commit."""
+    if model.verify_span is None or model.commit_span is None:
+        raise ValueError(
+            f"model {model.cfg.name!r} has no batched speculative verify "
+            "path (verify_span/commit_span are unset)")
+
+    def verify(params, caches, tokens, draft_len, page_table, active):
+        logits, kvs = model.verify_span(params, caches, tokens,
+                                        page_table, active)
+        preds = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (S, Q)
+        n_acc = _accept(tokens, preds, draft_len)
+        n_keep = jnp.where(active, n_acc + 1, 0)
+        caches = model.commit_span(caches, kvs, page_table, n_keep)
+        return preds, n_acc, caches
+
+    return verify
+
+
+def make_scan_verifier(model):
+    """Sequential reference verifier: scan the vanilla decode graph."""
+    if model.decode_paged_collect is None or model.commit_paged is None:
+        raise ValueError(
+            f"model {model.cfg.name!r} has no speculative verify path "
+            "(decode_paged_collect/commit_paged are unset)")
+
+    def verify(params, caches, tokens, draft_len, page_table, active):
+        def vstep(carry, tok):
+            logits, carry, kvs = model.decode_paged_collect(
+                params, carry, tok, page_table, active)
+            return carry, (jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                           kvs)
+
+        _, (preds, kvs) = jax.lax.scan(vstep, caches, tokens.T)
+        preds = preds.T  # (S, Q)
+        n_acc = _accept(tokens, preds, draft_len)
+
+        def cstep(carry, xs):
+            kv_j, j = xs
+            keep = active & (j <= n_acc)
+            return model.commit_paged(carry, kv_j, page_table, keep), None
+
+        q = tokens.shape[1]
+        caches, _ = jax.lax.scan(cstep, caches, (kvs, jnp.arange(q)))
+        return preds, n_acc, caches
+
+    return verify

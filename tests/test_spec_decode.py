@@ -1,0 +1,396 @@
+"""Speculative multi-token decode (DESIGN.md §15).
+
+The load-bearing property is *greedy bit-identity*: with any proposer —
+ngram self-speculation, a draft model, an oracle, or an adversarially
+wrong one — the engine's outputs must equal plain decode token-for-token
+across cache policies, because the verifier accepts exactly the target
+argmax prefix and commits through the vanilla append path. Everything
+else here guards the machinery around that: span-vs-scan verifier
+parity on the committed cache bytes, acceptance boundary cases (all
+rejected / all accepted / EOS inside a span), allocator invariants
+under cancel and preempt mid-speculation, event ordinal + span
+metadata, and the streaming latency semantics of multi-token spans.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.core import CachePolicy
+from repro.core.cache_layout import PagedLayout
+from repro.models import get_model
+from repro.serve import (
+    ContinuousBatchingEngine, EngineCore, GenerationConfig, Request,
+    StreamingEngine, stream_latency_stats,
+)
+from repro.serve.core import TokenEvent
+from repro.spec import (
+    DraftProposer, NgramProposer, SpecConfig, list_proposers,
+    make_proposer, register_proposer,
+)
+from repro.spec.verify import make_scan_verifier, make_span_verifier
+from test_prefix_cache import check_alloc_invariants
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = reduce_for_smoke(get_config("tinyllama-1.1b"))
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _policy_cfg(cfg, policy: str):
+    if policy == "polar":
+        return cfg
+    int8 = dataclasses.replace(cfg.quant, method="int", key_bits=8)
+    if policy == "int8":
+        return dataclasses.replace(cfg, quant=int8)
+    # mixed: first layer token-wise int8, the rest grouped polar
+    return dataclasses.replace(
+        cfg, cache_policy=CachePolicy.first_k(1, int8, cfg.quant))
+
+
+def _repetitive_requests(cfg, n=4, seed=3, max_new=16):
+    """Single-token prompts: greedy continuations tend to fall into
+    short cycles, giving the ngram proposer real acceptance."""
+    rng = np.random.RandomState(seed)
+    return [Request(rid=i,
+                    prompt=np.full((36,), rng.randint(0, cfg.vocab_size),
+                                   np.int32),
+                    max_new_tokens=max_new, arrival_time=i * 0.002)
+            for i in range(n)]
+
+
+def _clone(reqs):
+    return [Request(rid=r.rid, prompt=r.prompt,
+                    max_new_tokens=r.max_new_tokens,
+                    arrival_time=r.arrival_time) for r in reqs]
+
+
+def _run(m, params, reqs, spec=None, gen=None, **kw):
+    eng = ContinuousBatchingEngine(m, params, spec=spec, **kw)
+    eng.warmup([r.prompt_len for r in reqs])
+    out = eng.run(_clone(reqs), gen or GenerationConfig())
+    return out, {r.rid: list(r.out_tokens) for r in out["requests"]}
+
+
+# ---------------------------------------------------------------------------
+# Greedy bit-identity across proposers and cache policies
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["polar", "int8", "mixed"])
+def test_greedy_bit_identical_off_ngram_draft(smoke_model, policy):
+    cfg, _, _ = smoke_model
+    cfg = _policy_cfg(cfg, policy)
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    reqs = _repetitive_requests(cfg)
+    kw = dict(max_slots=2, max_len=128)
+
+    _, base = _run(m, params, reqs, **kw)
+    out_n, toks_n = _run(m, params, reqs,
+                         spec=SpecConfig(mode="ngram", k=4), **kw)
+    assert toks_n == base, f"ngram diverged from vanilla ({policy})"
+    assert out_n["spec"]["steps"] > 0          # speculation actually ran
+    assert out_n["spec"]["accepted_tokens"] > 0
+
+    out_d, toks_d = _run(m, params, reqs,
+                         spec=SpecConfig(mode="draft", k=2), **kw)
+    assert toks_d == base, f"draft diverged from vanilla ({policy})"
+    assert out_d["spec"]["steps"] > 0
+
+
+# ---------------------------------------------------------------------------
+# Span verifier == scan verifier, committed bytes included
+# ---------------------------------------------------------------------------
+
+
+def test_span_scan_verifier_parity(smoke_model):
+    """The batched span verifier must reproduce the sequential scan
+    verifier bit-for-bit — predictions, acceptance counts, and every
+    committed cache byte outside the never-read scratch page — for
+    spans inside the slot's current group (the engine's clamp)."""
+    cfg, m, params = smoke_model
+    g = cfg.quant.group_size
+    S, N = 2, 4
+    layout = PagedLayout(page_size=g, num_pages=S * N, slots=S,
+                         pages_per_slot=N)
+    PP = layout.pool_pages
+    scan_v = make_scan_verifier(m)
+    span_v = make_span_verifier(m)
+    rng = np.random.RandomState(0)
+
+    for plen in (33, 47):
+        state = m.init_paged_state(layout)
+        table = jnp.asarray(
+            np.arange(S * N, dtype=np.int32).reshape(S, N))
+        tp = -(-plen // g) * g
+        toks = np.zeros((S, tp), np.int32)
+        toks[:, :plen] = rng.randint(0, cfg.vocab_size, (S, plen))
+        nxt = None
+        for s in range(S):
+            logits, state = m.prefill_paged(
+                params, jnp.asarray(toks[s:s + 1]), state,
+                jnp.asarray(s, jnp.int32), table[s],
+                jnp.asarray(plen, jnp.int32))
+            nxt = int(np.asarray(jnp.argmax(logits, -1))[0])
+        for q in (1, 2, 3):
+            span = np.zeros((S, q), np.int32)
+            span[:, 0] = nxt
+            if q > 1:
+                span[:, 1:] = rng.randint(0, cfg.vocab_size, (S, q - 1))
+            args = (jnp.asarray(span), jnp.full((S,), q - 1, jnp.int32),
+                    table, jnp.ones((S,), bool))
+            p1, n1, c1 = scan_v(params, state, *args)
+            p2, n2, c2 = span_v(params, state, *args)
+            assert jnp.array_equal(p1, p2), f"preds plen={plen} q={q}"
+            assert jnp.array_equal(n1, n2), f"n_acc plen={plen} q={q}"
+            for (path, l1), (_, l2) in zip(
+                    jax.tree_util.tree_leaves_with_path(c1),
+                    jax.tree_util.tree_leaves_with_path(c2)):
+                a, b = np.asarray(l1), np.asarray(l2)
+                if a.ndim >= 2 and a.shape[1] == PP:
+                    a, b = a[:, :PP - 1], b[:, :PP - 1]
+                elif a.ndim >= 1 and a.shape[0] == PP:
+                    a, b = a[:PP - 1], b[:PP - 1]
+                assert np.array_equal(a, b), \
+                    f"cache {jax.tree_util.keystr(path)} plen={plen} q={q}"
+
+
+# ---------------------------------------------------------------------------
+# Acceptance boundaries: all-rejected, all-accepted, EOS inside a span
+# ---------------------------------------------------------------------------
+
+
+class _ScriptedProposer(DraftProposer):
+    """Proposes a scripted continuation per rid (oracle when fed the
+    vanilla outputs, adversarially wrong when fed anything else)."""
+
+    name = "scripted-test"
+    script: dict = {}
+
+    def propose(self, req, k):
+        s = self.script.get(req.rid, [])
+        pos = len(req.out_tokens)
+        return [int(t) for t in s[pos:pos + k]]
+
+
+register_proposer(_ScriptedProposer, overwrite=True)
+
+
+def test_all_rejected_still_bit_identical(smoke_model):
+    cfg, m, params = smoke_model
+    reqs = _repetitive_requests(cfg, n=3, max_new=12)
+    kw = dict(max_slots=2, max_len=128)
+    _, base = _run(m, params, reqs, **kw)
+    # every draft is target-argmax + 1 -> guaranteed rejection
+    _ScriptedProposer.script = {
+        rid: [(t + 1) % cfg.vocab_size for t in t_list]
+        for rid, t_list in base.items()}
+    out, toks = _run(m, params, reqs,
+                     spec=SpecConfig(mode="scripted-test", k=3), **kw)
+    assert toks == base
+    assert out["spec"]["drafted_tokens"] > 0
+    assert out["spec"]["accepted_tokens"] == 0
+
+
+def test_all_accepted_oracle_proposer(smoke_model):
+    cfg, m, params = smoke_model
+    reqs = _repetitive_requests(cfg, n=3, max_new=12)
+    kw = dict(max_slots=2, max_len=128)
+    _, base = _run(m, params, reqs, **kw)
+    _ScriptedProposer.script = base     # the target's own continuation
+    out, toks = _run(m, params, reqs,
+                     spec=SpecConfig(mode="scripted-test", k=3), **kw)
+    assert toks == base
+    sp = out["spec"]
+    assert sp["drafted_tokens"] > 0
+    assert sp["accepted_tokens"] == sp["drafted_tokens"]   # rate 1.0
+    # oracle spans retire multiple tokens per dispatch
+    assert sp["mean_accepted_per_step"] > 1.0
+
+
+def test_eos_inside_span_truncates(smoke_model):
+    """An EOS produced mid-span must end the request exactly where
+    vanilla decode would, discarding the span's tail."""
+    cfg, m, params = smoke_model
+    reqs = _repetitive_requests(cfg, n=3, max_new=16)
+    kw = dict(max_slots=2, max_len=128)
+    _, base = _run(m, params, reqs, **kw)
+    # choose an eos id that appears mid-output for at least one request
+    eos = next(t for ts in base.values() for t in ts[2:-2])
+    gen = GenerationConfig(eos_id=int(eos))
+    _, base_eos = _run(m, params, reqs, gen=gen, **kw)
+    assert any(len(base_eos[r]) < len(base[r]) for r in base_eos)
+    _ScriptedProposer.script = base
+    out, toks = _run(m, params, reqs, gen=gen,
+                     spec=SpecConfig(mode="scripted-test", k=4), **kw)
+    assert toks == base_eos
+    for ts in toks.values():
+        assert int(eos) not in ts[:-1]      # nothing emitted past EOS
+
+
+# ---------------------------------------------------------------------------
+# Cancel / preempt mid-speculation + allocator invariants
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_mid_spec_step_allocator_consistent(smoke_model):
+    cfg, m, params = smoke_model
+    reqs = _repetitive_requests(cfg, n=4, max_new=24)
+    eng = ContinuousBatchingEngine(m, params, max_slots=2, max_len=128)
+    eng.warmup([r.prompt_len for r in reqs])
+    base = eng.run(_clone(reqs), GenerationConfig())
+    base_toks = {r.rid: list(r.out_tokens) for r in base["requests"]}
+
+    core = EngineCore(m, params, max_slots=2, max_len=128,
+                      spec=SpecConfig(mode="ngram", k=4))
+    core.warmup([r.prompt_len for r in reqs])
+    stream = StreamingEngine(core, GenerationConfig())
+    for r in _clone(reqs):
+        stream.submit(r)
+    cancelled = False
+    steps = 0
+    while stream.has_work:
+        evs = stream.step()
+        steps += 1
+        check_alloc_invariants(core.sched.alloc)
+        # cancel rid 1 the moment a speculative span lands for it
+        if not cancelled and any(
+                ev.kind == "token" and ev.rid == 1 and ev.span > 1
+                for ev in evs):
+            assert stream.cancel(1)
+            cancelled = True
+            check_alloc_invariants(core.sched.alloc)
+        assert steps < 2000
+    assert cancelled, "no speculative span ever landed for rid 1"
+    out = stream.result()
+    done = {r.rid: list(r.out_tokens) for r in out["requests"]}
+    assert set(done) == {0, 2, 3}
+    for rid, ts in done.items():
+        assert ts == base_toks[rid]     # survivors still bit-identical
+
+
+def test_preempt_mid_spec_recovers_bit_identical(smoke_model):
+    """A pool small enough to force recompute-preemption, with spans in
+    flight: every request must still finish with vanilla outputs and
+    the allocator must stay consistent throughout."""
+    cfg, m, params = smoke_model
+    g = cfg.quant.group_size
+    reqs = _repetitive_requests(cfg, n=4, max_new=40)
+    # oversubscribed pool: 3 slots each growing to 3 pages, 6 in the pool
+    kw = dict(max_slots=3, max_len=4 * g, num_pages=6)
+    _, base = _run(m, params, reqs, **kw)
+
+    core = EngineCore(m, params, spec=SpecConfig(mode="ngram", k=4), **kw)
+    core.warmup([r.prompt_len for r in reqs])
+    stream = StreamingEngine(core, GenerationConfig())
+    for r in _clone(reqs):
+        stream.submit(r)
+    preempts = 0
+    steps = 0
+    while stream.has_work:
+        for ev in stream.step():
+            preempts += ev.kind == "preempt"
+        check_alloc_invariants(core.sched.alloc)
+        steps += 1
+        assert steps < 4000
+    assert preempts > 0, "workload never preempted — pool not tight"
+    out = stream.result()
+    assert {r.rid: list(r.out_tokens) for r in out["requests"]} == base
+
+
+# ---------------------------------------------------------------------------
+# Event stream: ordinals, span metadata, streaming latency semantics
+# ---------------------------------------------------------------------------
+
+
+def test_event_ordinals_and_span_metadata(smoke_model):
+    cfg, m, params = smoke_model
+    reqs = _repetitive_requests(cfg, n=3, max_new=16)
+    core = EngineCore(m, params, max_slots=2, max_len=128,
+                      spec=SpecConfig(mode="ngram", k=4))
+    core.warmup([r.prompt_len for r in reqs])
+    stream = StreamingEngine(core, GenerationConfig())
+    for r in _clone(reqs):
+        stream.submit(r)
+    by_rid: dict = {}
+    saw_multi = False
+    for ev in stream.events():
+        if ev.kind not in ("first_token", "token"):
+            continue
+        by_rid.setdefault(ev.rid, []).append(ev)
+        assert 0 <= ev.span_ix < ev.span
+        saw_multi |= ev.span > 1
+    assert saw_multi, "no multi-token span retired"
+    for rid, evs in by_rid.items():
+        assert [e.ordinal for e in evs] == list(range(len(evs)))
+        ts = [e.t for e in evs]
+        assert all(b >= a for a, b in zip(ts, ts[1:]))   # clock monotone
+        for a, b in zip(evs, evs[1:]):
+            if b.span_ix > 0:       # same span -> same dispatch stamp
+                assert b.t == a.t and b.span == a.span
+
+
+def test_stream_latency_stats_span_itl():
+    """Tokens of one speculative span share a timestamp: the intra-span
+    ITL entries must be exactly zero (never negative), and the gap to
+    the next dispatch carries the step latency."""
+    reqs = [Request(rid=0, prompt=np.zeros((4,), np.int32),
+                    max_new_tokens=8, arrival_time=0.0)]
+    evs = [TokenEvent("first_token", 0, 1.0, token=7, slot=0,
+                      ordinal=0, span=3, span_ix=0)]
+    evs += [TokenEvent("token", 0, 1.0, token=7, slot=0, ordinal=i,
+                       span=3, span_ix=i) for i in (1, 2)]
+    evs.append(TokenEvent("token", 0, 1.5, token=7, slot=0, ordinal=3))
+    # replayed/merged streams may carry tiny negative jitter: clamp
+    evs.append(TokenEvent("token", 0, 1.5 - 1e-9, token=7, slot=0,
+                          ordinal=4))
+    lat = stream_latency_stats(evs, reqs)
+    assert lat["itl_s"]["n"] == 4
+    assert lat["itl_s"]["p50"] == 0.0
+    assert min(0.0, lat["itl_s"]["p50"]) == 0.0
+    assert lat["itl_s"]["p99"] == pytest.approx(0.5)
+    assert lat["ttft_s"]["mean"] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# Registry + proposer unit checks
+# ---------------------------------------------------------------------------
+
+
+def test_proposer_registry_contents():
+    names = list_proposers()
+    assert "ngram" in names and "draft" in names
+
+
+def test_ngram_proposer_incremental_matching():
+    spec = SpecConfig(mode="ngram", k=4)
+    prop = make_proposer(spec)
+    assert isinstance(prop, NgramProposer)
+    req = Request(rid=9, prompt=np.array([1, 2, 3, 1, 2], np.int32),
+                  max_new_tokens=8, arrival_time=0.0)
+    # suffix [1, 2] matched earlier at position 0 -> propose [3, 1, 2]
+    got = prop.propose(req, 4)
+    assert got[:1] == [3]
+    # cap ramps with full acceptance, resets on rejection
+    prop.feedback(9, len(got), len(got))
+    req.out_tokens.extend(got)
+    assert len(prop.propose(req, 4)) >= len(got)
+    prop.feedback(9, 2, 0)
+    prop.release(9)
+    assert prop.propose(req, 0) == []
+
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError):
+        SpecConfig(mode="ngram", k=0)
+    with pytest.raises(ValueError):
+        SpecConfig(mode="ngram", min_ngram=3, max_ngram=2)
+    with pytest.raises(KeyError):
+        make_proposer(SpecConfig(mode="no-such-proposer"))
