@@ -37,8 +37,9 @@ import numpy as np
 from repro.configs import get_config, reduce_for_smoke
 from repro.models import get_model
 from repro.serve import (
-    ContinuousBatchingEngine, GenerationConfig, Request, ServeEngine,
-    StreamingEngine, stream_latency_stats,
+    ChaosConfig, ChaosInjector, ContinuousBatchingEngine, GenerationConfig,
+    QosConfig, Request, ServeEngine, StreamingEngine, check_event_stream,
+    goodput_under_sla, stream_latency_stats,
 )
 from repro.utils import nearest_rank_pct as _pct, pow2_bucket as _bucket
 
@@ -137,7 +138,8 @@ def _strip_requests(r: dict) -> dict:
     """JSON-serializable copy of an engine result dict (drops the Request
     and TokenEvent objects; everything else is plain numbers/lists)."""
     return {k: v for k, v in r.items()
-            if k not in ("requests", "events", "cancelled_requests")}
+            if k not in ("requests", "events", "cancelled_requests",
+                         "shed_requests", "rejected_requests")}
 
 
 def run_cb(cfg, params, args, *, backend: str, max_len: int,
@@ -382,6 +384,262 @@ def run_spec_sweep(cfg, params, args) -> dict:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Adversarial arms (DESIGN.md §16): hostile workloads, goodput-under-SLA
+# ---------------------------------------------------------------------------
+
+
+def make_bursty_workload(n: int, bursts: int, gap: float, seed: int,
+                         prompt_lo: int, prompt_hi: int, out_lo: int,
+                         out_hi: int, deadline: float = 0.0,
+                         tenant: str = "default") -> list[Request]:
+    """Synchronized arrival storms: ``bursts`` groups of ~n/bursts
+    requests landing within a millisecond of each other, ``gap`` seconds
+    apart — the anti-Poisson workload where FCFS queueing delay spikes
+    and deadline-aware shedding has to triage."""
+    rng = np.random.default_rng(seed)
+    reqs, rid = [], 0
+    per = max(n // bursts, 1)
+    for b in range(bursts):
+        for _ in range(per):
+            reqs.append(Request(
+                rid=rid,
+                prompt=rng.integers(0, 512, (int(rng.integers(
+                    prompt_lo, prompt_hi + 1)),)).astype(np.int32),
+                max_new_tokens=int(rng.integers(out_lo, out_hi + 1)),
+                arrival_time=b * gap + rng.uniform(0, 1e-3),
+                ttft_deadline=deadline, tenant=tenant))
+            rid += 1
+    return reqs
+
+
+def make_tenant_workload(n: int, rate: float, seed: int, prefix_len: int,
+                         suffix_lo: int, suffix_hi: int, out_lo: int,
+                         out_hi: int, heavy_frac: float = 0.9,
+                         deadline: float = 0.0) -> list[Request]:
+    """90/10 multi-tenant mix: a ``heavy`` tenant floods ~90% of the
+    arrivals, a ``light`` tenant trickles the rest; each tenant has its
+    own shared system prompt (prefix-cache-friendly within a tenant,
+    cross-tenant pollution between them). Under FCFS the light tenant
+    queues behind the flood; WFQ's attained-service ordering is what
+    should keep its latency flat."""
+    rng = np.random.default_rng(seed)
+    prefixes = {t: rng.integers(0, 512, (prefix_len,)).astype(np.int32)
+                for t in ("heavy", "light")}
+    t, reqs = 0.0, []
+    for i in range(n):
+        t += rng.exponential(1.0 / rate)
+        tenant = "heavy" if rng.random() < heavy_frac else "light"
+        suffix = rng.integers(0, 512, (int(rng.integers(
+            suffix_lo, suffix_hi + 1)),)).astype(np.int32)
+        reqs.append(Request(
+            rid=i, prompt=np.concatenate([prefixes[tenant], suffix]),
+            max_new_tokens=int(rng.integers(out_lo, out_hi + 1)),
+            arrival_time=t, tenant=tenant, ttft_deadline=deadline))
+    return reqs
+
+
+def make_straggler_workload(n: int, rate: float, seed: int, long_len: int,
+                            long_every: int, chat_lo: int, chat_hi: int,
+                            out_lo: int, out_hi: int,
+                            deadline: float = 0.0) -> list[Request]:
+    """Long-context stragglers beside chat traffic: every
+    ``long_every``-th request carries a ``long_len`` prompt (tenant
+    ``batch``, no deadline) between short chat requests (tenant ``chat``,
+    deadline-bound) — the head-of-line-blocking regime chunked prefill +
+    QoS must keep interactive."""
+    rng = np.random.default_rng(seed)
+    t, reqs = 0.0, []
+    for i in range(n):
+        t += rng.exponential(1.0 / rate)
+        straggler = long_every > 0 and i % long_every == long_every - 1
+        plen = long_len if straggler else int(rng.integers(
+            chat_lo, chat_hi + 1))
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(0, 512, (plen,)).astype(np.int32),
+            max_new_tokens=int(rng.integers(out_lo, out_hi + 1)),
+            arrival_time=t,
+            tenant="batch" if straggler else "chat",
+            ttft_deadline=0.0 if straggler else deadline))
+    return reqs
+
+
+def _adv_run(model, params, args, wl: list[Request], *, qos=None,
+             chaos=None, slo: float, num_pages=None, prefill_chunk: int = 0,
+             warm_caps: list[int] | None = None) -> dict:
+    """One adversarial arm: run, assert the event-stream invariants and
+    post-drain allocator conservation, return metrics + goodput-under-SLA
+    (tokens/s from requests whose TTFT met the deadline)."""
+    eng = ContinuousBatchingEngine(
+        model, params, max_slots=args.slots, max_len=args.max_len,
+        num_pages=num_pages if num_pages is not None
+        else (args.num_pages or None),
+        prefill_chunk=prefill_chunk, qos=qos, chaos=chaos)
+    eng.warmup(sorted({r.prompt_len for r in wl})
+               + (warm_caps or [args.max_len]))
+    r = eng.run(wl, GenerationConfig())
+    # invariants hold under every hostile workload, not just in tests
+    check_event_stream(r["events"])
+    alloc = eng.core.sched.alloc
+    assert alloc.quarantined_pages == 0, "chaos quarantine leaked"
+    assert alloc.free_pages == eng.core.layout.num_pages, \
+        "pages leaked after drain"
+    r.update(stream_latency_stats(r["events"], wl))
+    r["goodput"] = goodput_under_sla(r["requests"], r["wall_s"], slo)
+    return r
+
+
+def run_adversarial(cfg, params, args) -> dict:
+    """The hostile-workload scenario suite: each arm runs an SLA-aware
+    QoS engine against the FCFS no-QoS baseline on the same workload,
+    with **goodput-under-SLA** (tokens/s from requests meeting their
+    TTFT deadline) as the headline. The soak arm's QoS-beats-FCFS margin
+    is the benchmark's acceptance gate (nonzero rc on regression)."""
+    model = get_model(dataclasses.replace(cfg, decode_backend=args.backend))
+
+    # calibrate the SLO off the *unloaded* TTFT: a trickle workload the
+    # pool absorbs instantly, p50 TTFT * 4 = the deadline a lightly
+    # loaded engine comfortably meets and an overloaded queue blows
+    calib = _adv_run(model, params, args,
+                     make_workload(max(args.slots, 4), 2.0, args.seed,
+                                   args.prompt_lo, args.prompt_hi,
+                                   args.out_lo, args.out_hi),
+                     slo=float("inf"))
+    slo = max(4.0 * calib["ttft_s"]["p50"], 1e-3)
+    qos_cfg = QosConfig(ttft_slo=slo)
+    out: dict = {"slo_s": slo,
+                 "calibration_ttft_p50_s": calib["ttft_s"]["p50"]}
+
+    def ab(name, wl_fn, *, qos=qos_cfg, fcfs_kw=None, qos_kw=None,
+           extra=None):
+        kw = dict(slo=slo)
+        a = _adv_run(model, params, args, wl_fn(),
+                     **{**kw, **(fcfs_kw or {})})
+        b = _adv_run(model, params, args, wl_fn(), qos=qos,
+                     **{**kw, **(qos_kw or {})})
+        arm = {
+            "fcfs": _strip_requests(a), "qos": _strip_requests(b),
+            "goodput_win": b["goodput"]["goodput_tokens_per_s"]
+            / max(a["goodput"]["goodput_tokens_per_s"], 1e-9),
+        }
+        if extra:
+            arm.update(extra(a, b))
+        print(f"adversarial/{name:12s} goodput fcfs="
+              f"{a['goodput']['goodput_tokens_per_s']:8.1f} qos="
+              f"{b['goodput']['goodput_tokens_per_s']:8.1f} tok/s "
+              f"({arm['goodput_win']:.2f}x)  met-rate "
+              f"{a['goodput']['deadline_met_rate']:.2f}->"
+              f"{b['goodput']['deadline_met_rate']:.2f}  "
+              f"shed={b['n_shed']}")
+        out[name] = arm
+        return a, b
+
+    # --- sustained-overload soak: a deadline-bound storm far over
+    # service capacity, on an undersized pool (preemption churn); FCFS
+    # serves everyone late, QoS sheds the doomed tail and keeps the
+    # survivors inside the SLA ---
+    soak_pages = max(args.slots * 2,
+                     (args.prompt_hi + args.out_hi)
+                     // cfg.quant.group_size + 2)
+    soak_wl = lambda: make_bursty_workload(
+        args.adversarial_requests, 2, 0.05, args.seed + 11,
+        args.prompt_lo, args.prompt_hi, args.out_lo, args.out_hi,
+        deadline=slo)
+    ab("soak", soak_wl,
+       qos=dataclasses.replace(qos_cfg, pressure_hi=0.85),
+       fcfs_kw=dict(num_pages=soak_pages),
+       qos_kw=dict(num_pages=soak_pages),
+       extra=lambda a, b: {
+           "num_pages": soak_pages,
+           "preemptions_fcfs": sum(q.preemptions
+                                   for q in a["requests"]),
+           "preemptions_qos": sum(q.preemptions
+                                  for q in b["requests"]),
+           "degrade": b.get("qos", {}).get("degrade"),
+       })
+
+    # --- bursty Poisson storms: arrival clusters instead of a smooth
+    # stream; same A/B, deadlines only meetable near the burst head ---
+    burst_wl = lambda: make_bursty_workload(
+        args.adversarial_requests, 4, 0.4, args.seed + 13,
+        args.prompt_lo, args.prompt_hi, args.out_lo, args.out_hi,
+        deadline=slo)
+    ab("burst", burst_wl)
+
+    # --- cancellation flood: deterministic chaos storms cancel half the
+    # live requests twice mid-run; the stream invariants (no events
+    # after cancel, dense ordinals) must survive, and the engine's
+    # goodput comes only from the survivors ---
+    flood_chaos = lambda: ChaosInjector(ChaosConfig(
+        seed=args.seed, cancel_at=(8, 20), cancel_frac=0.5))
+    flood_wl = lambda: make_workload(
+        args.adversarial_requests, args.rate * 2, args.seed + 17,
+        args.prompt_lo, args.prompt_hi, args.out_lo, args.out_hi)
+    fa = _adv_run(model, params, args, flood_wl(), slo=slo,
+                  chaos=flood_chaos())
+    fb = _adv_run(model, params, args, flood_wl(), slo=slo)
+    out["cancel_flood"] = {
+        "chaos": _strip_requests(fa), "clean": _strip_requests(fb),
+        "storm_cancels": fa["chaos"]["storm_cancels"],
+    }
+    print(f"adversarial/cancel_flood  cancelled="
+          f"{fa['n_cancelled']} of {args.adversarial_requests}  "
+          f"survivor tok/s={fa['tokens_per_s']:.1f} "
+          f"(clean {fb['tokens_per_s']:.1f})")
+
+    # --- 90/10 multi-tenant shared-prefix mix: WFQ must hold the light
+    # tenant's TTFT under the heavy tenant's flood ---
+    tenant_wl = lambda: make_tenant_workload(
+        args.adversarial_requests, args.rate * 2, args.seed + 19,
+        args.shared_prefix or 32, args.suffix_lo, args.suffix_hi,
+        args.out_lo, args.out_hi, deadline=slo)
+
+    def tenant_ttft(r, tenant):
+        ts = [q.t_first_token - q.arrival_time for q in r["requests"]
+              if q.tenant == tenant and q.t_first_token is not None]
+        return _pct(sorted(ts), 50)
+
+    ab("tenants", tenant_wl,
+       qos=dataclasses.replace(qos_cfg, weights={"light": 4.0}),
+       extra=lambda a, b: {
+           "light_ttft_p50_fcfs_s": tenant_ttft(a, "light"),
+           "light_ttft_p50_qos_s": tenant_ttft(b, "light"),
+           "tenants_qos": b["qos"]["tenants"],
+       })
+
+    # --- long-context stragglers beside chat traffic: chunked prefill +
+    # QoS keep the chat class inside its deadline while batch-class
+    # stragglers (no deadline) grind through. The SLO recalibrates on
+    # the chunked config — per-chunk dispatch overhead shifts the whole
+    # unloaded TTFT scale ---
+    chunk = max(cfg.quant.group_size * 2, 32)
+    calib_chunked = _adv_run(model, params, args,
+                             make_workload(max(args.slots, 4), 2.0,
+                                           args.seed, args.prompt_lo,
+                                           args.prompt_hi, args.out_lo,
+                                           args.out_hi),
+                             slo=float("inf"), prefill_chunk=chunk)
+    slo_chunked = max(4.0 * calib_chunked["ttft_s"]["p50"], 1e-3)
+    out["slo_chunked_s"] = slo_chunked
+    strag_wl = lambda: make_straggler_workload(
+        args.adversarial_requests, args.rate, args.seed + 23,
+        long_len=min(args.max_len - args.out_hi, 4 * args.prompt_hi),
+        long_every=5, chat_lo=args.prompt_lo, chat_hi=args.prompt_hi,
+        out_lo=args.out_lo, out_hi=args.out_hi, deadline=slo_chunked)
+    ab("stragglers", strag_wl,
+       qos=dataclasses.replace(qos_cfg, ttft_slo=slo_chunked),
+       fcfs_kw=dict(prefill_chunk=chunk, slo=slo_chunked),
+       qos_kw=dict(prefill_chunk=chunk, slo=slo_chunked),
+       extra=lambda a, b: {
+           "prefill_chunk": chunk,
+           "chat_ttft_p50_fcfs_s": tenant_ttft(a, "chat"),
+           "chat_ttft_p50_qos_s": tenant_ttft(b, "chat"),
+       })
+
+    out["soak_gate_ok"] = out["soak"]["goodput_win"] > 1.0
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
@@ -425,6 +683,14 @@ def main(argv=None):
     ap.add_argument("--spec-gen", type=int, default=192,
                     help="output tokens per request in the spec-sweep "
                          "arms")
+    ap.add_argument("--adversarial", action="store_true",
+                    help="run the hostile-workload scenario suite "
+                         "(overload soak, burst storms, cancel floods, "
+                         "multi-tenant mix, stragglers) with "
+                         "goodput-under-SLA A/B vs the no-QoS FCFS "
+                         "baseline")
+    ap.add_argument("--adversarial-requests", type=int, default=16,
+                    help="requests per adversarial arm")
     ap.add_argument("--json", default="",
                     help="write machine-readable results to this path")
     args = ap.parse_args(argv)
@@ -493,6 +759,8 @@ def main(argv=None):
               if args.shared_prefix else None)
     spec_sweep = (run_spec_sweep(cfg, params, args)
                   if args.spec_sweep else None)
+    adversarial = (run_adversarial(cfg, params, args)
+                   if args.adversarial else None)
 
     if args.json:
         import json
@@ -515,6 +783,7 @@ def main(argv=None):
             "prefill_sweep": prefill_sweep,
             "shared_prefix": shared,
             "spec_sweep": spec_sweep,
+            "adversarial": adversarial,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
@@ -525,6 +794,9 @@ def main(argv=None):
         return 1   # the fused prefill must never change greedy outputs
     if spec_sweep is not None and not spec_sweep["outputs_bit_identical"]:
         return 1   # speculation must never change greedy outputs
+    if adversarial is not None and not adversarial["soak_gate_ok"]:
+        return 1   # QoS must beat FCFS on deadline-met goodput under
+        # sustained overload — the suite's acceptance gate
     # when both engines keep up with the Poisson arrivals, tokens/s
     # converges to the offered load for everyone — the continuous-batching
     # win then shows up as per-request latency, not throughput

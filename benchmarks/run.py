@@ -31,12 +31,15 @@ def main() -> None:
             "--sweep", "192,512,2048", "--shared-prefix", "96",
             "--prefill-sweep", "2048,4096,8192",
             "--spec-sweep", "2,4,8",
+            "--adversarial", "--adversarial-requests", "14",
             "--json", "BENCH_serving.json"])
         if rc:
             raise RuntimeError(
                 "serving regression: continuous batching lost to the "
-                "static baseline, or prefix reuse / the fused prefill "
-                "backend / speculative decode changed greedy outputs")
+                "static baseline, prefix reuse / the fused prefill "
+                "backend / speculative decode changed greedy outputs, or "
+                "QoS lost to FCFS on deadline-met goodput under the "
+                "overload soak")
 
     suites = [
         ("quant_error(T1)", bench_quant_error.run),

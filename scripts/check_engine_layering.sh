@@ -19,6 +19,13 @@
 #      (the paged span verifier) and draft.py (the draft-model proposer's
 #      forwards). Proposer bookkeeping (ngram index, registry, config)
 #      stays host-side so proposing never blocks on the device.
+#   4. The chaos seam is duck-typed (DESIGN.md §16): serve/core.py must
+#      NOT import serve.chaos — fault injection reaches the engine only
+#      as an opaque object, so production code carries zero test-harness
+#      imports. serve.chaos imports are allowed only in the front doors
+#      (serve/__init__.py), launchers, benchmarks, and tests. Note rule 1
+#      already keeps qos.py and chaos.py jax-free: SLA policy and fault
+#      schedules are host-side decisions, never device work.
 set -u
 cd "$(dirname "$0")/.."
 
@@ -56,6 +63,18 @@ if [ -n "$mut" ]; then
     echo "(serve/scheduler.py, serve/core.py, core/) — page refcounts" >&2
     echo "must only change under the scheduler/core invariants:" >&2
     echo "$mut" >&2
+    fail=1
+fi
+
+chaosimp=$(grep -rnE '(from[[:space:]]+(repro\.serve\.chaos|\.chaos)[[:space:]]+import|import[[:space:]]+repro\.serve\.chaos|from[[:space:]]+\.[[:space:]]*import[^\n]*chaos)' \
+    src/repro benchmarks examples --include='*.py' \
+    | grep -vE 'src/repro/(serve/(chaos|__init__)\.py|launch/)' \
+    | grep -v 'benchmarks/' || true)
+if [ -n "$chaosimp" ]; then
+    echo "ERROR: serve.chaos imported outside the front doors — the" >&2
+    echo "engine's chaos seam is duck-typed; core code must never" >&2
+    echo "import the fault-injection harness:" >&2
+    echo "$chaosimp" >&2
     fail=1
 fi
 

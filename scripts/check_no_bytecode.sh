@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# No compiled-Python artifacts in the index. Stray __pycache__/ trees and
+# .pyc files shadow source edits (a stale .pyc can mask a syntax error or
+# resurrect deleted code at import time) and bloat diffs; .gitignore keeps
+# them out of `git add .`, and this check catches the force-add path.
+set -u
+cd "$(dirname "$0")/.."
+
+tracked=$(git ls-files | grep -E '(^|/)__pycache__(/|$)|\.py[co]$' || true)
+if [ -n "$tracked" ]; then
+    echo "ERROR: compiled Python artifacts tracked in git — remove with" >&2
+    echo "'git rm -r --cached <path>' (they are .gitignore'd):" >&2
+    echo "$tracked" >&2
+    exit 1
+fi
+echo "bytecode check OK (no __pycache__/.pyc tracked)"

@@ -12,6 +12,18 @@ request a common system-prompt prefix so the hit rate is visible).
 front door (``repro.serve.api.StreamingEngine`` over ``EngineCore.step``):
 tokens print the step they are sampled and the summary reports per-token
 TTFT / inter-token-latency percentiles from the event stream.
+
+QoS + chaos (DESIGN.md §16) quickstart::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --smoke --engine cb --batch 4 --gen 16 \
+        --tenant-budget 500 --ttft-slo 0.5 --max-pending 8 \
+        --chaos "exhaust@8,cancel@12:0.5"
+
+``--tenant-budget``/``--ttft-slo``/``--max-pending`` enable SLA-aware
+admission (weighted-fair queueing, deadline shedding, bounded-queue
+rejects); ``--chaos`` injects a deterministic fault schedule through the
+production scheduler/allocator paths.
 """
 from __future__ import annotations
 
@@ -82,6 +94,22 @@ def main(argv=None) -> int:
                     help="cb engine: common system-prompt length prepended "
                          "to every request (demo workload for "
                          "--prefix-cache)")
+    ap.add_argument("--tenant-budget", type=float, default=0.0,
+                    help="cb engine: per-tenant token-bucket budget in "
+                         "tokens/s of engine time (0 = unlimited); enables "
+                         "QoS weighted-fair admission")
+    ap.add_argument("--ttft-slo", type=float, default=0.0,
+                    help="cb engine: session TTFT deadline in seconds — "
+                         "requests whose deadline is blown or unmeetable "
+                         "are shed with an explicit event (0 = off)")
+    ap.add_argument("--max-pending", type=int, default=0,
+                    help="cb engine: bounded admission queue — intake over "
+                         "this depth rejects with an explicit event "
+                         "(0 = unbounded)")
+    ap.add_argument("--chaos", default="",
+                    help="cb engine: deterministic fault injection spec, "
+                         "e.g. 'exhaust@8,slow@5:0.05,cancel@12:0.5,"
+                         "proposer@0.3' (see repro.serve.chaos)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -134,10 +162,27 @@ def main(argv=None) -> int:
         if args.spec_mode != "off":
             from repro.spec import SpecConfig
             spec = SpecConfig(mode=args.spec_mode, k=args.spec_k)
+        qos = None
+        if args.tenant_budget > 0 or args.ttft_slo > 0 or \
+                args.max_pending > 0:
+            from repro.serve import QosConfig
+            qos = QosConfig(tenant_budget=args.tenant_budget,
+                            ttft_slo=args.ttft_slo,
+                            max_pending=args.max_pending)
+            print(f"[serve] qos: budget={args.tenant_budget} tok/s  "
+                  f"ttft-slo={args.ttft_slo}s  "
+                  f"max-pending={args.max_pending}")
+        chaos = None
+        if args.chaos:
+            from repro.serve import ChaosConfig, ChaosInjector
+            chaos = ChaosInjector(ChaosConfig.parse(args.chaos,
+                                                    seed=args.seed))
+            print(f"[serve] chaos: {chaos.cfg}")
         eng = ContinuousBatchingEngine(
             model, params, max_slots=args.batch, max_len=args.max_len,
             prefix_cache=args.prefix_cache,
-            prefill_chunk=args.prefill_chunk, spec=spec)
+            prefill_chunk=args.prefill_chunk, spec=spec,
+            qos=qos, chaos=chaos)
         eng.warmup([r.prompt_len for r in reqs] + [args.max_len],
                    GenerationConfig(max_new_tokens=args.gen))
         gen = GenerationConfig(max_new_tokens=args.gen,
@@ -189,6 +234,12 @@ def main(argv=None) -> int:
               f"p50 {out['p50_latency_s'] * 1e3:.1f}ms  "
               f"cache {out['cache_bytes'] / 2**20:.2f} MiB  "
               f"prefill-chunk {out['prefill_chunk']}")
+        if "qos" in out:
+            print(f"[serve] qos: {out['n_shed']} shed  "
+                  f"{out['n_rejected']} rejected  "
+                  f"prefill-rate-est {out['qos']['prefill_rate_est']}")
+        if "chaos" in out:
+            print(f"[serve] chaos: {out['chaos']}")
         if "spec" in out:
             sp = out["spec"]
             print(f"[serve] spec mode={sp['mode']} k={sp['k']}  "

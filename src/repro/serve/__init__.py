@@ -3,11 +3,24 @@
 Layering (DESIGN.md §13): ``core.py`` owns every device dispatch
 (``EngineCore.step()`` + the static ``ServeEngine``); ``scheduler.py``
 owns slots/pages host-side; ``engine.py`` (batch replay) and ``api.py``
-(streaming) are thin host-side drivers over the core.
+(streaming) are thin host-side drivers over the core. ``qos.py``
+(SLA-aware admission + graceful degradation) and ``chaos.py``
+(deterministic fault injection) are host-side policy modules (§16) —
+both optional, both provably inert when not configured.
 """
-from repro.serve.api import StreamingEngine, stream_latency_stats  # noqa: F401
+from repro.serve.api import (  # noqa: F401
+    StreamingEngine, check_event_stream, stream_latency_stats,
+)
+from repro.serve.chaos import (  # noqa: F401
+    ChaosConfig, ChaosError, ChaosInjector,
+)
 from repro.serve.core import (  # noqa: F401
     EngineCore, GenerationConfig, ServeEngine, TokenEvent,
 )
 from repro.serve.engine import ContinuousBatchingEngine  # noqa: F401
-from repro.serve.scheduler import Request, Scheduler  # noqa: F401
+from repro.serve.qos import (  # noqa: F401
+    DegradeController, QosConfig, QosState, goodput_under_sla,
+)
+from repro.serve.scheduler import (  # noqa: F401
+    CancelSummary, Request, Scheduler,
+)

@@ -62,30 +62,49 @@ class StreamingEngine:
 
     def add_request(self, prompt, max_new_tokens: int = 32, *,
                     rid: Optional[int] = None,
-                    arrival_time: Optional[float] = None) -> int:
+                    arrival_time: Optional[float] = None,
+                    tenant: str = "default",
+                    ttft_deadline: float = 0.0) -> int:
         """Enqueue a prompt; returns its rid. ``arrival_time`` defaults
         to *now* on the engine clock (an open-loop caller never schedules
-        the future; batch replays may)."""
+        the future; batch replays may). ``tenant``/``ttft_deadline``
+        feed QoS accounting and deadline shedding when the core has a
+        :class:`~repro.serve.qos.QosConfig` (ignored otherwise).
+
+        With QoS bounded-queue backpressure, intake over a full queue
+        never hangs silently: the request is marked rejected and an
+        explicit ``reject`` event (``reason="queue_full"``) is queued
+        for the next :meth:`step`/:meth:`events` pull."""
         if rid is None:
             rid = self._next_rid   # submit() advances the counter
         req = Request(
             rid=rid, prompt=np.asarray(prompt, np.int32),
             max_new_tokens=int(max_new_tokens),
             arrival_time=(self.core.clock if arrival_time is None
-                          else float(arrival_time)))
+                          else float(arrival_time)),
+            tenant=tenant, ttft_deadline=float(ttft_deadline))
         return self.submit(req)
 
     def submit(self, req: Request) -> int:
         """Enqueue a pre-built :class:`Request` (batch-replay path)."""
         self._next_rid = max(self._next_rid, req.rid) + 1
-        return self.core.add_request(req)
+        rid = self.core.add_request(req)
+        # surface intake-time QoS rejects immediately, ahead of step
+        # events, so a caller that only polls events() sees the reject
+        self._pending_events.extend(self.core.take_intake_events())
+        return rid
 
     def cancel(self, rid: int) -> bool:
         """Cancel ``rid`` wherever it is — queued, mid-prefill, or
         mid-decode. Pages are decref'd and the slot freed immediately
         (host-side); the ``cancel`` event surfaces on the next
-        :meth:`step` / :meth:`events` pull. Returns False when ``rid``
-        is unknown or already finished."""
+        :meth:`step` / :meth:`events` pull.
+
+        Cancelling an unknown rid — including one that already finished,
+        was already cancelled, or was shed/rejected by QoS — is a
+        **documented no-op**: it returns False, emits nothing, and
+        leaves the session untouched (racing a cancel against a
+        completion must never error)."""
         events = self.core.cancel(rid)
         self._pending_events.extend(events)
         return bool(events)
@@ -185,3 +204,47 @@ def stream_latency_stats(events: Iterable[TokenEvent],
         }
 
     return {"ttft_s": stats(ttfts), "itl_s": stats(itls)}
+
+
+def check_event_stream(events: Iterable[TokenEvent]) -> dict:
+    """Assert the event-stream invariants every engine session must
+    uphold, under any fault or overload (used by tests/test_chaos.py and
+    the adversarial bench arms):
+
+    * per-rid token ordinals are **dense** — each kept token's ordinal
+      is exactly (tokens emitted so far − tokens retracted by preempts);
+    * at most one **terminal** event per rid (``finish``, ``cancel``,
+      ``shed``, or ``reject``), with no token/admit events after it;
+    * ``first_token`` only ever happens once per rid;
+    * timestamps are non-decreasing stream-wide.
+
+    Returns per-rid terminal kinds (``{rid: kind}``) so callers can
+    cross-check against request states; raises AssertionError on any
+    violation."""
+    ntoks: dict[int, int] = {}
+    seen_first: set[int] = set()
+    terminal: dict[int, str] = {}
+    last_t = float("-inf")
+    for ev in events:
+        assert ev.t >= last_t, \
+            f"timestamp regression at rid {ev.rid}: {ev.t} < {last_t}"
+        last_t = ev.t
+        if ev.rid in terminal:
+            raise AssertionError(
+                f"rid {ev.rid}: event {ev.kind!r} after terminal "
+                f"{terminal[ev.rid]!r}")
+        if ev.kind in ("first_token", "token"):
+            if ev.kind == "first_token":
+                assert ev.rid not in seen_first, \
+                    f"rid {ev.rid}: duplicate first_token"
+                seen_first.add(ev.rid)
+            n = ntoks.get(ev.rid, 0)
+            assert ev.ordinal == n, \
+                f"rid {ev.rid}: ordinal {ev.ordinal} != dense {n}"
+            ntoks[ev.rid] = n + 1
+        elif ev.kind == "preempt":
+            if ntoks.get(ev.rid, 0) > 0:
+                ntoks[ev.rid] -= 1   # the retracted token re-samples
+        elif ev.kind in ("finish", "cancel", "shed", "reject"):
+            terminal[ev.rid] = ev.kind
+    return terminal

@@ -42,6 +42,9 @@ import numpy as np
 from repro.core.cache_layout import PagedLayout, PrefixIndex
 from repro.distributed import ctx
 from repro.models.registry import Model
+from repro.serve.qos import (
+    DegradeController, QosConfig, QosState, RateEstimator,
+)
 from repro.serve.scheduler import Request, Scheduler
 from repro.spec import SpecConfig, make_proposer, make_verifier
 from repro.utils import (
@@ -78,10 +81,14 @@ DECODING = "decoding"        # prefill done, producing tokens
 FINISHED = "finished"        # EOS / length limit; slot + pages released
 PREEMPTED = "preempted"      # pages reclaimed under pressure; requeued
 CANCELLED = "cancelled"      # caller cancelled; slot + pages released
+REJECTED = "rejected"        # QoS bounded-queue backpressure at intake
+SHED = "shed"                # QoS deadline shed before admission
 
 #: Every kind a :class:`TokenEvent` can carry, in lifecycle order.
+#: ``reject`` and ``shed`` are terminal: a rejected/shed rid never emits
+#: another event (the event-stream invariant bench arms assert).
 EVENT_KINDS = ("admit", "first_token", "token", "finish", "preempt",
-               "cancel")
+               "cancel", "reject", "shed")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,6 +123,10 @@ class TokenEvent:
     ordinal: int = -1
     span: int = 1
     span_ix: int = 0
+    #: why a ``reject``/``shed`` event happened (``"queue_full"``,
+    #: ``"deadline_blown"``, ``"deadline_unmeetable"``); None otherwise —
+    #: clients see the reason instead of a silent hang.
+    reason: Optional[str] = None
 
 
 class ServeEngine:
@@ -228,7 +239,8 @@ class EngineCore:
                  mesh=None, rules: Optional[dict] = None,
                  table_slicing: bool = True, prefix_cache: bool = False,
                  prefill_chunk: int = 0, prefill_budget: int = 0,
-                 spec: Optional[SpecConfig] = None):
+                 spec: Optional[SpecConfig] = None,
+                 qos: Optional[QosConfig] = None, chaos=None):
         if model.decode_paged is None:
             raise ValueError(
                 f"family {model.cfg.family!r} has no paged decode path")
@@ -290,6 +302,13 @@ class EngineCore:
             self._proposer = make_proposer(
                 self.spec, target_cfg=model.cfg, target_model=model,
                 target_params=params, max_len=self.layout.tokens_per_slot)
+        # QoS (DESIGN.md §16): None means the engine is byte-for-byte the
+        # pre-QoS FCFS engine — every QoS branch is gated on it.
+        self.qos_cfg = qos
+        # chaos is a pre-built injector (duck-typed: core never imports
+        # serve.chaos — enforced by scripts/check_engine_layering.sh);
+        # None takes zero chaos branches.
+        self.chaos = chaos
         self.reset()
 
     # --- session lifecycle ------------------------------------------------
@@ -309,8 +328,16 @@ class EngineCore:
             self._proposer.reset()
         self.prefix = (PrefixIndex(self.layout, self.prefill_chunk)
                        if self.prefix_cache else None)
+        self.qos = QosState(self.qos_cfg) if self.qos_cfg is not None \
+            else None
+        self.degrade = (DegradeController(self.qos_cfg)
+                        if self.qos_cfg is not None and self.qos_cfg.degrade
+                        else None)
+        self._prefill_rate = RateEstimator() if self.qos is not None \
+            else None
         self.sched = Scheduler(self.layout, prefix_index=self.prefix,
-                               chunk_tokens=self.prefill_chunk)
+                               chunk_tokens=self.prefill_chunk,
+                               qos=self.qos)
         self.state = self.model.init_paged_state(self.layout)
         s = self.layout.slots
         self.clock = 0.0
@@ -324,6 +351,15 @@ class EngineCore:
         self._arrivals: list[Request] = []     # sorted by arrival_time
         self.completed: list[Request] = []
         self.cancelled: list[Request] = []
+        self.shed: list[Request] = []          # QoS deadline sheds
+        self.rejected: list[Request] = []      # QoS queue-full rejects
+        self._intake_events: list[TokenEvent] = []
+        self._cycle = 0                        # chaos schedule domain
+        self._quarantine_release = -1
+        self._preempted_cycle = False          # degrade pressure signal
+        self.proposer_faults = 0
+        if self.chaos is not None:
+            self.chaos.reset()
         # cycle state: the step machine mirrors one monolith loop
         # iteration as the phase sequence begin -> admit* -> prefill* ->
         # decode, pumping arrivals and resetting the chunk budget once
@@ -352,13 +388,29 @@ class EngineCore:
 
         Rejects (ValueError) a context that can never fit one slot —
         at intake, so an open-loop session is never poisoned by an
-        oversized request reaching the queue head mid-stream."""
+        oversized request reaching the queue head mid-stream.
+
+        With QoS bounded-queue backpressure (``QosConfig.max_pending``),
+        intake over a full queue marks the request ``REJECTED`` and
+        queues an explicit ``reject`` TokenEvent (``reason=
+        "queue_full"``) — never a silent hang; the rid is still
+        returned so the caller can match the event."""
         need = self.layout.pages_for(req.context_len + 1)
         if need > self.layout.pages_per_slot:
             raise ValueError(
                 f"request {req.rid}: context {req.context_len} needs "
                 f"{need} pages > pages_per_slot "
                 f"{self.layout.pages_per_slot}")
+        if self.qos is not None and self.qos_cfg.max_pending > 0 and \
+                len(self._arrivals) + len(self.sched.pending) >= \
+                self.qos_cfg.max_pending:
+            req.state = REJECTED
+            req.t_done = self.clock
+            self.rejected.append(req)
+            self.qos.on_reject(req)
+            self._intake_events.append(TokenEvent(
+                "reject", req.rid, self.clock, reason="queue_full"))
+            return req.rid
         req.state = WAITING
         i = len(self._arrivals)
         while i > 0 and self._arrivals[i - 1].arrival_time > \
@@ -366,6 +418,13 @@ class EngineCore:
             i -= 1
         self._arrivals.insert(i, req)
         return req.rid
+
+    def take_intake_events(self) -> list[TokenEvent]:
+        """Drain events produced at intake (QoS rejects). :meth:`step`
+        prepends these automatically; streaming drivers that want the
+        reject surfaced before the next step may drain them directly."""
+        evs, self._intake_events = self._intake_events, []
+        return evs
 
     def cancel(self, rid: int) -> list[TokenEvent]:
         """Cancel a request wherever it is in the lifecycle.
@@ -378,14 +437,16 @@ class EngineCore:
           The slot is immediately reusable by the next admission.
 
         Returns the ``cancel`` event ([] when ``rid`` is unknown or
-        already finished). Host-side only — no device dispatch."""
+        already finished — a documented no-op, never an error).
+        Host-side only — no device dispatch."""
         for i, r in enumerate(self._arrivals):
             if r.rid == rid:
                 del self._arrivals[i]
                 return self._cancelled(r)
-        req, slot = self.sched.cancel(rid)
-        if req is None:
+        summary = self.sched.cancel(rid)
+        if summary is None:
             return []
+        req, slot = summary.req, summary.slot
         if slot >= 0:
             self._prefilling.pop(slot, None)
             self._eff_max.pop(rid, None)
@@ -534,7 +595,8 @@ class EngineCore:
         Idle with scheduled arrivals jumps the clock; idle with no work
         at all returns ``[]`` immediately (streaming drivers poll)."""
         with self._ctx():
-            return self._step()
+            intake = self.take_intake_events()
+            return intake + self._step() if intake else self._step()
 
     def _step(self) -> list[TokenEvent]:
         if self._phase == "begin":
@@ -545,11 +607,36 @@ class EngineCore:
                 # idle engine: jump the clock to the next arrival
                 self.clock = max(self.clock, self._arrivals[0].arrival_time)
                 self._pump_arrivals()
+            self._cycle += 1
             self._progressed = False
             self._budget_left = self.prefill_budget
+            if self.qos is not None:
+                self.qos.refill(self.clock)
+            if self.degrade is not None:
+                self.degrade.update(self.sched.utilization(),
+                                    self._preempted_cycle)
+                self._preempted_cycle = False
+                self._budget_left = self.degrade.prefill_budget(
+                    self.prefill_budget)
+                if self.degrade.evict_ahead:
+                    # proactively drop index-only prefix pages so live
+                    # decode keeps ~1 page of headroom per active slot,
+                    # ahead of the preemption path
+                    want = (self.sched.num_active
+                            - self.sched.alloc.free_pages)
+                    if want > 0:
+                        self.sched.reclaim(want)
             self._phase = "admit"
+            if self.chaos is not None:
+                events = self._apply_chaos()
+                if events:
+                    return events   # faults end the begin phase
 
         if self._phase == "admit":
+            if self.qos is not None:
+                shed_evs = self._shed_unmeetable()
+                if shed_evs:
+                    return shed_evs
             req = self.sched.admissible()
             if req is not None:
                 return self._admit(req)
@@ -563,6 +650,20 @@ class EngineCore:
                                      self._arrivals[0].arrival_time)
                     return []
                 if self.sched.pending:
+                    if self._quarantine_release >= 0:
+                        # a chaos quarantine (not pool size) is holding
+                        # the pages; it lifts at a known cycle — spin
+                        return []
+                    if self.qos is not None:
+                        # an idle engine's clock freezes, so a tenant
+                        # bucket blocking the whole queue would never
+                        # refill — jump to the earliest affordable time
+                        # (deadlines blown by the wait shed next cycle)
+                        t = self.qos.next_affordable_time(
+                            self.sched.pending, self.clock)
+                        if t is not None:
+                            self.clock = max(self.clock, t)
+                            return []
                     raise RuntimeError(
                         "pool cannot fit a single pending request "
                         "(num_pages too small)")
@@ -581,6 +682,52 @@ class EngineCore:
         while self._arrivals and \
                 self._arrivals[0].arrival_time <= self.clock:
             self.sched.submit(self._arrivals.pop(0))
+
+    # --- QoS + chaos seams (DESIGN.md §16) --------------------------------
+
+    def _apply_chaos(self) -> list[TokenEvent]:
+        """The single chaos seam: once per cycle, apply the injector's
+        declarative faults through production paths (allocator
+        quarantine, engine clock, the real cancel path). Inert when the
+        injector's schedule yields nothing this cycle."""
+        if 0 <= self._quarantine_release <= self._cycle:
+            self.sched.alloc.release_quarantine()
+            self._quarantine_release = -1
+        events: list[TokenEvent] = []
+        for act in self.chaos.actions(self._cycle):
+            if act[0] == "exhaust":
+                self.sched.alloc.quarantine(self.sched.alloc.free_pages)
+                self._quarantine_release = self._cycle + int(act[1])
+            elif act[0] == "slow":
+                self.clock += float(act[1])
+            elif act[0] == "cancel_storm":
+                live = [r.rid for r in self.sched.pending] + \
+                    [r.rid for r in self.sched.active.values()]
+                for rid in self.chaos.pick_victims(live, float(act[1])):
+                    events += self.cancel(rid)
+        return events
+
+    def _shed_unmeetable(self) -> list[TokenEvent]:
+        """Deadline-aware admission control: drop pending requests whose
+        TTFT deadline is already blown or provably unmeetable given the
+        queue ahead of them and the measured prefill rate, emitting
+        explicit ``shed`` events (QosState.unmeetable documents the
+        projection)."""
+        inflight = sum(len(cur["ctx"]) - cur["off"]
+                       for cur in self._prefilling.values())
+        rate = self._prefill_rate.rate if self._prefill_rate else None
+        doomed = self.qos.unmeetable(self.sched.pending, self.clock,
+                                     rate, inflight)
+        events: list[TokenEvent] = []
+        for req, reason in doomed:
+            self.sched.cancel(req.rid)
+            req.state = SHED
+            req.t_done = self.clock
+            self.shed.append(req)
+            self.qos.on_shed(req)
+            events.append(TokenEvent("shed", req.rid, self.clock,
+                                     reason=reason))
+        return events
 
     def _admit(self, req: Request) -> list[TokenEvent]:
         """Admission: assign a slot, adopt prefix hits, reserve pages.
@@ -616,7 +763,10 @@ class EngineCore:
         self._key, sub = jax.random.split(self._key)
         tok = self._sample(logits, sub, self.gen)
         tok0 = int(jax.block_until_ready(tok)[0])
-        self.clock += time.monotonic() - t0
+        dt = time.monotonic() - t0
+        self.clock += dt
+        if self._prefill_rate is not None:
+            self._prefill_rate.observe(tl, dt)
         self.prefill_computed += tl
         return events + self._take_first_token(slot, tok0, tl)
 
@@ -654,12 +804,18 @@ class EngineCore:
             self._key, sub = jax.random.split(self._key)
             tok = self._sample(logits, sub, self.gen)
             tok0 = int(jax.block_until_ready(tok)[0])
-            self.clock += time.monotonic() - t0
+            dt = time.monotonic() - t0
+            self.clock += dt
+            if self._prefill_rate is not None:
+                self._prefill_rate.observe(clen, dt)
             del self._prefilling[slot]
             self.sched.register_prefix(slot)
             return self._take_first_token(slot, tok0, tl)
         jax.block_until_ready(logits)
-        self.clock += time.monotonic() - t0
+        dt = time.monotonic() - t0
+        self.clock += dt
+        if self._prefill_rate is not None:
+            self._prefill_rate.observe(clen, dt)
         return []
 
     def _take_first_token(self, slot: int, tok0: int,
@@ -673,6 +829,8 @@ class EngineCore:
         req.out_tokens.append(tok0)
         self._next_tok[slot] = tok0
         self._lengths[slot] = tl
+        if self.qos is not None:
+            self.qos.on_tokens(req.tenant, 1)
         # a preemption-resume re-prefill is not the stream's first token
         events = [TokenEvent("first_token" if first else "token",
                              req.rid, self.clock, token=tok0, slot=slot,
@@ -779,6 +937,7 @@ class EngineCore:
                 self._proposer.release(vreq.rid)
             sched.preempt(victim)
             vreq.state = PREEMPTED
+            self._preempted_cycle = True
             # the preempt event carries the retracted token: streaming
             # consumers must drop their last token for this rid
             return [TokenEvent("preempt", vreq.rid, self.clock,
@@ -822,6 +981,8 @@ class EngineCore:
             t = int(toks[sl])
             req.out_tokens.append(t)
             self._next_tok[sl] = t
+            if self.qos is not None:
+                self.qos.on_tokens(req.tenant, 1)
             events.append(TokenEvent("token", req.rid, self.clock,
                                      token=t, slot=sl,
                                      ordinal=req.done_tokens - 1))
@@ -844,14 +1005,30 @@ class EngineCore:
         (``paged_cache.span_verify_attention``). At worst — a slot one
         token shy of a boundary — the step degrades to plain decode."""
         g = self.layout.page_size
+        # graceful degradation halves k per level (0 at level 3): under
+        # sustained pool pressure speculative spans are the first cost
+        # to drop before live requests get preempted
+        k = (self.degrade.spec_k(self.spec.k) if self.degrade is not None
+             else self.spec.k)
         drafts: dict[int, list[int]] = {}
         for sl, req in self.sched.active.items():
             if sl in self._prefilling:
                 continue
-            want = min(self.spec.k,
+            want = min(k,
                        self._eff_max[req.rid] - req.done_tokens - 1,
                        g - int(self._lengths[sl]) % g - 1)
-            d = self._proposer.propose(req, want) if want > 0 else []
+            d: list = []
+            if want > 0:
+                # a proposer exception (real bug or injected fault) must
+                # never take the engine down — the step degrades to plain
+                # decode for this slot and the fault is counted
+                try:
+                    if self.chaos is not None:
+                        self.chaos.maybe_fail_proposer()
+                    d = self._proposer.propose(req, want)
+                except Exception:
+                    self.proposer_faults += 1
+                    d = []
             drafts[sl] = [int(t) for t in d[:max(want, 0)]]
         return drafts
 
@@ -923,6 +1100,8 @@ class EngineCore:
                     finished = True
                     break
             span = len(emit)
+            if self.qos is not None:
+                self.qos.on_tokens(req.tenant, span)
             for j, t in enumerate(emit):
                 req.out_tokens.append(t)
                 events.append(TokenEvent(
@@ -991,7 +1170,21 @@ class EngineCore:
             "cow_splits": self.cow_splits,
             "cancelled_requests": self.cancelled,
             "n_cancelled": len(self.cancelled),
+            "shed_requests": self.shed,
+            "n_shed": len(self.shed),
+            "rejected_requests": self.rejected,
+            "n_rejected": len(self.rejected),
+            "proposer_faults": self.proposer_faults,
         }
+        if self.qos is not None:
+            res["qos"] = {
+                **self.qos.stats(),
+                "prefill_rate_est": self._prefill_rate.rate,
+                "degrade": (self.degrade.stats()
+                            if self.degrade is not None else None),
+            }
+        if self.chaos is not None:
+            res["chaos"] = self.chaos.stats()
         if self.spec is not None:
             res["spec"] = {
                 "mode": self.spec.mode,

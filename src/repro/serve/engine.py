@@ -56,6 +56,13 @@ class ContinuousBatchingEngine:
     and only prefill the tail — bit-identical to the unshared chunked
     baseline under greedy sampling (DESIGN.md §12).
 
+    **QoS / chaos** (DESIGN.md §16): pass ``qos=QosConfig(...)`` for
+    weighted-fair admission, tenant token budgets, TTFT-deadline
+    shedding, bounded-queue rejects, and graceful degradation; pass
+    ``chaos=ChaosInjector(ChaosConfig(...))`` for deterministic fault
+    injection. Both default to ``None`` — the engine is then
+    bit-identical to the pre-QoS FCFS engine.
+
     Scheduling, paging, preemption, and the decode-step mechanics
     (width-sliced page tables, donated state, COW guard) all live in
     :class:`~repro.serve.core.EngineCore`; this class only adapts the
@@ -67,13 +74,13 @@ class ContinuousBatchingEngine:
                  mesh=None, rules: Optional[dict] = None,
                  table_slicing: bool = True, prefix_cache: bool = False,
                  prefill_chunk: int = 0, prefill_budget: int = 0,
-                 spec=None):
+                 spec=None, qos=None, chaos=None):
         self.core = EngineCore(
             model, params, max_slots=max_slots, max_len=max_len,
             num_pages=num_pages, mesh=mesh, rules=rules,
             table_slicing=table_slicing, prefix_cache=prefix_cache,
             prefill_chunk=prefill_chunk, prefill_budget=prefill_budget,
-            spec=spec)
+            spec=spec, qos=qos, chaos=chaos)
 
     # the knobs tests/benchmarks introspect, forwarded from the core
     @property

@@ -46,6 +46,10 @@ class Request:
     prompt: np.ndarray                  # (Tp,) int32
     max_new_tokens: int = 32
     arrival_time: float = 0.0           # engine-clock seconds
+    tenant: str = "default"             # QoS accounting bucket
+    #: TTFT deadline in seconds from arrival (0 = fall back to the
+    #: session's ``QosConfig.ttft_slo``; only enforced under QoS)
+    ttft_deadline: float = 0.0
 
     # filled in by the engine
     out_tokens: list = dataclasses.field(default_factory=list)
@@ -81,6 +85,21 @@ class Request:
         return (self.t_done or 0.0) - self.arrival_time
 
 
+@dataclasses.dataclass(frozen=True)
+class CancelSummary:
+    """Uniform shutdown report for a request leaving the scheduler early
+    (cancel or QoS shed), identical in shape whether or not the request
+    was ever admitted: ``slot`` is -1 and ``freed_pages`` 0 for a
+    never-admitted (pending) request; an active request reports the slot
+    it released and the pages that actually returned to the free list
+    (shared / index-pinned pages survive and are not counted)."""
+
+    req: Request
+    slot: int = -1
+    was_active: bool = False
+    freed_pages: int = 0
+
+
 class Scheduler:
     """Slot + page bookkeeping for one engine.
 
@@ -90,14 +109,21 @@ class Scheduler:
     final chunk to recompute, which is what keeps a shared-prefix prefill
     bit-identical to the unshared chunked baseline and guarantees the
     engine has live logits for the last prompt token (DESIGN.md §12).
+
+    ``qos`` (optional, a :class:`~repro.serve.qos.QosState`) replaces the
+    pure-FCFS head-of-queue admission poll with weighted fair queueing
+    over the whole pending queue (budget-filtered, see DESIGN.md §16).
+    With ``qos=None`` admission is bit-identical to the pre-QoS
+    scheduler.
     """
 
     def __init__(self, layout: PagedLayout, *,
                  prefix_index: Optional[PrefixIndex] = None,
-                 chunk_tokens: int = 0):
+                 chunk_tokens: int = 0, qos=None):
         self.layout = layout
         self.alloc = PageAllocator(layout)
         self.prefix = prefix_index
+        self.qos = qos
         self.chunk_tokens = int(chunk_tokens)
         self.free_slots: deque[int] = deque(range(layout.slots))
         self.active: dict[int, Request] = {}       # slot -> request
@@ -150,12 +176,10 @@ class Scheduler:
             return 0
         return self.prefix.evict(self.alloc, need, keep=keep)
 
-    def admissible(self) -> Optional[Request]:
-        """Next pending request that fits right now (FCFS — head only, to
-        keep arrival-order fairness)."""
-        if not self.pending or not self.free_slots:
-            return None
-        req = self.pending[0]
+    def _fits(self, req: Request) -> bool:
+        """Can ``req`` be admitted right now (pages for its context plus
+        the first decode append, after adopting prefix hits and evicting
+        index-only pages if needed)?"""
         # pages for the context plus the first decode append: a new page is
         # only needed when the context ends exactly at a page boundary
         need = self.layout.pages_for(req.context_len + 1)
@@ -167,17 +191,32 @@ class Scheduler:
         need -= len(hits)
         if not self.alloc.can_alloc(need):
             self.reclaim(need - self.alloc.free_pages, keep=set(hits))
-        if not self.alloc.can_alloc(need):
+        return self.alloc.can_alloc(need)
+
+    def admissible(self) -> Optional[Request]:
+        """Next pending request that fits right now.
+
+        Without QoS: FCFS, head only — a head that doesn't fit blocks the
+        queue, preserving strict arrival-order fairness. With QoS: the
+        pending queue is walked in weighted-fair order (over-budget
+        tenants filtered) and the first request that fits is returned —
+        a blocked head no longer starves everyone behind it."""
+        if not self.pending or not self.free_slots:
             return None
-        return req
+        if self.qos is None:
+            req = self.pending[0]
+            return req if self._fits(req) else None
+        for req in self.qos.admission_order(self.pending):
+            if self._fits(req):
+                return req
+        return None
 
     def admit(self, req: Request) -> int:
         """Assign a slot; adopt prefix-hit pages (refcount+1, encoded bytes
         shared verbatim) and allocate fresh pages for the rest of the
         context plus the first decode token. Caller runs the prefill from
         ``req.prefix_hit_tokens`` onward."""
-        assert self.pending and self.pending[0] is req
-        self.pending.popleft()
+        self._remove_pending(req)
         slot = self.free_slots.popleft()
         hits = self._adoptable(req)
         need = self.layout.pages_for(req.context_len + 1) - len(hits)
@@ -192,7 +231,19 @@ class Scheduler:
         self._last_query = (-1, -1)
         req.slot = slot
         self.active[slot] = req
+        if self.qos is not None:
+            self.qos.on_admit(req)
         return slot
+
+    def _remove_pending(self, req: Request) -> None:
+        """Drop ``req`` from the pending queue by identity (QoS admission
+        may pick a non-head request; Request.__eq__ is useless here — it
+        compares prompt arrays)."""
+        for i, r in enumerate(self.pending):
+            if r is req:
+                del self.pending[i]
+                return
+        raise AssertionError(f"request {req.rid} not pending")
 
     def register_prefix(self, slot: int) -> int:
         """Index the slot's *prompt* pages once its prefill completed (full
@@ -264,19 +315,20 @@ class Scheduler:
 
     # --- cancellation ----------------------------------------------------
 
-    def cancel(self, rid: int) -> tuple[Optional[Request], int]:
+    def cancel(self, rid: int) -> Optional[CancelSummary]:
         """Cancel request ``rid`` wherever the scheduler holds it.
 
-        Pending: dequeued without ever touching the pool. Active
-        (mid-prefill or mid-decode): released through :meth:`finish`, so
-        every owned page is *decref'd* — pages shared with other slots or
-        pinned by the prefix index survive with their encoded bytes
-        intact, exclusive pages return to the free list — and the slot
-        rejoins the free list for the next admission.
+        Pending (never admitted): dequeued without ever touching the
+        pool. Active (mid-prefill or mid-decode): released through
+        :meth:`finish`, so every owned page is *decref'd* — pages shared
+        with other slots or pinned by the prefix index survive with their
+        encoded bytes intact, exclusive pages return to the free list —
+        and the slot rejoins the free list for the next admission.
 
-        Returns ``(request, slot)``; ``slot`` is -1 for a pending cancel
-        and ``(None, -1)`` when ``rid`` is unknown (already finished,
-        already cancelled, or never submitted)."""
+        Both paths return the same :class:`CancelSummary` shape (slot -1
+        and zero freed pages for the pending case); ``None`` when ``rid``
+        is unknown to the scheduler (already finished, already cancelled,
+        or never submitted) — a documented no-op, not an error."""
         for i, req in enumerate(self.pending):
             if req.rid == rid:
                 del self.pending[i]
@@ -286,13 +338,17 @@ class Scheduler:
                 # pages — force a fresh match for whoever is head next
                 self._last_query = (-1, -1)
                 self._hash_cache = (-1, -1, [])
-                return req, -1
+                return CancelSummary(req)
         for slot, req in self.active.items():
             if req.rid == rid:
                 self._last_query = (-1, -1)
                 self._hash_cache = (-1, -1, [])
-                return self.finish(slot), slot
-        return None, -1
+                free_before = self.alloc.free_pages
+                self.finish(slot)
+                return CancelSummary(
+                    req, slot=slot, was_active=True,
+                    freed_pages=self.alloc.free_pages - free_before)
+        return None
 
     # --- completion ------------------------------------------------------
 

@@ -1,0 +1,259 @@
+"""Deterministic fault injection (DESIGN.md §16): the engine must keep
+its invariants — allocator conservation, dense event ordinals,
+bit-identical greedy survivors — under every injected failure mode, and
+the injector must be **provably inert** when disabled.
+
+The inertness A/B (chaos=None vs an injector with an empty schedule) is
+the acceptance bar for the whole seam: the chaos hook may not perturb a
+healthy engine by even one token.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.core.cache_layout import PageAllocator, PagedLayout
+from repro.models import get_model
+from repro.serve import (
+    ChaosConfig, ChaosError, ChaosInjector, ContinuousBatchingEngine,
+    GenerationConfig, Request, check_event_stream,
+)
+from test_prefix_cache import check_alloc_invariants
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = reduce_for_smoke(get_config("tinyllama-1.1b"))
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _workload(cfg, n, seed=0, plen=(8, 40), max_new=6, gap=0.002):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, (int(
+                        rng.integers(*plen)),)).astype(np.int32),
+                    max_new_tokens=max_new, arrival_time=i * gap)
+            for i in range(n)]
+
+
+def _toks(res):
+    return {r.rid: list(r.out_tokens) for r in res["requests"]}
+
+
+# --- config + injector units ----------------------------------------------
+
+
+def test_chaos_config_parse_spec_string():
+    cfg = ChaosConfig.parse("exhaust@8,slow@5:0.05,cancel@12:0.5,"
+                            "proposer@0.3", seed=7)
+    assert cfg.exhaust_at == (8,) and cfg.slow_at == (5,)
+    assert cfg.cancel_at == (12,) and cfg.cancel_frac == 0.5
+    assert cfg.slow_s == 0.05 and cfg.proposer_fail_rate == 0.3
+    assert cfg.seed == 7
+    assert ChaosConfig.parse("exhaust@4:9").exhaust_steps == 9
+    with pytest.raises(ValueError):
+        ChaosConfig.parse("meteor@3")
+    with pytest.raises(ValueError):
+        ChaosConfig(cancel_frac=1.5)
+
+
+def test_injector_is_deterministic_across_resets():
+    cfg = ChaosConfig(seed=11, cancel_at=(3,), cancel_frac=0.5,
+                      proposer_fail_rate=0.5)
+    inj = ChaosInjector(cfg)
+    v1 = inj.pick_victims(list(range(10)), 0.5)
+    fails1 = []
+    for _ in range(20):
+        try:
+            inj.maybe_fail_proposer()
+            fails1.append(False)
+        except ChaosError:
+            fails1.append(True)
+    inj.reset()
+    assert inj.pick_victims(list(range(10)), 0.5) == v1
+    fails2 = []
+    for _ in range(20):
+        try:
+            inj.maybe_fail_proposer()
+            fails2.append(False)
+        except ChaosError:
+            fails2.append(True)
+    assert fails1 == fails2
+    assert inj.pick_victims([], 0.9) == []         # no victims, no crash
+    assert len(ChaosInjector(cfg).pick_victims([7], 0.01)) == 1  # >= 1
+
+
+def test_allocator_quarantine_preserves_invariants():
+    lay = PagedLayout(page_size=4, num_pages=8, slots=2, pages_per_slot=4)
+    alloc = PageAllocator(lay)
+    assert alloc.alloc(0, 2)
+    taken = alloc.quarantine(alloc.free_pages)
+    assert taken == 6 and alloc.free_pages == 0
+    assert alloc.quarantined_pages == 6
+    check_alloc_invariants(alloc)       # quarantine = a legal external pin
+    assert alloc.quarantine(3) == 0     # nothing left to take
+    assert alloc.release_quarantine() == 6
+    assert alloc.free_pages == 6 and alloc.quarantined_pages == 0
+    check_alloc_invariants(alloc)
+
+
+# --- engine-level failure modes -------------------------------------------
+
+
+def test_chaos_disabled_and_empty_schedule_are_bit_identical(smoke_model):
+    """chaos=None and an injector that never fires must both match the
+    plain engine token-for-token and metric-for-metric."""
+    cfg, m, params = smoke_model
+    plain = ContinuousBatchingEngine(m, params, max_slots=2, max_len=64,
+                                     num_pages=8)
+    r0 = plain.run(_workload(cfg, 6), GenerationConfig())
+    empty = ContinuousBatchingEngine(
+        m, params, max_slots=2, max_len=64, num_pages=8,
+        chaos=ChaosInjector(ChaosConfig(proposer_fail_rate=0.0)))
+    r1 = empty.run(_workload(cfg, 6), GenerationConfig())
+    assert _toks(r0) == _toks(r1)
+    assert r0["decode_steps"] == r1["decode_steps"]
+    assert r0["total_tokens"] == r1["total_tokens"]
+    assert r1["chaos"] == {"exhausts": 0, "slow_steps": 0,
+                           "cancel_storms": 0, "storm_cancels": 0,
+                           "proposer_faults": 0, "proposer_calls": 0}
+
+
+def test_forced_exhaustion_recovers_with_invariants(smoke_model):
+    """Quarantining every free page mid-run forces the stall/preempt
+    path; once the quarantine lifts, every request still completes and
+    the allocator balances to the page."""
+    cfg, m, params = smoke_model
+    eng = ContinuousBatchingEngine(
+        m, params, max_slots=2, max_len=64, num_pages=6,
+        chaos=ChaosInjector(ChaosConfig(exhaust_at=(4,), exhaust_steps=3,
+                                        seed=1)))
+    res = eng.run(_workload(cfg, 5, seed=3), GenerationConfig())
+    assert res["chaos"]["exhausts"] == 1
+    assert len(res["requests"]) == 5          # everyone survived
+    check_event_stream(res["events"])
+    check_alloc_invariants(eng.core.sched.alloc)
+    assert eng.core.sched.alloc.quarantined_pages == 0
+    assert eng.core.sched.alloc.free_pages == eng.core.layout.num_pages
+
+
+def test_exhaustion_with_empty_slots_spins_not_dies(smoke_model):
+    """Regression: when a quarantine leaves the engine with pending work,
+    no active slots, and no future arrivals, it must spin until the
+    scheduled release — not raise the 'num_pages too small' error meant
+    for genuinely undersized pools (found driving the launcher with
+    --chaos exhaust@N on a drained queue)."""
+    cfg, m, params = smoke_model
+    rng = np.random.default_rng(21)
+    eng = ContinuousBatchingEngine(
+        m, params, max_slots=1, max_len=64, num_pages=3,
+        chaos=ChaosInjector(ChaosConfig(exhaust_at=(2,), exhaust_steps=6,
+                                        seed=3)))
+    # both arrive at t=0; the 1-slot engine holds req 1 pending while the
+    # quarantine (cycle 2) grabs the pages req 1 will need after req 0's
+    # early finish
+    reqs = [Request(rid=0, prompt=rng.integers(0, cfg.vocab_size, (20,))
+                    .astype(np.int32), max_new_tokens=2),
+            Request(rid=1, prompt=rng.integers(0, cfg.vocab_size, (60,))
+                    .astype(np.int32), max_new_tokens=3)]
+    res = eng.run(reqs, GenerationConfig())
+    assert res["chaos"]["exhausts"] == 1
+    assert sorted(r.rid for r in res["requests"]) == [0, 1]
+    check_event_stream(res["events"])
+    check_alloc_invariants(eng.core.sched.alloc)
+    assert eng.core.sched.alloc.quarantined_pages == 0
+    assert eng.core.sched.alloc.free_pages == eng.core.layout.num_pages
+
+
+def test_cancel_storm_survivors_bit_identical(smoke_model):
+    """A storm cancels half the live requests mid-run; on a
+    preemption-free pool the survivors' greedy outputs must equal the
+    clean run's token-for-token (cancellation frees pages, it never
+    perturbs another slot's cache)."""
+    cfg, m, params = smoke_model
+    clean = ContinuousBatchingEngine(m, params, max_slots=2, max_len=64)
+    r0 = clean.run(_workload(cfg, 6, seed=5), GenerationConfig())
+    stormy = ContinuousBatchingEngine(
+        m, params, max_slots=2, max_len=64,
+        chaos=ChaosInjector(ChaosConfig(cancel_at=(6,), cancel_frac=0.5,
+                                        seed=2)))
+    r1 = stormy.run(_workload(cfg, 6, seed=5), GenerationConfig())
+    assert r1["chaos"]["cancel_storms"] == 1 and r1["n_cancelled"] > 0
+    survivors = _toks(r1)
+    baseline = _toks(r0)
+    assert survivors                        # the storm spared someone
+    for rid, toks in survivors.items():
+        assert toks == baseline[rid], f"survivor rid {rid} diverged"
+    terminal = check_event_stream(r1["events"])
+    cancelled = {r.rid for r in r1["cancelled_requests"]}
+    assert {rid for rid, k in terminal.items() if k == "cancel"} == \
+        cancelled
+    assert len(survivors) + len(cancelled) == 6
+    check_alloc_invariants(stormy.core.sched.alloc)
+    assert stormy.core.sched.alloc.free_pages == \
+        stormy.core.layout.num_pages
+
+
+def test_proposer_faults_degrade_to_plain_decode(smoke_model):
+    """Every proposer call raising must cost speculation, never
+    correctness: outputs stay bit-identical to the spec-off baseline and
+    the faults are counted."""
+    from repro.spec import SpecConfig
+    cfg, m, params = smoke_model
+    plain = ContinuousBatchingEngine(m, params, max_slots=2, max_len=64)
+    r0 = plain.run(_workload(cfg, 4, seed=7, max_new=8),
+                   GenerationConfig())
+    faulty = ContinuousBatchingEngine(
+        m, params, max_slots=2, max_len=64,
+        spec=SpecConfig(mode="ngram", k=4),
+        chaos=ChaosInjector(ChaosConfig(proposer_fail_rate=1.0, seed=4)))
+    r1 = faulty.run(_workload(cfg, 4, seed=7, max_new=8),
+                    GenerationConfig())
+    assert _toks(r0) == _toks(r1)
+    assert r1["proposer_faults"] > 0
+    assert r1["spec"]["drafted_tokens"] == 0   # nothing ever verified
+    check_event_stream(r1["events"])
+
+
+def test_slow_steps_only_stretch_the_clock(smoke_model):
+    cfg, m, params = smoke_model
+    mk = lambda chaos: ContinuousBatchingEngine(
+        m, params, max_slots=2, max_len=64, chaos=chaos)
+    r0 = mk(None).run(_workload(cfg, 4, seed=9), GenerationConfig())
+    slow = ChaosInjector(ChaosConfig(slow_at=(2, 3, 4), slow_s=0.5))
+    r1 = mk(slow).run(_workload(cfg, 4, seed=9), GenerationConfig())
+    assert r1["chaos"]["slow_steps"] == 3
+    assert _toks(r0) == _toks(r1)              # tokens untouched
+    assert r1["wall_s"] >= r0["wall_s"] + 1.4  # ~3 x 0.5s injected
+    check_event_stream(r1["events"])
+
+
+def test_streaming_cancel_storm_under_prefix_cache(smoke_model):
+    """Storms + prefix sharing: cancelled slots decref adopted pages
+    under the index's pins; the allocator must balance and the index
+    survive for later adoptions."""
+    cfg, m, params = smoke_model
+    g = cfg.quant.group_size
+    rng = np.random.default_rng(13)
+    shared = rng.integers(0, cfg.vocab_size, (g,)).astype(np.int32)
+    reqs = [Request(rid=i,
+                    prompt=np.concatenate([shared, rng.integers(
+                        0, cfg.vocab_size, (6,)).astype(np.int32)]),
+                    max_new_tokens=5,
+                    arrival_time=0.0 if i == 0 else 0.05 + i * 0.002)
+            for i in range(6)]
+    eng = ContinuousBatchingEngine(
+        m, params, max_slots=2, max_len=64, prefix_cache=True,
+        prefill_chunk=g,
+        chaos=ChaosInjector(ChaosConfig(cancel_at=(5, 9),
+                                        cancel_frac=0.5, seed=6)))
+    res = eng.run(reqs, GenerationConfig())
+    assert res["chaos"]["cancel_storms"] == 2
+    check_event_stream(res["events"])
+    check_alloc_invariants(eng.core.sched.alloc)
+    assert eng.core.sched.alloc.quarantined_pages == 0
+    # completed + cancelled account for every request exactly once
+    assert len(res["requests"]) + res["n_cancelled"] == 6

@@ -1,0 +1,331 @@
+"""SLA-aware admission control (DESIGN.md §16): weighted fair queueing,
+tenant token budgets, TTFT-deadline shedding, bounded-queue backpressure,
+and graceful degradation.
+
+Policy-layer tests run host-side against ``repro.serve.qos`` and the
+Scheduler directly (no model, no jax); engine-level tests drive the
+smoke model through the streaming front door and assert the explicit
+``shed``/``reject`` events — a QoS engine must never hang silently.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.core.cache_layout import PagedLayout
+from repro.models import get_model
+from repro.serve import (
+    ContinuousBatchingEngine, GenerationConfig, QosConfig, Request,
+    Scheduler, StreamingEngine, check_event_stream, goodput_under_sla,
+)
+from repro.serve.core import REJECTED, SHED
+from repro.serve.qos import (
+    DegradeController, QosState, RateEstimator, request_cost,
+)
+from test_prefix_cache import check_alloc_invariants
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = reduce_for_smoke(get_config("tinyllama-1.1b"))
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _req(rid, *, plen=8, tenant="default", arrival=0.0, deadline=0.0,
+         max_new=4):
+    return Request(rid=rid, prompt=np.arange(plen, dtype=np.int32),
+                   max_new_tokens=max_new, arrival_time=arrival,
+                   tenant=tenant, ttft_deadline=deadline)
+
+
+# --- config + primitives ---------------------------------------------------
+
+
+def test_qos_config_validation():
+    with pytest.raises(ValueError):
+        QosConfig(max_pending=-1)
+    with pytest.raises(ValueError):
+        QosConfig(ttft_slo=-0.5)
+    with pytest.raises(ValueError):
+        QosConfig(pressure_hi=0.5, pressure_lo=0.9)
+    with pytest.raises(ValueError):
+        QosConfig(weights={"a": 0.0})
+    cfg = QosConfig(tenant_budget=100.0)
+    assert cfg.burst == 200.0          # default burst = 2x budget
+    assert QosConfig(tenant_budget=100.0, tenant_burst=50.0).burst == 50.0
+
+
+def test_rate_estimator_ewma():
+    est = RateEstimator()
+    assert est.rate is None            # no projection before any sample
+    est.observe(100, 1.0)
+    assert est.rate == pytest.approx(100.0)
+    est.observe(300, 1.0)              # EWMA pulls toward the new sample
+    assert 100.0 < est.rate < 300.0
+    est.observe(0, 0.0)                # degenerate sample ignored
+    assert est.rate is not None
+
+
+def test_token_bucket_budget_and_burst():
+    st = QosState(QosConfig(tenant_budget=100.0))
+    ts = st.tenant("a")
+    assert ts.can_afford(150)          # bucket starts full (= burst 200)
+    ts.charge(180)
+    assert not ts.can_afford(150)      # 20 left, cost 150 > bucket
+    st.refill(1.0)                     # +100 tokens after 1s engine time
+    assert ts.can_afford(100)
+    # a cost above burst is payable at a full bucket (min(cost, burst)):
+    # one giant request must not starve forever
+    big = QosState(QosConfig(tenant_budget=10.0))
+    assert big.tenant("b").can_afford(10_000)
+
+
+def test_wfq_admission_order_least_attained_first():
+    st = QosState(QosConfig(weights={"heavy": 1.0, "light": 1.0}))
+    st.tenant("heavy").committed_tokens = 1000
+    pending = [_req(0, tenant="heavy"), _req(1, tenant="heavy"),
+               _req(2, tenant="light")]
+    order = st.admission_order(pending)
+    assert [r.rid for r in order] == [2, 0, 1]   # light first, FCFS ties
+    # weights scale attained service: heavy at weight 4 halves back in
+    st2 = QosState(QosConfig(weights={"heavy": 4.0}))
+    st2.tenant("heavy").committed_tokens = 100
+    st2.tenant("light").committed_tokens = 100
+    order2 = st2.admission_order([_req(0, tenant="heavy"),
+                                  _req(1, tenant="light")])
+    assert [r.rid for r in order2] == [0, 1]     # 100/4 < 100/1
+
+
+def test_budget_filter_excludes_broke_tenants():
+    st = QosState(QosConfig(tenant_budget=10.0))
+    st.tenant("broke").bucket = 0.0
+    pending = [_req(0, tenant="broke"), _req(1, tenant="flush")]
+    assert [r.rid for r in st.admission_order(pending)] == [1]
+
+
+def test_scheduler_wfq_vs_fcfs():
+    lay = PagedLayout(page_size=4, num_pages=16, slots=2, pages_per_slot=4)
+    heavy_first = [_req(0, tenant="heavy"), _req(1, tenant="light")]
+    # FCFS (qos=None): strictly head-of-queue
+    s0 = Scheduler(lay)
+    for r in heavy_first:
+        s0.submit(r)
+    assert s0.admissible().rid == 0
+    # WFQ: the starved light tenant jumps the queue
+    st = QosState(QosConfig())
+    st.tenant("heavy").committed_tokens = 500
+    s1 = Scheduler(lay, qos=st)
+    for r in [_req(0, tenant="heavy"), _req(1, tenant="light")]:
+        s1.submit(r)
+    got = s1.admissible()
+    assert got.rid == 1
+    slot = s1.admit(got)                  # non-head admit must not corrupt
+    assert s1.active[slot].rid == 1
+    assert [r.rid for r in s1.pending] == [0]
+    assert st.tenant("light").committed_tokens == request_cost(got)
+    check_alloc_invariants(s1.alloc)
+
+
+def test_unmeetable_projection_and_blown_deadlines():
+    st = QosState(QosConfig(ttft_slo=1.0))
+    # blown: clock already past arrival + deadline (no rate needed)
+    blown = _req(0, arrival=0.0, deadline=1.0)
+    doomed = st.unmeetable([blown], clock=2.0, prefill_rate=None)
+    assert [(r.rid, why) for r, why in doomed] == [(0, "deadline_blown")]
+    # projection: 3 requests x 100-token contexts at 100 tok/s; the
+    # third's ETA = (backlog 200 + own 100)/100 = 3s > its 1s deadline
+    reqs = [_req(i, plen=100, arrival=0.0, deadline=10.0 if i < 2 else 1.0)
+            for i in range(3)]
+    doomed = st.unmeetable(reqs, clock=0.0, prefill_rate=100.0)
+    assert [(r.rid, why) for r, why in doomed] == \
+        [(2, "deadline_unmeetable")]
+    # without a rate measurement the projection is disabled
+    assert st.unmeetable(reqs, clock=0.0, prefill_rate=None) == []
+    # shed_late=False disables shedding entirely
+    off = QosState(QosConfig(ttft_slo=1.0, shed_late=False))
+    assert off.unmeetable([blown], clock=2.0, prefill_rate=None) == []
+
+
+def test_degrade_hysteresis_and_knobs():
+    cfg = QosConfig(pressure_hi=0.9, pressure_lo=0.5,
+                    hysteresis_up=3, hysteresis_down=4)
+    d = DegradeController(cfg)
+    for _ in range(2):                      # 2 hot cycles: not enough
+        assert d.update(0.95, False) == 0
+    assert d.update(0.95, False) == 1       # 3rd consecutive: downshift
+    assert d.spec_k(8) == 4 and d.prefill_budget(64) == 32
+    assert not d.evict_ahead
+    for _ in range(3):
+        d.update(0.95, False)
+    assert d.level == 2 and d.evict_ahead   # sustained: next level
+    # the dead zone (between lo and hi) resets the hot streak but is not
+    # calm — the level holds
+    d.update(0.7, False)
+    assert d.level == 2
+    for _ in range(3):
+        assert d.update(0.2, False) == 2    # calm, but < hysteresis_down
+    assert d.update(0.2, False) == 1        # 4th calm cycle: recover
+    # a preemption is pressure regardless of utilization
+    d2 = DegradeController(cfg)
+    for _ in range(3):
+        d2.update(0.0, True)
+    assert d2.level == 1
+    # level 3 turns speculation off and floors the budget
+    d3 = DegradeController(cfg)
+    for _ in range(9):
+        d3.update(1.0, False)
+    assert d3.level == 3
+    assert d3.spec_k(8) == 0 and d3.prefill_budget(4) == 1
+    assert d3.stats()["downshifts"] == 3
+
+
+def test_goodput_under_sla_metric():
+    met = _req(0, deadline=1.0)
+    met.t_first_token, met.out_tokens = 0.5, [1, 2, 3]
+    late = _req(1, arrival=0.0, deadline=1.0)
+    late.t_first_token, late.out_tokens = 2.0, [1, 2, 3, 4]
+    never = _req(2, deadline=1.0)           # no first token at all
+    g = goodput_under_sla([met, late, never], wall_s=2.0)
+    assert g["good_tokens"] == 3 and g["deadline_met_requests"] == 1
+    assert g["deadline_missed_requests"] == 2
+    assert g["goodput_tokens_per_s"] == pytest.approx(1.5)
+    # no deadline anywhere: everything completed counts
+    free = _req(3)
+    free.t_first_token, free.out_tokens = 5.0, [1]
+    assert goodput_under_sla([free], 1.0)["deadline_met_rate"] == 1.0
+
+
+# --- engine-level: explicit events, never a silent hang --------------------
+
+
+def test_bounded_queue_rejects_with_event(smoke_model):
+    cfg, m, params = smoke_model
+    eng = ContinuousBatchingEngine(
+        m, params, max_slots=2, max_len=64,
+        qos=QosConfig(max_pending=2))
+    stream = StreamingEngine(eng)
+    rids = [stream.add_request(np.arange(8, dtype=np.int32),
+                               max_new_tokens=3) for _ in range(4)]
+    # intake 3 and 4 arrive over the bounded queue: explicit rejects
+    # surface on the very first pull, ahead of any step events
+    first = stream.step()
+    pre = [ev for ev in first if ev.kind == "reject"]
+    assert [ev.rid for ev in pre] == rids[2:]
+    assert all(ev.reason == "queue_full" for ev in pre)
+    assert first[:2] == pre
+    events = first + list(stream.events())
+    terminal = check_event_stream(events)
+    assert [terminal[r] for r in rids] == \
+        ["finish", "finish", "reject", "reject"]
+    res = stream.result()
+    assert res["n_rejected"] == 2
+    assert all(r.state == REJECTED for r in res["rejected_requests"])
+    assert res["qos"]["rejected"] == 2
+    # cancelling a rejected rid is the documented no-op
+    assert stream.cancel(rids[2]) is False
+    check_alloc_invariants(eng.core.sched.alloc)
+
+
+def test_deadline_shed_emits_events_and_frees_nothing(smoke_model):
+    cfg, m, params = smoke_model
+    eng = ContinuousBatchingEngine(
+        m, params, max_slots=2, max_len=64, qos=QosConfig(ttft_slo=1e-4))
+    stream = StreamingEngine(eng)
+    rng = np.random.default_rng(0)
+    # a two-slot engine swallowing 8 near-simultaneous arrivals under a
+    # microscopic deadline: the queue tail must shed, not serve late
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, (16,))
+                    .astype(np.int32),
+                    max_new_tokens=4, arrival_time=i * 1e-5)
+            for i in range(8)]
+    for r in reqs:
+        stream.submit(r)
+    events = list(stream.events())
+    terminal = check_event_stream(events)
+    res = stream.result()
+    assert res["n_shed"] > 0
+    sheds = [ev for ev in events if ev.kind == "shed"]
+    assert {ev.reason for ev in sheds} <= \
+        {"deadline_blown", "deadline_unmeetable"}
+    assert all(r.state == SHED for r in res["shed_requests"])
+    assert res["qos"]["prefill_rate_est"] is not None
+    # every request reached exactly one terminal state
+    assert sorted(terminal) == list(range(8))
+    assert res["n_shed"] + len(res["requests"]) == 8
+    check_alloc_invariants(eng.core.sched.alloc)
+    assert eng.core.sched.alloc.free_pages == eng.core.layout.num_pages
+
+
+def test_degrade_engages_under_pool_pressure(smoke_model):
+    cfg, m, params = smoke_model
+    g = cfg.quant.group_size
+    # an oversubscribed pool: 3 slots contending for barely more pages
+    # than one request needs keeps utilization pinned above pressure_hi
+    pages = (48 + 8) // g + 3
+    qos = QosConfig(pressure_hi=0.6, pressure_lo=0.3, hysteresis_up=2)
+    eng = ContinuousBatchingEngine(
+        m, params, max_slots=3, max_len=64, num_pages=pages, qos=qos)
+    rng = np.random.default_rng(1)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, (24,))
+                    .astype(np.int32),
+                    max_new_tokens=8, arrival_time=i * 1e-3)
+            for i in range(6)]
+    res = eng.run(reqs, GenerationConfig())
+    deg = res["qos"]["degrade"]
+    assert deg["downshifts"] > 0            # pressure engaged the ladder
+    assert deg["peak_level"] >= 1
+    assert len(res["requests"]) == 6        # degraded, but everyone done
+    check_alloc_invariants(eng.core.sched.alloc)
+
+
+def test_default_qos_config_outputs_match_plain_engine(smoke_model):
+    """A bare ``QosConfig()`` on a single-tenant unchunked workload
+    changes accounting, not behavior: no deadlines to shed, no budgets
+    to filter, equal attained service keeps FCFS order — greedy outputs
+    must match the qos=None engine exactly."""
+    cfg, m, params = smoke_model
+
+    def wl():
+        rng = np.random.default_rng(2)
+        return [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size, (12,))
+                        .astype(np.int32),
+                        max_new_tokens=5, arrival_time=i * 0.002)
+                for i in range(5)]
+
+    plain = ContinuousBatchingEngine(m, params, max_slots=2, max_len=64)
+    r1 = plain.run(wl(), GenerationConfig())
+    qos = ContinuousBatchingEngine(m, params, max_slots=2, max_len=64,
+                                   qos=QosConfig())
+    r2 = qos.run(wl(), GenerationConfig())
+    toks = lambda r: {q.rid: list(q.out_tokens) for q in r["requests"]}
+    assert toks(r1) == toks(r2)
+    assert "qos" not in r1 and "chaos" not in r1
+    assert r2["qos"]["tenants"]["default"]["admitted"] == 5
+
+
+def test_idle_engine_jumps_clock_to_bucket_refill(smoke_model):
+    """Regression: with the pool idle and the queue head blocked only by
+    its tenant's token bucket, the simulated clock (and thus every
+    refill) would freeze — the engine must jump to the next affordable
+    time instead of dying with the 'num_pages too small' error (found
+    driving the launcher with --tenant-budget on a drained pool)."""
+    cfg, m, params = smoke_model
+    rng = np.random.default_rng(31)
+    eng = ContinuousBatchingEngine(
+        m, params, max_slots=2, max_len=64,
+        qos=QosConfig(tenant_budget=10.0))   # burst 20 = one request
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, (16,))
+                    .astype(np.int32), max_new_tokens=4)
+            for i in range(2)]               # cost 20 each
+    res = eng.run(reqs, GenerationConfig())
+    assert sorted(r.rid for r in res["requests"]) == [0, 1]
+    # rid 1 had to wait out a full bucket refill (20 tokens / 10 tok/s)
+    assert res["wall_s"] >= 1.9
+    assert res["qos"]["tenants"]["default"]["admitted"] == 2

@@ -389,8 +389,9 @@ def test_cancel_invalidates_hash_memo_across_rid_reuse():
     req_a = Request(rid=5, prompt=prompt_a.copy())
     sched.submit(req_a)
     assert sched.admissible() is req_a
-    gone, slot_of_gone = sched.cancel(5)
-    assert gone is req_a and slot_of_gone == -1
+    summary = sched.cancel(5)
+    assert summary.req is req_a and summary.slot == -1
+    assert not summary.was_active and summary.freed_pages == 0
     # rid 5 reused: same length, different tokens — must miss the index
     req_b = Request(rid=5, prompt=np.arange(100, 112, dtype=np.int32))
     sched.submit(req_b)
@@ -439,3 +440,85 @@ def test_cancel_queued_request_never_touches_pool(smoke_model):
         {0, 1, 2, 3} - {victim}
     check_alloc_invariants(core.sched.alloc)
     assert core.sched.alloc.free_pages == core.layout.num_pages
+
+
+def test_cancel_after_finish_is_noop(smoke_model):
+    """Cancelling a rid that already finished must be a documented no-op:
+    ``cancel`` returns False, the completed result is untouched, and the
+    session keeps serving."""
+    cfg, m, params = smoke_model
+    eng = ContinuousBatchingEngine(m, params, max_slots=2, max_len=128)
+    stream = StreamingEngine(eng)
+    rid = stream.add_request(np.zeros(12, np.int32), max_new_tokens=3)
+    evs = list(stream.events())
+    assert any(e.rid == rid and e.kind == "finish" for e in evs)
+    done = [r for r in stream.core.completed if r.rid == rid]
+    toks = list(done[0].out_tokens)
+    assert not stream.cancel(rid)            # finished rid: no-op
+    assert stream.core.sched.cancel(rid) is None   # scheduler agrees
+    assert list(done[0].out_tokens) == toks        # result untouched
+    assert not stream.core.cancelled
+    # and the engine still serves the next request normally
+    rid2 = stream.add_request(np.zeros(12, np.int32), max_new_tokens=2)
+    kinds = [e.kind for e in stream.events() if e.rid == rid2]
+    assert kinds[-1] == "finish"
+
+
+# ---------------------------------------------------------------------------
+# stream_latency_stats degenerate streams (synthetic events)
+# ---------------------------------------------------------------------------
+
+
+def _ev(kind, rid, t, token=None):
+    from repro.serve import TokenEvent
+    return TokenEvent(kind=kind, rid=rid, t=t, token=token)
+
+
+def test_latency_stats_all_shed_stream_is_zeroed():
+    """A session whose every request was shed/rejected produced no
+    tokens: both percentiles blocks must be exact zeros with n=0, never
+    NaN."""
+    reqs = [Request(rid=i, prompt=np.zeros(4, np.int32),
+                    arrival_time=0.01 * i) for i in range(3)]
+    events = [_ev("shed", 0, 0.5), _ev("reject", 1, 0.5),
+              _ev("shed", 2, 0.6)]
+    stats = stream_latency_stats(events, reqs)
+    assert stats["ttft_s"] == {"p50": 0.0, "p95": 0.0, "p99": 0.0,
+                               "mean": 0.0, "n": 0}
+    assert stats["itl_s"]["n"] == 0 and stats["itl_s"]["mean"] == 0.0
+
+
+def test_latency_stats_single_token_responses_have_no_itl():
+    """max_new_tokens=1 fleets have a TTFT per request but zero
+    inter-token gaps."""
+    reqs = [Request(rid=i, prompt=np.zeros(4, np.int32),
+                    arrival_time=float(i)) for i in range(4)]
+    events = [_ev("first_token", i, float(i) + 0.25, token=7)
+              for i in range(4)]
+    stats = stream_latency_stats(events, reqs)
+    assert stats["ttft_s"]["n"] == 4
+    assert stats["ttft_s"]["p50"] == pytest.approx(0.25)
+    assert stats["itl_s"] == {"p50": 0.0, "p95": 0.0, "p99": 0.0,
+                              "mean": 0.0, "n": 0}
+
+
+def test_latency_stats_preempt_retraction_restarts_ttft():
+    """A preemption that retracts the only visible token resets the
+    client's stream: TTFT is measured to the post-resume first token,
+    and no gap across the retraction can go negative."""
+    req = Request(rid=0, prompt=np.zeros(4, np.int32), arrival_time=0.0)
+    events = [
+        _ev("first_token", 0, 1.0, token=5),
+        _ev("preempt", 0, 1.5, token=5),    # retracts the whole stream
+        _ev("first_token", 0, 4.0, token=5),
+        _ev("token", 0, 4.5, token=6),
+    ]
+    stats = stream_latency_stats(events, [req])
+    assert stats["ttft_s"]["n"] == 1
+    assert stats["ttft_s"]["p50"] == pytest.approx(4.0)  # post-resume
+    assert stats["itl_s"]["n"] == 1
+    assert stats["itl_s"]["p50"] == pytest.approx(0.5)
+    assert all(v >= 0.0 for v in stats["itl_s"].values())
+    # retraction of a rid that never streamed anything must not underflow
+    ghost = stream_latency_stats([_ev("preempt", 1, 0.1)], [req])
+    assert ghost["ttft_s"]["n"] == 0 and ghost["itl_s"]["n"] == 0
