@@ -143,16 +143,18 @@ def _strip_requests(r: dict) -> dict:
 
 
 def run_cb(cfg, params, args, *, backend: str, max_len: int,
-           table_slicing: bool = True) -> dict:
+           table_slicing: bool = True, mesh=None) -> dict:
     """One continuous-batching arm at a decode backend + pool capacity,
     driven open-loop through the streaming API: the Poisson workload is
     submitted to ``StreamingEngine`` and consumed as TokenEvents, from
     which per-request TTFT and inter-token-latency percentiles are
-    computed."""
+    computed. ``mesh`` threads a device mesh through the engine
+    (head-sharded KV page pools, DESIGN.md §17)."""
     model = get_model(dataclasses.replace(cfg, decode_backend=backend))
     eng = ContinuousBatchingEngine(
         model, params, max_slots=args.slots, max_len=max_len,
-        num_pages=args.num_pages or None, table_slicing=table_slicing)
+        num_pages=args.num_pages or None, table_slicing=table_slicing,
+        mesh=mesh)
     wl = make_workload(args.requests, args.rate, args.seed,
                        args.prompt_lo, args.prompt_hi,
                        args.out_lo, args.out_hi)
@@ -640,6 +642,114 @@ def run_adversarial(cfg, params, args) -> dict:
     return out
 
 
+def run_mesh_arm(args) -> int:
+    """Internal ``--mesh-arm`` mode: ONE continuous-batching arm on a
+    (data x model) mesh, minimal JSON record to ``--json``.
+
+    Runs in its own process so the driver's
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` takes effect —
+    device forcing is a process-level switch that must precede jax init.
+    """
+    import hashlib
+    import json
+
+    try:
+        d, m = (int(x) for x in args.mesh_shape.split("x"))
+    except ValueError:
+        raise SystemExit(f"bad --mesh-shape {args.mesh_shape!r}; "
+                         "expected e.g. '1x2' (data x model)")
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((d, m), ("data", "model"))
+    cfg = reduce_for_smoke(get_config(args.arch))
+    params = get_model(cfg).init(jax.random.PRNGKey(0))
+    res = run_cb(cfg, params, args, backend=args.backend,
+                 max_len=args.max_len, mesh=mesh)
+    outs = sorted((r.rid, list(r.out_tokens))
+                  for r in res.get("requests", []))
+    rec = {
+        "devices": jax.device_count(),
+        "mesh": {"data": d, "model": m},
+        "head_sharded": cfg.num_kv_heads % m == 0,
+        "tokens_per_s": res["tokens_per_s"],
+        "total_tokens": res["total_tokens"],
+        "ttft_s": res["ttft_s"],
+        "itl_s": res["itl_s"],
+        "decode_step_s_mean": res.get("decode_step_s_mean"),
+        # greedy-output fingerprint: the sweep driver asserts it is
+        # identical across device counts (sharding must not change tokens)
+        "outputs_digest": hashlib.sha256(
+            json.dumps(outs).encode()).hexdigest()[:16],
+    }
+    with open(args.json, "w") as f:
+        json.dump(rec, f, indent=2, sort_keys=True)
+    return 0
+
+
+def run_mesh_sweep(args) -> dict:
+    """Multi-device serving sweep: tokens/s + TTFT p50/p95 vs device count
+    at fixed total pool bytes (same slots/max_len/num_pages every arm; only
+    the device count — and thus per-device pool bytes, where kv_heads
+    divides the model axis — changes).
+
+    Each count N runs :func:`run_mesh_arm` in a subprocess under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` with a (1, N)
+    (data x model) mesh. On CPU the forced "devices" are host threads, so
+    this measures sharding *orchestration* overhead and correctness, not a
+    speedup — the numbers keep the multi-device decode path tracked across
+    PRs. Greedy-output digests must agree across arms.
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+    import tempfile
+
+    arms = []
+    for n in args.mesh_sweep:
+        env = dict(os.environ)
+        flags = [f for f in env.get("XLA_FLAGS", "").split()
+                 if not f.startswith("--xla_force_host_platform")]
+        flags.append(f"--xla_force_host_platform_device_count={n}")
+        env["XLA_FLAGS"] = " ".join(flags)
+        env["PYTHONPATH"] = "src" + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        fd, out_path = tempfile.mkstemp(suffix=".json")
+        os.close(fd)
+        cmd = [sys.executable, "-m", "benchmarks.bench_serving",
+               "--mesh-arm", "--mesh-shape", f"1x{n}",
+               "--arch", args.arch,
+               "--requests", str(args.requests), "--rate", str(args.rate),
+               "--slots", str(args.slots), "--max-len", str(args.max_len),
+               "--num-pages", str(args.num_pages),
+               "--prompt-lo", str(args.prompt_lo),
+               "--prompt-hi", str(args.prompt_hi),
+               "--out-lo", str(args.out_lo), "--out-hi", str(args.out_hi),
+               "--seed", str(args.seed), "--backend", args.backend,
+               "--json", out_path]
+        proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                              timeout=1800)
+        if proc.returncode != 0:
+            print(f"mesh-sweep arm devices={n} FAILED\n"
+                  f"{proc.stdout}\n{proc.stderr}")
+            os.unlink(out_path)
+            continue
+        with open(out_path) as f:
+            arm = json.load(f)
+        os.unlink(out_path)
+        arms.append(arm)
+        print(f"mesh devices={n:2d} "
+              f"head_sharded={str(arm['head_sharded']):5s} "
+              f"tok/s={arm['tokens_per_s']:8.1f} "
+              f"ttft_p50={arm['ttft_s']['p50'] * 1e3:7.1f}ms "
+              f"p95={arm['ttft_s']['p95'] * 1e3:7.1f}ms "
+              f"dstep={arm['decode_step_s_mean'] * 1e3:.2f}ms")
+    digests = {a["outputs_digest"] for a in arms}
+    identical = len(digests) <= 1
+    if not identical:
+        print("mesh-sweep: greedy outputs DIVERGED across device counts")
+    return {"arms": arms, "outputs_identical_across_devices": identical}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
@@ -691,12 +801,33 @@ def main(argv=None):
                          "baseline")
     ap.add_argument("--adversarial-requests", type=int, default=16,
                     help="requests per adversarial arm")
+    ap.add_argument("--mesh-sweep", default="",
+                    help="comma-separated device counts for the "
+                         "multi-device serving sweep (e.g. '1,2,4'; "
+                         "empty = skip). Each count runs the cb arm in a "
+                         "subprocess under XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N with a "
+                         "1xN (data x model) mesh — fixed num_pages, so "
+                         "total pool bytes stay constant while per-device "
+                         "bytes shrink where kv_heads divides N")
+    ap.add_argument("--mesh-shape", default="",
+                    help="mesh for the cb arm, e.g. '1x2' (data x model); "
+                         "used by the --mesh-arm subprocess mode")
+    ap.add_argument("--mesh-arm", action="store_true",
+                    help="internal: run ONLY the cb arm under --mesh-shape "
+                         "and write a minimal JSON record to --json (the "
+                         "--mesh-sweep driver invokes this per device "
+                         "count so XLA device forcing precedes jax init)")
     ap.add_argument("--json", default="",
                     help="write machine-readable results to this path")
     args = ap.parse_args(argv)
     args.sweep = [int(x) for x in args.sweep.split(",") if x]
     args.prefill_sweep = [int(x) for x in args.prefill_sweep.split(",") if x]
     args.spec_sweep = [int(x) for x in args.spec_sweep.split(",") if x]
+    args.mesh_sweep = [int(x) for x in args.mesh_sweep.split(",") if x]
+
+    if args.mesh_arm:
+        return run_mesh_arm(args)
 
     cfg = reduce_for_smoke(get_config(args.arch))
     # the static arm shares the requested backend (dense path normalizes
@@ -761,6 +892,7 @@ def main(argv=None):
                   if args.spec_sweep else None)
     adversarial = (run_adversarial(cfg, params, args)
                    if args.adversarial else None)
+    mesh_sweep = run_mesh_sweep(args) if args.mesh_sweep else None
 
     if args.json:
         import json
@@ -784,6 +916,7 @@ def main(argv=None):
             "shared_prefix": shared,
             "spec_sweep": spec_sweep,
             "adversarial": adversarial,
+            "mesh_sweep": mesh_sweep,
         }
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
@@ -797,6 +930,9 @@ def main(argv=None):
     if adversarial is not None and not adversarial["soak_gate_ok"]:
         return 1   # QoS must beat FCFS on deadline-met goodput under
         # sustained overload — the suite's acceptance gate
+    if mesh_sweep is not None and \
+            not mesh_sweep["outputs_identical_across_devices"]:
+        return 1   # sharding must never change greedy outputs
     # when both engines keep up with the Poisson arrivals, tokens/s
     # converges to the offered load for everyone — the continuous-batching
     # win then shows up as per-request latency, not throughput

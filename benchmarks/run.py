@@ -32,14 +32,16 @@ def main() -> None:
             "--prefill-sweep", "2048,4096,8192",
             "--spec-sweep", "2,4,8",
             "--adversarial", "--adversarial-requests", "14",
+            "--mesh-sweep", "1,2,4",
             "--json", "BENCH_serving.json"])
         if rc:
             raise RuntimeError(
                 "serving regression: continuous batching lost to the "
                 "static baseline, prefix reuse / the fused prefill "
-                "backend / speculative decode changed greedy outputs, or "
+                "backend / speculative decode changed greedy outputs, "
                 "QoS lost to FCFS on deadline-met goodput under the "
-                "overload soak")
+                "overload soak, or the mesh sweep's sharded greedy "
+                "outputs diverged across device counts")
 
     suites = [
         ("quant_error(T1)", bench_quant_error.run),

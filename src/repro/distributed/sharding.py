@@ -132,6 +132,21 @@ def logical_rules(cfg: ModelConfig, mesh: Mesh, global_batch: int) -> dict:
     return rules
 
 
+def serving_rules(cfg: ModelConfig, mesh: Mesh, global_batch: int) -> dict:
+    """Logical rules for the *paged serving* stack (DESIGN.md §17):
+    :func:`logical_rules` minus the context-parallel ``seq`` mapping.
+
+    Serving shards heads only — page pools are partitioned over KV heads
+    (distributed/serving.py) and decode/prefill kernels run per-shard with
+    no collectives, so sequence/group axes must stay replicated; the
+    ``"seq": "model"`` training rule would fight that placement on every
+    activation annotation.
+    """
+    rules = logical_rules(cfg, mesh, global_batch)
+    rules["seq"] = None
+    return rules
+
+
 def batch_pspecs(batch_specs: dict, mesh: Mesh, global_batch: int) -> dict:
     daxes = data_axes(mesh)
     dp = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1

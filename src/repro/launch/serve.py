@@ -110,6 +110,13 @@ def main(argv=None) -> int:
                     help="cb engine: deterministic fault injection spec, "
                          "e.g. 'exhaust@8,slow@5:0.05,cancel@12:0.5,"
                          "proposer@0.3' (see repro.serve.chaos)")
+    ap.add_argument("--mesh-shape", default="",
+                    help="thread a device mesh through the engine, e.g. "
+                         "'1x2' = (data=1, model=2): KV page pools and "
+                         "attention heads shard over the model axis where "
+                         "divisible (DESIGN.md §17). Multi-device CPU runs "
+                         "need XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N set before launch")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -134,6 +141,22 @@ def main(argv=None) -> int:
                               prefill_backend=args.prefill_backend)
     model = get_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
+
+    mesh = None
+    if args.mesh_shape:
+        from repro.launch.mesh import make_mesh
+        try:
+            shape = tuple(int(x) for x in args.mesh_shape.split("x"))
+        except ValueError:
+            raise SystemExit(f"bad --mesh-shape {args.mesh_shape!r}; "
+                             "expected e.g. '1x2' (data x model)")
+        if len(shape) != 2:
+            raise SystemExit("--mesh-shape takes two axes: data x model")
+        mesh = make_mesh(shape, ("data", "model"))
+        print(f"[serve] mesh data={shape[0]} model={shape[1]} over "
+              f"{jax.device_count()} devices "
+              f"(kv_heads={cfg.num_kv_heads}: "
+              f"{'head-sharded' if cfg.num_kv_heads % shape[1] == 0 else 'replicated fallback'})")
 
     rng = np.random.default_rng(args.seed)
     batch = {"tokens": rng.integers(
@@ -180,7 +203,7 @@ def main(argv=None) -> int:
             print(f"[serve] chaos: {chaos.cfg}")
         eng = ContinuousBatchingEngine(
             model, params, max_slots=args.batch, max_len=args.max_len,
-            prefix_cache=args.prefix_cache,
+            mesh=mesh, prefix_cache=args.prefix_cache,
             prefill_chunk=args.prefill_chunk, spec=spec,
             qos=qos, chaos=chaos)
         eng.warmup([r.prompt_len for r in reqs] + [args.max_len],
@@ -255,7 +278,11 @@ def main(argv=None) -> int:
         first = out["requests"][0].out_tokens
         print(f"[serve] first sequence: {first}")
         return 0
-    eng = ServeEngine(model, params, max_len=args.max_len)
+    skw = {}
+    if mesh is not None:
+        from repro.distributed.sharding import serving_rules
+        skw = dict(mesh=mesh, rules=serving_rules(cfg, mesh, args.batch))
+    eng = ServeEngine(model, params, max_len=args.max_len, **skw)
     out = eng.generate(batch, GenerationConfig(
         max_new_tokens=args.gen, temperature=args.temperature, seed=args.seed))
     print(f"[serve] prefill {out['prefill_s'] * 1e3:.1f}ms  "

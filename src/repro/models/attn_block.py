@@ -18,6 +18,7 @@ from repro.core import kv_cache as kvc
 from repro.core import paged_cache as pgc
 from repro.core.attention import flash_attention
 from repro.distributed import ctx
+from repro.distributed import serving as dsrv
 from repro.models import layers as L
 
 Array = jax.Array
@@ -182,9 +183,12 @@ def attention_prefill_chunk(params: Params, x: Array, cfg: ModelConfig,
     cache = pgc.paged_prefill(cache, slot, page_row, k, v, chunk_len,
                               start=start)
     # codec-capability fallback happens inside paged_prefill_attention,
-    # mirroring the decode dispatch below
-    out = pgc.paged_prefill_attention(cache, q, k, v, page_row, start,
-                                      chunk_len, backend=cfg.prefill_backend)
+    # mirroring the decode dispatch below; the dsrv dispatch additionally
+    # runs the kernel per-KV-head-shard when the engine installed a mesh
+    # whose "kv_heads" rule divides the heads (DESIGN.md §17)
+    out = dsrv.dispatch_paged_prefill_attention(
+        cache, q, k, v, page_row, start, chunk_len,
+        backend=cfg.prefill_backend)
     return L.linear(L.merge_heads(out), params["wo"]), cache
 
 
@@ -212,9 +216,11 @@ def attention_decode_paged(params: Params, x: Array, cfg: ModelConfig,
     cache = pgc.paged_append(cache, k, v, page_table, active)
     # codec-capability fallback happens inside paged_decode_attention:
     # page-native where the codec supports it, gathered reference otherwise
-    # — so mixed per-layer policies pick the fast path per segment
-    out = pgc.paged_decode_attention(cache, q[:, :, 0], page_table,
-                                     backend=cfg.decode_backend)
+    # — so mixed per-layer policies pick the fast path per segment; the
+    # dsrv dispatch additionally runs it per-KV-head-shard when the engine
+    # installed a mesh whose "kv_heads" rule divides the heads
+    out = dsrv.dispatch_paged_decode_attention(cache, q[:, :, 0], page_table,
+                                               backend=cfg.decode_backend)
     y = L.linear(out.reshape(s, 1, -1), params["wo"])
     if return_kv:
         return y, cache, (k, v)

@@ -41,6 +41,8 @@ import numpy as np
 
 from repro.core.cache_layout import PagedLayout, PrefixIndex
 from repro.distributed import ctx
+from repro.distributed import serving as dsrv
+from repro.distributed.sharding import serving_rules
 from repro.models.registry import Model
 from repro.serve.qos import (
     DegradeController, QosConfig, QosState, RateEstimator,
@@ -247,7 +249,19 @@ class EngineCore:
         self.model = model
         self.params = params
         self.mesh = mesh
+        # a mesh without explicit rules gets the serving rule set: heads
+        # (and the KV page pools, via distributed/serving.py) over the
+        # "model" axis where divisible, batch over the data axes —
+        # DESIGN.md §17. Rules without a mesh stay inert (matching _ctx).
+        if mesh is not None and rules is None:
+            rules = serving_rules(model.cfg, mesh, max_slots)
         self.rules = rules
+        if mesh is not None:
+            # params are replicated: head-sharded TP partitions cache
+            # *pools*; weight TP is a separate (training-side) concern
+            self.params = jax.device_put(
+                params, jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec()))
         # table_slicing=False ships the full (S, pages_per_slot) table every
         # step — the pre-width-bucketing behavior, kept as a benchmark
         # baseline (decode cost then scales with pool capacity)
@@ -338,7 +352,8 @@ class EngineCore:
         self.sched = Scheduler(self.layout, prefix_index=self.prefix,
                                chunk_tokens=self.prefill_chunk,
                                qos=self.qos)
-        self.state = self.model.init_paged_state(self.layout)
+        self.state = self._place_state(
+            self.model.init_paged_state(self.layout))
         s = self.layout.slots
         self.clock = 0.0
         self._key = jax.random.PRNGKey(self.gen.seed)
@@ -530,6 +545,23 @@ class EngineCore:
         import contextlib
         return contextlib.nullcontext()
 
+    def _place_state(self, state):
+        """Place fresh paged state on the mesh: page pools partitioned
+        over KV heads when the rule set maps ``kv_heads`` to a mesh axis,
+        fully replicated otherwise (the GQA-indivisible fallback). Meshless
+        engines pass through untouched. reset() and warmup() both route
+        here so the donated decode signature sees one consistent
+        placement."""
+        if self.mesh is None:
+            return state
+        axis = (self.rules or {}).get("kv_heads")
+        if isinstance(axis, str):
+            return dsrv.shard_paged_state(state, self.mesh, axis)
+        repl = jax.sharding.NamedSharding(self.mesh,
+                                          jax.sharding.PartitionSpec())
+        return jax.device_put(state, jax.tree_util.tree_map(
+            lambda _: repl, state))
+
     def _bucket(self, prompt_len: int) -> int:
         return min(pow2_bucket(prompt_len, self.layout.page_size),
                    self.layout.tokens_per_slot)
@@ -539,7 +571,7 @@ class EngineCore:
         """Compile prefill buckets (or the single chunk shape) + the decode
         step against throwaway state."""
         gen = gen if gen is not None else GenerationConfig()
-        state = self.model.init_paged_state(self.layout)
+        state = self._place_state(self.model.init_paged_state(self.layout))
         sched = Scheduler(self.layout)
         key = jax.random.PRNGKey(0)
         s = self.layout.slots

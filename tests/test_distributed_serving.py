@@ -1,0 +1,400 @@
+"""Mesh-sharded paged serving parity (DESIGN.md §17).
+
+Head-sharded tensor parallelism must be *invisible*: every codec's paged
+decode/prefill/append over head-partitioned pools must match the
+single-device path bit-identically (per-KV-head attention has no
+cross-head math, so partitioning the head axis changes nothing but
+placement), GQA head counts that don't divide the mesh axis must fall
+back to the replicated path, and the end-to-end engine must produce the
+same greedy tokens whether it runs meshless, on a 1-device mesh, or
+head-sharded across forced-host devices.
+
+The context-parallel (page-column-sharded) decode reference is held to a
+documented fp tolerance instead: its psum merge rescales the per-shard
+online-softmax carries, so the reduction order differs from the
+single-device softmax (the allgather merge reconstructs the full score
+row and is compared at the same tolerance for uniformity; degenerate
+shards — padding columns, empty slots — must not poison it).
+
+Two test legs share the ``check_*`` bodies below:
+
+* in-process tests marked ``distributed`` — skipped unless the process
+  already sees >= 4 devices (CI's multi-device job sets
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=4``);
+* tier-1 subprocess tests that force 4 host devices themselves, so the
+  parity suite always runs even on a single-device box (same pattern as
+  tests/test_collectives.py).
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.core import paged_cache as pgc
+from repro.core.cache_layout import PagedLayout
+from repro.core.quantizers import QuantConfig
+from repro.distributed import ctx
+from repro.distributed import serving as dsrv
+from repro.launch.mesh import make_mesh
+from repro.models import get_model
+from repro.serve import ContinuousBatchingEngine, Request
+
+ROOT = Path(__file__).resolve().parent.parent
+
+multi_device = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs >= 4 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+
+# the registry sweep: every codec, page == group of 8; one extra polar
+# arm exercises quantized values through the sharded paths too
+CODEC_CONFIGS = [
+    QuantConfig(method="none", group_size=8),
+    QuantConfig(method="int", group_size=8),
+    QuantConfig(method="kivi", group_size=8),
+    QuantConfig(method="zipcache", group_size=8),
+    QuantConfig(method="polar", group_size=8),
+    QuantConfig(method="polar", group_size=8, value_bits=4),
+]
+
+
+def _tag(cfg: QuantConfig) -> str:
+    return f"{cfg.method}+v{cfg.value_bits}"
+
+
+def build_fragmented_cache(cfg, *, hkv=4, d=16, lens=(37, 0, 21), seed=0):
+    """A paged cache populated through real appends over a *permuted*
+    (non-monotonic, fragmented) page table: slot 0 ends mid-group (open
+    residual), slot 1 is empty, slot 2 is short. Returns (cache, table)."""
+    lay = PagedLayout(page_size=8, num_pages=24, slots=len(lens),
+                      pages_per_slot=6)
+    rng = np.random.default_rng(seed)
+    cache = pgc.init_paged_cache(cfg, lay, hkv, d, dtype=jnp.float32)
+    table = np.full((lay.slots, lay.pages_per_slot), -1, np.int32)
+    perm, off = rng.permutation(lay.num_pages), 0
+    for s, ln in enumerate(lens):
+        k = -(-ln // lay.page_size)
+        table[s, :k] = perm[off:off + k]
+        off += k
+    table = jnp.asarray(table)
+    for t in range(max(lens)):
+        active = jnp.asarray([t < ln for ln in lens])
+        k_new = jnp.asarray(rng.standard_normal(
+            (lay.slots, hkv, 1, d)), jnp.float32)
+        v_new = jnp.asarray(rng.standard_normal(
+            (lay.slots, hkv, 1, d)), jnp.float32)
+        cache = pgc.paged_append(cache, k_new, v_new, table, active)
+    return cache, table
+
+
+def _decode_q(hq=8, d=16, slots=3, seed=1):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((slots, hq, d)), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# check_* bodies (shared by the marked in-process tests and the tier-1
+# subprocess leg — each asserts its own device requirement)
+# ---------------------------------------------------------------------------
+
+
+def check_kernel_parity():
+    """Registry-wide head-sharded decode == single-device, bitwise, on
+    fragmented tables, across head-divisible mesh shapes."""
+    assert jax.device_count() >= 4
+    for cfg in CODEC_CONFIGS:
+        cache, table = build_fragmented_cache(cfg)
+        q = _decode_q()
+        ref = np.asarray(pgc.paged_decode_attention(cache, q, table,
+                                                    backend="jnp"))
+        for shape in ((1, 2), (2, 2), (1, 4)):
+            mesh = make_mesh(shape, ("data", "model"))
+            out = np.asarray(dsrv.sharded_paged_decode_attention(
+                cache, q, table, mesh=mesh))
+            assert np.array_equal(ref, out), \
+                f"{_tag(cfg)} decode diverged on mesh {shape}"
+
+
+def check_prefill_parity():
+    """Head-sharded chunk-prefill attention == single-device, bitwise
+    (flushed prefix through the codec score path + fp causal chunk)."""
+    assert jax.device_count() >= 2
+    mesh = make_mesh((1, 2), ("data", "model"))
+    rng = np.random.default_rng(7)
+    tc, d, hq, hkv = 16, 16, 8, 4
+    for cfg in CODEC_CONFIGS:
+        cache, table = build_fragmented_cache(cfg)
+        row = table[0]                       # slot 0: 32 flushed + open grp
+        q = jnp.asarray(rng.standard_normal((1, hq, tc, d)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((1, hkv, tc, d)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((1, hkv, tc, d)), jnp.float32)
+        start, clen = 32, 13                 # page-aligned, partial chunk
+        ref = np.asarray(pgc.paged_prefill_attention(
+            cache, q, k, v, row, start, clen, backend="jnp"))
+        out = np.asarray(dsrv.sharded_paged_prefill_attention(
+            cache, q, k, v, row, start, clen, mesh=mesh))
+        assert np.array_equal(ref, out), f"{_tag(cfg)} prefill diverged"
+
+
+def check_sharded_append_parity():
+    """paged_append on a head-partitioned state (GSPMD auto-partitioned
+    scatters) leaves every pool leaf bit-identical to the replicated run,
+    and keeps the head shardings in place."""
+    assert jax.device_count() >= 2
+    mesh = make_mesh((1, 2), ("data", "model"))
+    rng = np.random.default_rng(11)
+    for cfg in (CODEC_CONFIGS[4], CODEC_CONFIGS[5]):   # polar fp/quant vals
+        cache, table = build_fragmented_cache(cfg)
+        sharded = dsrv.shard_paged_state(cache, mesh)
+        for t in range(9):                 # crosses a group-flush boundary
+            active = jnp.asarray([True, t % 2 == 0, True])
+            k_new = jnp.asarray(rng.standard_normal((3, 4, 1, 16)),
+                                jnp.float32)
+            v_new = jnp.asarray(rng.standard_normal((3, 4, 1, 16)),
+                                jnp.float32)
+            cache = pgc.paged_append(cache, k_new, v_new, table, active)
+            sharded = pgc.paged_append(sharded, k_new, v_new, table, active)
+        jax.tree_util.tree_map(
+            lambda a, b: np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b)), cache, sharded)
+        # the head partitioning survived the appends
+        kc = sharded.key_codes
+        assert "model" in tuple(kc.sharding.spec), \
+            f"{_tag(cfg)} lost its head sharding"
+
+
+def check_gqa_fallback():
+    """KV heads not divisible by the mesh axis: placement replicates,
+    dispatch takes the plain path, and the math is untouched."""
+    assert jax.device_count() >= 4
+    mesh = make_mesh((1, 4), ("data", "model"))
+    cfg = QuantConfig(method="polar", group_size=8)
+    cache, table = build_fragmented_cache(cfg, hkv=2)
+    q = _decode_q(hq=4)
+    assert dsrv._active_head_axis(cache, 4) == (None, None)  # no ctx
+    shardings = dsrv.paged_state_shardings(cache, mesh)
+    for s in jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: isinstance(
+                x, jax.sharding.NamedSharding)):
+        assert s.spec == jax.sharding.PartitionSpec()
+    ref = np.asarray(pgc.paged_decode_attention(cache, q, table,
+                                                backend="jnp"))
+    out = np.asarray(dsrv.sharded_paged_decode_attention(
+        cache, q, table, mesh=mesh))
+    assert np.array_equal(ref, out)
+
+
+def check_context_parallel():
+    """Page-column-sharded decode vs the single-device path: psum merge
+    within fp tolerance, allgather merge likewise, both finite everywhere
+    — including the empty slot and the shards whose columns are all
+    padding (the degenerate-carry guard around the finite NEG_INF)."""
+    assert jax.device_count() >= 4
+    mesh = make_mesh((1, 4), ("data", "model"))
+    for cfg in (CODEC_CONFIGS[0], CODEC_CONFIGS[4], CODEC_CONFIGS[5]):
+        cache, table = build_fragmented_cache(cfg)
+        q = _decode_q()
+        ref = np.asarray(pgc.paged_decode_attention(cache, q, table,
+                                                    backend="jnp"))
+        for merge in ("psum", "allgather"):
+            out = np.asarray(dsrv.context_parallel_decode(
+                cache, q, table, mesh=mesh, merge=merge))
+            assert np.all(np.isfinite(out)), f"{_tag(cfg)}/{merge} not finite"
+            np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5,
+                                       err_msg=f"{_tag(cfg)}/{merge}")
+        # the empty slot's merged softmax has zero mass -> exact zeros
+        assert np.array_equal(
+            np.asarray(dsrv.context_parallel_decode(
+                cache, q, table, mesh=mesh))[1], np.zeros_like(ref[1]))
+
+
+def _engine_requests(cfg, n=5, seed=3, shared_prefix=0):
+    rng = np.random.default_rng(seed)
+    pre = rng.integers(0, cfg.vocab_size, (shared_prefix,)).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        sfx = rng.integers(0, cfg.vocab_size,
+                           (int(rng.integers(8, 40)),)).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=np.concatenate([pre, sfx]),
+                            max_new_tokens=int(rng.integers(4, 11)),
+                            arrival_time=0.0))
+    return reqs
+
+
+def _engine_outputs(model, params, requests, mesh=None, **kw):
+    eng = ContinuousBatchingEngine(model, params, max_slots=3, max_len=128,
+                                   mesh=mesh, **kw)
+    res = eng.run([Request(rid=r.rid, prompt=r.prompt,
+                           max_new_tokens=r.max_new_tokens,
+                           arrival_time=0.0) for r in requests])
+    return {r.rid: [int(t) for t in r.out_tokens] for r in res["requests"]}
+
+
+def check_engine_ab():
+    """End-to-end greedy A/B: meshless vs head-sharded (1x2) vs GQA
+    fallback (1x4), one-shot and chunked+prefix-cache paths — identical
+    tokens everywhere."""
+    assert jax.device_count() >= 4
+    cfg = reduce_for_smoke(get_config("tinyllama-1.1b"))
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = _engine_requests(cfg)
+    base = _engine_outputs(model, params, reqs)
+    assert base and all(base.values())
+    for shape in ((1, 2), (1, 4)):
+        mesh = make_mesh(shape, ("data", "model"))
+        assert _engine_outputs(model, params, reqs, mesh=mesh) == base, \
+            f"engine outputs diverged on mesh {shape}"
+    # chunked prefill + shared-prefix adoption under the sharded pools
+    reqs_sp = _engine_requests(cfg, shared_prefix=64, seed=5)
+    base_sp = _engine_outputs(model, params, reqs_sp,
+                              prefill_chunk=64, prefix_cache=True)
+    mesh = make_mesh((1, 2), ("data", "model"))
+    assert _engine_outputs(model, params, reqs_sp, mesh=mesh,
+                           prefill_chunk=64, prefix_cache=True) == base_sp
+
+
+# ---------------------------------------------------------------------------
+# Leg 1: in-process, marked `distributed` (CI multi-device job)
+# ---------------------------------------------------------------------------
+
+
+@multi_device
+@pytest.mark.distributed
+def test_kernel_parity_all_codecs():
+    check_kernel_parity()
+
+
+@multi_device
+@pytest.mark.distributed
+def test_prefill_parity_head_sharded():
+    check_prefill_parity()
+
+
+@multi_device
+@pytest.mark.distributed
+def test_append_parity_on_sharded_pools():
+    check_sharded_append_parity()
+
+
+@multi_device
+@pytest.mark.distributed
+def test_gqa_nondivisible_falls_back_replicated():
+    check_gqa_fallback()
+
+
+@multi_device
+@pytest.mark.distributed
+def test_context_parallel_merges_match_reference():
+    check_context_parallel()
+
+
+@multi_device
+@pytest.mark.distributed
+@pytest.mark.slow
+def test_engine_mesh_ab_multidevice():
+    check_engine_ab()
+
+
+# ---------------------------------------------------------------------------
+# Leg 2: tier-1 subprocess tests (force 4 host devices themselves)
+# ---------------------------------------------------------------------------
+
+
+def _run_forced(body: str, timeout=600):
+    script = ("import os\n"
+              'os.environ["XLA_FLAGS"] = '
+              '"--xla_force_host_platform_device_count=4"\n'
+              "import test_distributed_serving as t\n"
+              f"{body}\n"
+              'print("PARITY-OK")\n')
+    env = {**os.environ,
+           "PYTHONPATH": os.pathsep.join(
+               [str(ROOT / "src"), str(ROOT / "tests")])}
+    env.pop("XLA_FLAGS", None)   # the forced count is set inside the script
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, env=env, timeout=timeout, cwd=ROOT)
+    assert r.returncode == 0 and "PARITY-OK" in r.stdout, \
+        f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+
+
+@pytest.mark.slow
+def test_subprocess_kernel_parity_4dev():
+    _run_forced("t.check_kernel_parity()\n"
+                "t.check_prefill_parity()\n"
+                "t.check_sharded_append_parity()")
+
+
+@pytest.mark.slow
+def test_subprocess_fallback_and_context_parallel_4dev():
+    _run_forced("t.check_gqa_fallback()\n"
+                "t.check_context_parallel()")
+
+
+@pytest.mark.slow
+def test_subprocess_engine_mesh_ab_4dev():
+    _run_forced("t.check_engine_ab()")
+
+
+# ---------------------------------------------------------------------------
+# Tier-1 single-device regressions (no forced devices needed)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = reduce_for_smoke(get_config("tinyllama-1.1b"))
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def test_engine_one_device_mesh_replays_meshless(smoke_model):
+    """A mesh-constructed engine on a 1-device mesh takes the full
+    shard_map dispatch path (serving_rules maps kv_heads -> "model") and
+    must replay the meshless engine bit-identically — the regression that
+    keeps EngineCore's mesh=/rules= params load-bearing."""
+    cfg, model, params = smoke_model
+    reqs = _engine_requests(cfg)
+    base = _engine_outputs(model, params, reqs)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    assert _engine_outputs(model, params, reqs, mesh=mesh) == base
+
+
+def test_dispatch_honors_sharding_context(smoke_model):
+    """The context-aware dispatchers: plain path with no context, the
+    sharded path (bitwise-equal here) once a mesh + kv_heads rule is
+    installed, and the plain path again when the rule is absent."""
+    cfg = QuantConfig(method="polar", group_size=8)
+    cache, table = build_fragmented_cache(cfg)
+    q = _decode_q()
+    ref = np.asarray(pgc.paged_decode_attention(cache, q, table,
+                                                backend="jnp"))
+    out = np.asarray(dsrv.dispatch_paged_decode_attention(cache, q, table))
+    assert np.array_equal(ref, out)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    with ctx.use_sharding(mesh, {"kv_heads": "model"}):
+        assert dsrv._active_head_axis(cache, q.shape[1]) == (mesh, "model")
+        out = np.asarray(dsrv.dispatch_paged_decode_attention(
+            cache, q, table))
+    assert np.array_equal(ref, out)
+    with ctx.use_sharding(mesh, {"kv_heads": None}):
+        assert dsrv._active_head_axis(cache, q.shape[1]) == (None, None)
+
+
+def test_serving_rules_keep_seq_unsharded(smoke_model):
+    """serving_rules: heads over "model" where divisible, and never the
+    training-side "seq": "model" rule (it would fight pool placement)."""
+    from repro.distributed.sharding import serving_rules
+    cfg, _, _ = smoke_model
+    mesh = make_mesh((1, 1), ("data", "model"))
+    rules = serving_rules(cfg, mesh, 3)
+    assert rules["kv_heads"] == "model"
+    assert rules["seq"] is None

@@ -181,6 +181,85 @@ def test_hypothesis_refcount_invariants(ops):
 
 
 # ---------------------------------------------------------------------------
+# Shard-agnosticism (DESIGN.md §17): head-sharding partitions pool
+# *payload* only — the allocator stays host-side and its decisions are a
+# pure function of the op sequence, never of the mesh.
+# ---------------------------------------------------------------------------
+
+
+def test_allocator_state_is_host_only():
+    """Nothing the mesh could partition: after real alloc/adopt/COW
+    traffic the allocator's whole object graph holds no jax arrays."""
+    from collections import deque
+
+    alloc = PageAllocator(small_layout())
+    assert alloc.alloc(0, 3)
+    assert alloc.adopt(1, alloc.slot_page_ids(0)[:2])
+    alloc.cow(1, 0)
+    seen: set[int] = set()
+
+    def scan(o, depth=0):
+        if id(o) in seen or depth > 4:
+            return
+        seen.add(id(o))
+        assert not isinstance(o, jax.Array), \
+            f"device array inside PageAllocator state: {type(o)}"
+        if isinstance(o, dict):
+            vals = list(o.keys()) + list(o.values())
+        elif isinstance(o, (list, tuple, set, frozenset, deque)):
+            vals = list(o)
+        elif hasattr(o, "__dict__"):
+            vals = list(vars(o).values())
+        else:
+            return
+        for v in vals:
+            scan(v, depth + 1)
+
+    scan(alloc)
+    assert isinstance(alloc.table_np(), np.ndarray)
+
+
+def _replay_alloc_ops(ops, lay):
+    alloc = PageAllocator(lay)
+    for op, slot, k in ops:
+        if op == 0:
+            alloc.alloc(slot, k)
+        elif op == 1:
+            owned = alloc.slot_page_ids((slot + 1) % lay.slots)
+            alloc.adopt(slot, owned[:k])
+        elif op == 2:
+            alloc.free_slot(slot)
+        elif op == 3:
+            owned = alloc.slot_page_ids(slot)
+            if owned and alloc.can_alloc(1):
+                alloc.cow(slot, min(k, len(owned)) - 1)
+    check_alloc_invariants(alloc)
+    return (alloc.table_np().copy(), sorted(alloc._free),
+            alloc._ref.copy())
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 3),
+                          st.integers(1, 4)), max_size=50))
+def test_hypothesis_allocator_is_shard_agnostic(ops):
+    """The same op sequence replayed with and without an installed
+    sharding context (mesh + ``kv_heads`` rule — what EngineCore installs
+    around every dispatch) lands on identical tables, free lists, and
+    refcounts: the allocator is shard-agnostic by construction."""
+    from repro.distributed import ctx
+    from repro.launch.mesh import make_mesh
+
+    lay = small_layout(num_pages=10, slots=4, pages_per_slot=4)
+    plain = _replay_alloc_ops(ops, lay)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    with ctx.use_sharding(mesh, {"kv_heads": "model"}):
+        under_mesh = _replay_alloc_ops(ops, lay)
+    assert np.array_equal(plain[0], under_mesh[0])
+    assert plain[1] == under_mesh[1]
+    assert np.array_equal(plain[2], under_mesh[2])
+
+
+# ---------------------------------------------------------------------------
 # PrefixIndex
 # ---------------------------------------------------------------------------
 
