@@ -386,6 +386,100 @@ def run_spec_sweep(cfg, params, args) -> dict:
     return out
 
 
+def _runahead_workload(n: int, seed: int, prompt_len: int,
+                       max_new: int) -> list[Request]:
+    """Decode-bound workload for the run-ahead sweep: ``n`` equal-length
+    short prompts all arriving ~t=0 (one per millisecond), so the queue
+    drains immediately and the horizon planner sees the pure decode-bound
+    stretch run-ahead targets."""
+    rng = np.random.default_rng(seed)
+    return [Request(
+        rid=i,
+        prompt=rng.integers(0, 512, (prompt_len,)).astype(np.int32),
+        max_new_tokens=max_new, arrival_time=i * 1e-3)
+        for i in range(n)]
+
+
+def run_runahead_sweep(cfg, params, args) -> dict:
+    """Run-ahead fused decode A/B (DESIGN.md §18): horizon H x slot-count
+    grid against the H=1 per-token dispatch baseline, same decode-bound
+    workload per slot arm.
+
+    Low-slot decode is the regime the per-token host sync dominates: every
+    step pays scheduling + event emission + a device round-trip for a
+    handful of tokens. Run-ahead amortizes that host work over H fused
+    micro-steps and overlaps it with device compute (async dispatch
+    pipeline), so the win should be largest at 1-4 slots and taper as
+    device compute grows with the batch. Greedy outputs must stay
+    **bit-identical** to H=1 at every grid point — a digest mismatch fails
+    the whole benchmark (nonzero rc); speedups are only reported for
+    correct runs. The recorded dispatch-gap EWMA (host time between a
+    block landing and the next horizon's dispatch) and sync-wait time are
+    the per-step host-vs-device breakdown."""
+    import hashlib
+    import json
+
+    model = get_model(dataclasses.replace(cfg, decode_backend=args.backend))
+    g = cfg.quant.group_size
+    max_new = args.runahead_gen
+    plen = 2 * g
+    max_len = -(-(plen + max_new) // g) * g + g
+    out: dict = {"h_sweep": args.runahead_sweep,
+                 "slots_sweep": args.runahead_slots,
+                 "prompt_len": plen, "max_new": max_new,
+                 "max_len": max_len, "arms": []}
+    rc_ok = True
+    for slots in args.runahead_slots:
+        wl = lambda: _runahead_workload(slots, args.seed + 29, plen,
+                                        max_new)
+        base_tps, base_digest = None, None
+        for h in args.runahead_sweep:
+            eng = ContinuousBatchingEngine(
+                model, params, max_slots=slots, max_len=max_len,
+                runahead=0 if h <= 1 else h)
+            reqs = wl()
+            eng.warmup([plen])
+            r = eng.run(reqs, GenerationConfig())
+            outs = sorted((q.rid, list(q.out_tokens))
+                          for q in r["requests"])
+            digest = hashlib.sha256(
+                json.dumps(outs).encode()).hexdigest()[:16]
+            if base_tps is None:   # the first grid point is the baseline
+                base_tps, base_digest = r["tokens_per_s"], digest
+            same = digest == base_digest
+            rc_ok &= same
+            arm = {
+                "h": h, "slots": slots,
+                "tokens_per_s": r["tokens_per_s"],
+                "total_tokens": r["total_tokens"],
+                "decode_steps": r["decode_steps"],
+                "speedup_vs_h1": r["tokens_per_s"] / max(base_tps, 1e-9),
+                "outputs_digest": digest,
+                "outputs_bit_identical": same,
+            }
+            if "runahead" in r:
+                arm["horizons"] = r["runahead"]["horizons"]
+                arm["horizon_tokens"] = r["runahead"]["tokens"]
+                arm["dispatch_gap_ewma_s"] = \
+                    r["runahead"]["dispatch_gap_ewma_s"]
+                arm["sync_wait_s"] = r["runahead"]["sync_wait_s"]
+            out["arms"].append(arm)
+            extra = ""
+            if "runahead" in r:
+                extra = (f" horizons={arm['horizons']:4d} "
+                         f"gap-ewma={arm['dispatch_gap_ewma_s'] * 1e3:6.2f}ms"
+                         f" sync-wait={arm['sync_wait_s'] * 1e3:7.1f}ms")
+            print(f"runahead slots={slots:2d} h={h}: "
+                  f"tok/s={r['tokens_per_s']:8.1f} "
+                  f"({arm['speedup_vs_h1']:.2f}x) "
+                  f"bit-identical={same}{extra}")
+    out["best_speedup_low_slots"] = max(
+        (a["speedup_vs_h1"] for a in out["arms"] if a["slots"] <= 4),
+        default=0.0)
+    out["outputs_bit_identical"] = rc_ok
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Adversarial arms (DESIGN.md §16): hostile workloads, goodput-under-SLA
 # ---------------------------------------------------------------------------
@@ -793,6 +887,18 @@ def main(argv=None):
     ap.add_argument("--spec-gen", type=int, default=192,
                     help="output tokens per request in the spec-sweep "
                          "arms")
+    ap.add_argument("--runahead-sweep", default="",
+                    help="comma-separated horizon sweep for the run-ahead "
+                         "fused-decode A/B arms (e.g. '1,2,4,8'; the "
+                         "first entry is the baseline, empty = skip); "
+                         "each horizon runs at every --runahead-slots "
+                         "count on a decode-bound workload")
+    ap.add_argument("--runahead-slots", default="1,4,16",
+                    help="comma-separated slot counts for the run-ahead "
+                         "sweep grid")
+    ap.add_argument("--runahead-gen", type=int, default=64,
+                    help="output tokens per request in the run-ahead "
+                         "sweep arms")
     ap.add_argument("--adversarial", action="store_true",
                     help="run the hostile-workload scenario suite "
                          "(overload soak, burst storms, cancel floods, "
@@ -825,6 +931,10 @@ def main(argv=None):
     args.prefill_sweep = [int(x) for x in args.prefill_sweep.split(",") if x]
     args.spec_sweep = [int(x) for x in args.spec_sweep.split(",") if x]
     args.mesh_sweep = [int(x) for x in args.mesh_sweep.split(",") if x]
+    args.runahead_sweep = [int(x) for x in args.runahead_sweep.split(",")
+                           if x]
+    args.runahead_slots = [int(x) for x in args.runahead_slots.split(",")
+                           if x]
 
     if args.mesh_arm:
         return run_mesh_arm(args)
@@ -890,6 +1000,8 @@ def main(argv=None):
               if args.shared_prefix else None)
     spec_sweep = (run_spec_sweep(cfg, params, args)
                   if args.spec_sweep else None)
+    runahead_sweep = (run_runahead_sweep(cfg, params, args)
+                      if args.runahead_sweep else None)
     adversarial = (run_adversarial(cfg, params, args)
                    if args.adversarial else None)
     mesh_sweep = run_mesh_sweep(args) if args.mesh_sweep else None
@@ -915,6 +1027,7 @@ def main(argv=None):
             "prefill_sweep": prefill_sweep,
             "shared_prefix": shared,
             "spec_sweep": spec_sweep,
+            "runahead_sweep": runahead_sweep,
             "adversarial": adversarial,
             "mesh_sweep": mesh_sweep,
         }
@@ -927,6 +1040,9 @@ def main(argv=None):
         return 1   # the fused prefill must never change greedy outputs
     if spec_sweep is not None and not spec_sweep["outputs_bit_identical"]:
         return 1   # speculation must never change greedy outputs
+    if runahead_sweep is not None and \
+            not runahead_sweep["outputs_bit_identical"]:
+        return 1   # run-ahead must never change greedy outputs
     if adversarial is not None and not adversarial["soak_gate_ok"]:
         return 1   # QoS must beat FCFS on deadline-met goodput under
         # sustained overload — the suite's acceptance gate

@@ -13,6 +13,12 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="substring filter")
+    ap.add_argument("--trace-dir", default="",
+                    help="write a jax.profiler trace of the selected "
+                         "suites to this directory (host-vs-device "
+                         "timeline: dispatch gaps, blocking fetches, "
+                         "kernel spans; view with TensorBoard or "
+                         "ui.perfetto.dev)")
     args = ap.parse_args()
 
     from benchmarks import (bench_bitwidth, bench_eviction_compat,
@@ -31,6 +37,7 @@ def main() -> None:
             "--sweep", "192,512,2048", "--shared-prefix", "96",
             "--prefill-sweep", "2048,4096,8192",
             "--spec-sweep", "2,4,8",
+            "--runahead-sweep", "1,2,4,8",
             "--adversarial", "--adversarial-requests", "14",
             "--mesh-sweep", "1,2,4",
             "--json", "BENCH_serving.json"])
@@ -38,10 +45,11 @@ def main() -> None:
             raise RuntimeError(
                 "serving regression: continuous batching lost to the "
                 "static baseline, prefix reuse / the fused prefill "
-                "backend / speculative decode changed greedy outputs, "
-                "QoS lost to FCFS on deadline-met goodput under the "
-                "overload soak, or the mesh sweep's sharded greedy "
-                "outputs diverged across device counts")
+                "backend / speculative decode / run-ahead fused decode "
+                "changed greedy outputs, QoS lost to FCFS on "
+                "deadline-met goodput under the overload soak, or the "
+                "mesh sweep's sharded greedy outputs diverged across "
+                "device counts")
 
     suites = [
         ("quant_error(T1)", bench_quant_error.run),
@@ -56,18 +64,27 @@ def main() -> None:
         ("serving(CB/paged-fused)", serving_json),
         ("roofline(dryrun)", roofline.run),
     ]
+    if args.trace_dir:
+        import jax
+        jax.profiler.start_trace(args.trace_dir)
     failures = 0
-    for name, fn in suites:
-        if args.only and args.only not in name:
-            continue
-        print(f"== {name} ==")
-        t0 = time.monotonic()
-        try:
-            fn()
-        except Exception:  # noqa: BLE001
-            failures += 1
-            traceback.print_exc()
-        print(f"== {name} done in {time.monotonic() - t0:.1f}s ==")
+    try:
+        for name, fn in suites:
+            if args.only and args.only not in name:
+                continue
+            print(f"== {name} ==")
+            t0 = time.monotonic()
+            try:
+                fn()
+            except Exception:  # noqa: BLE001
+                failures += 1
+                traceback.print_exc()
+            print(f"== {name} done in {time.monotonic() - t0:.1f}s ==")
+    finally:
+        if args.trace_dir:
+            import jax
+            jax.profiler.stop_trace()
+            print(f"wrote jax.profiler trace to {args.trace_dir}")
     if failures:
         raise SystemExit(f"{failures} benchmark suites failed")
 

@@ -1,0 +1,50 @@
+#!/usr/bin/env bash
+# Guard the host-sync budget of the serving stack (DESIGN.md §18): the
+# run-ahead decode work only stays won if new per-token blocking fetches
+# don't creep back in. Every host<->device synchronization point in
+# src/repro/serve must be *declared*:
+#
+#   1. Any line that blocks on the device — block_until_ready,
+#      jax.device_get, or .item() — must carry a trailing
+#      `# sync: <reason>` marker on the same line. np.asarray(<device
+#      array>) also syncs, but only the explicit blockers are
+#      grep-enforceable; the reviewed np.asarray fetch sites carry the
+#      same marker by convention.
+#   2. Sync sites (marked or not) are allowed only in serve/core.py —
+#      the device-dispatch layer. The front doors (api.py, engine.py),
+#      scheduler, QoS, and chaos modules must never block on the device
+#      (they are jax-free per check_engine_layering.sh; this rule keeps
+#      it that way even for objects passed in).
+#
+# Adding a sync: put it in core.py, give it a `# sync:` reason, and
+# account for it in DESIGN.md §18's sync-site inventory.
+set -u
+cd "$(dirname "$0")/.."
+
+fail=0
+
+unmarked=$(grep -rnE '(block_until_ready|jax\.device_get|\.item\(\))' \
+    src/repro/serve --include='*.py' \
+    | grep -v '# sync:' || true)
+if [ -n "$unmarked" ]; then
+    echo "ERROR: undeclared host sync in src/repro/serve — every" >&2
+    echo "blocking fetch must carry a trailing '# sync: <reason>'" >&2
+    echo "marker (DESIGN.md §18):" >&2
+    echo "$unmarked" >&2
+    fail=1
+fi
+
+outside=$(grep -rnE '(block_until_ready|jax\.device_get|\.item\(\)|# sync:)' \
+    src/repro/serve --include='*.py' \
+    | grep -v 'src/repro/serve/core.py' || true)
+if [ -n "$outside" ]; then
+    echo "ERROR: host sync outside serve/core.py — the device-dispatch" >&2
+    echo "layer is the only place the serving stack may block on the" >&2
+    echo "device:" >&2
+    echo "$outside" >&2
+    fail=1
+fi
+
+[ "$fail" -eq 0 ] || exit 1
+n=$(grep -cE '# sync:' src/repro/serve/core.py || true)
+echo "host-sync check OK ($n declared sync sites, all in serve/core.py)"

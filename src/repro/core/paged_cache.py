@@ -444,6 +444,15 @@ def paged_append(cache: PagedKVCache, k_new: Array, v_new: Array,
     (one shared position), every slot sits at its own position, so the
     group encode runs every step and the flush is realized as a masked
     scatter target.
+
+    Scan-carry invariant (run-ahead decode, DESIGN.md §18): this
+    function is pure in the ``cache`` carry — the residual fp buffer,
+    the masked flush target, and ``lengths`` are ordinary arrays with no
+    host-side state — so it may be iterated inside ``jax.lax.scan``
+    (``models.transformer.decode_runahead_fn``) and quant-group
+    boundary commits mid-scan behave exactly as they do across separate
+    dispatches. Nothing here may grow host-side caches or data-dependent
+    Python control flow without breaking that path.
     """
     cfg = cache.cfg
     codec = cache.codec

@@ -24,6 +24,17 @@ QoS + chaos (DESIGN.md §16) quickstart::
 admission (weighted-fair queueing, deadline shedding, bounded-queue
 rejects); ``--chaos`` injects a deterministic fault schedule through the
 production scheduler/allocator paths.
+
+Run-ahead fused decode (DESIGN.md §18) quickstart::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --smoke --engine cb --batch 2 --gen 64 --runahead 8
+
+``--runahead H`` batches H decode micro-steps — paged append, LUT decode
+attention, on-device sampling, EOS/budget masking — into one fused
+device dispatch whenever the horizon planner sees a pure decode-bound
+stretch, and pipelines the next horizon while a block is in flight.
+Greedy outputs are bit-identical to ``--runahead 0``.
 """
 from __future__ import annotations
 
@@ -106,6 +117,12 @@ def main(argv=None) -> int:
                     help="cb engine: bounded admission queue — intake over "
                          "this depth rejects with an explicit event "
                          "(0 = unbounded)")
+    ap.add_argument("--runahead", type=int, default=0,
+                    help="cb engine: run-ahead fused decode horizon H — "
+                         "batch H decode micro-steps with on-device "
+                         "sampling into one dispatch in decode-bound "
+                         "stretches (0/1 = off; greedy outputs stay "
+                         "bit-identical)")
     ap.add_argument("--chaos", default="",
                     help="cb engine: deterministic fault injection spec, "
                          "e.g. 'exhaust@8,slow@5:0.05,cancel@12:0.5,"
@@ -205,7 +222,7 @@ def main(argv=None) -> int:
             model, params, max_slots=args.batch, max_len=args.max_len,
             mesh=mesh, prefix_cache=args.prefix_cache,
             prefill_chunk=args.prefill_chunk, spec=spec,
-            qos=qos, chaos=chaos)
+            qos=qos, chaos=chaos, runahead=args.runahead)
         eng.warmup([r.prompt_len for r in reqs] + [args.max_len],
                    GenerationConfig(max_new_tokens=args.gen))
         gen = GenerationConfig(max_new_tokens=args.gen,
@@ -268,6 +285,13 @@ def main(argv=None) -> int:
             print(f"[serve] spec mode={sp['mode']} k={sp['k']}  "
                   f"acceptance {sp['acceptance_rate'] * 100:.1f}%  "
                   f"mean accepted/step {sp['mean_accepted_per_step']:.2f}")
+        if "runahead" in out:
+            ra = out["runahead"]
+            print(f"[serve] runahead h={ra['h']}  "
+                  f"{ra['horizons']} horizons  "
+                  f"{ra['tokens']} horizon tokens  "
+                  f"dispatch-gap ewma "
+                  f"{ra['dispatch_gap_ewma_s'] * 1e3:.2f}ms")
         if args.prefix_cache:
             print(f"[serve] prefix hit rate "
                   f"{out['prefix_hit_rate'] * 100:.1f}%  "

@@ -202,6 +202,12 @@ def attention_decode_paged(params: Params, x: Array, cfg: ModelConfig,
     Returns (y (S, 1, D), cache) — or (y, cache, (k, v)) with
     ``return_kv``, exposing the post-RoPE kv so the speculative verifier
     can re-commit accepted span tokens without a second forward.
+
+    This block is the micro-step body of run-ahead decode
+    (``transformer.decode_runahead_fn``, DESIGN.md §18): positions come
+    from the cache carry and the append/attention pair is pure, so
+    ``lax.scan`` iterating it H times is bit-identical to H separate
+    dispatches — keep it free of host-side state.
     """
     s = x.shape[0]
     q = L.split_heads(L.linear(x, params["wq"], params.get("bq")),

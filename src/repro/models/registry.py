@@ -47,6 +47,12 @@ class Model:
     #                     chunk attention dispatches per cfg.prefill_backend
     #                     (page-native fused kernel vs gathering jnp ref)
     # decode_paged(params, state, token (S,), page_table, active)
+    # decode_runahead(params, state, token (S,), page_table, active, key,
+    #                 remaining, done, *, horizon, temperature, top_k,
+    #                 eos_id) — H fused decode micro-steps with on-device
+    #                 sampling + EOS/budget masking in one lax.scan
+    #                 dispatch (DESIGN.md §18); returns the (H, S) token
+    #                 block plus the carries that seed the next horizon
     # copy_pages(state, src, dst) — COW page copy across segment pools
     # decode_paged_collect / commit_paged — the speculative verify split
     # (sequential reference): collect is decode_paged that also returns
@@ -58,6 +64,7 @@ class Model:
     prefill_paged: Callable[..., Any] | None = None
     prefill_paged_chunk: Callable[..., Any] | None = None
     decode_paged: Callable[..., Any] | None = None
+    decode_runahead: Callable[..., Any] | None = None
     copy_pages: Callable[..., Any] | None = None
     decode_paged_collect: Callable[..., Any] | None = None
     commit_paged: Callable[..., Any] | None = None
@@ -123,6 +130,12 @@ def get_model(cfg: ModelConfig) -> Model:
                                               start, cl),
                 decode_paged=lambda p, s, t, table, active:
                     TF.decode_paged_fn(p, s, t, table, active, cfg),
+                decode_runahead=lambda p, s, t, table, active, key, rem,
+                    done, horizon, temperature, top_k, eos_id:
+                    TF.decode_runahead_fn(p, s, t, table, active, key,
+                                          rem, done, cfg, horizon=horizon,
+                                          temperature=temperature,
+                                          top_k=top_k, eos_id=eos_id),
                 copy_pages=TF.copy_state_pages,
                 decode_paged_collect=lambda p, s, t, table, active:
                     TF.decode_paged_collect_fn(p, s, t, table, active, cfg),

@@ -415,6 +415,72 @@ def decode_paged_fn(params: Params, caches, token: Array, page_table: Array,
     return logits[:, 0], caches
 
 
+def decode_runahead_fn(params: Params, caches, token: Array,
+                       page_table: Array, active: Array, key: Array,
+                       remaining: Array, done: Array, cfg: ModelConfig, *,
+                       horizon: int, temperature: float, top_k: int,
+                       eos_id: int):
+    """Run-ahead decode: ``horizon`` fused micro-steps in one dispatch
+    (DESIGN.md §18) — a ``lax.scan`` whose body is exactly one vanilla
+    decode step: paged append + LUT decode attention via
+    :func:`decode_paged_fn`, one PRNG split, on-device sampling (the
+    same math as ``serve.core._sample``: argmax at temperature <= 0,
+    else temperature scaling + top-k masking + categorical), then
+    on-device EOS/budget masking. The engine fetches the whole
+    ``(horizon, S)`` token block with a single host sync instead of one
+    per token.
+
+    Carries: ``token (S,)`` the last sampled token per slot (fed at
+    micro-step 0), ``key`` the session PRNG key, ``remaining (S,)`` the
+    per-slot token budget left (``eff_max - done_tokens``), and
+    ``done (S,)`` slots frozen by an earlier horizon. A slot freezes
+    when it samples EOS or exhausts ``remaining``: it leaves ``active``,
+    so its cache stops advancing (``paged_append`` routes frozen lanes
+    to the scratch page — the pure residual/flush carry is what makes
+    quant-group boundary commits inside the scan safe) and its token
+    lane goes don't-care; the engine truncates its emission when the
+    block lands.
+
+    Bit-identity with the H=1 host loop is by construction: the key is
+    split once per micro-step in which *any* slot is live — the same
+    split points the host loop takes (one split per decode dispatch,
+    and no dispatch once every slot finished) — so greedy *and*
+    temperature>0 sampling reproduce the sequential token stream
+    exactly.
+
+    Returns ``(tokens (horizon, S), caches, token, key, done,
+    remaining)``; the trailing carries seed the next pipelined horizon
+    with no host round trip.
+    """
+
+    def micro_step(carry, _):
+        caches, tok, key, done, rem = carry
+        act = active & ~done
+        logits, caches = decode_paged_fn(params, caches, tok, page_table,
+                                         act, cfg)
+        nkey, sub = jax.random.split(key)
+        key = jnp.where(jnp.any(act), nkey, key)
+        if temperature <= 0.0:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            logits = logits / temperature
+            if top_k > 0:
+                vals, _ = jax.lax.top_k(logits, top_k)
+                logits = jnp.where(logits < vals[..., -1:], -1e30, logits)
+            nxt = jax.random.categorical(sub, logits).astype(jnp.int32)
+        nxt = jnp.where(act, nxt, tok)   # frozen slots hold their token
+        rem = rem - act.astype(jnp.int32)
+        done = done | (act & (rem <= 0))
+        if eos_id >= 0:
+            done = done | (act & (nxt == eos_id))
+        return (caches, nxt, key, done, rem), nxt
+
+    carry = (caches, token, key, done, remaining)
+    (caches, token, key, done, remaining), toks = jax.lax.scan(
+        micro_step, carry, None, length=horizon)
+    return toks, caches, token, key, done, remaining
+
+
 def decode_paged_collect_fn(params: Params, caches, token: Array,
                             page_table: Array, active: Array,
                             cfg: ModelConfig):

@@ -30,6 +30,19 @@ Typical interactive use::
 ``events()`` ends when the engine runs out of work; calling it again
 after more ``add_request()`` calls resumes the same session (same cache,
 same prefix index, same clock).
+
+**Run-ahead stream semantics** (``EngineCore(runahead=H)``, DESIGN.md
+§18): in decode-bound stretches the core batches H decode micro-steps
+into one device dispatch and emits that horizon's tokens when the block
+lands — typically on the *next* ``step()`` call, so a single step may
+yield zero events (the dispatch step) and the following one a burst.
+Horizon tokens reuse the speculative-span shape: per-token ordinals stay
+dense, every token of a horizon shares one clock stamp with
+``(span, span_ix)`` marking its position, and EOS/budget truncation
+happens before emission — so ``check_event_stream`` and
+``stream_latency_stats`` apply unchanged. A ``cancel()`` arriving while
+a horizon is in flight lands the block first: its token events are
+delivered ahead of the ``cancel`` event, never after it.
 """
 from __future__ import annotations
 

@@ -178,7 +178,7 @@ class ServeEngine:
             state = self.model.init_decode_state(b, self.max_len)
             t0 = time.monotonic()
             logits, state = self._prefill(self.params, batch, state)
-            logits.block_until_ready()
+            logits.block_until_ready()  # sync: static-engine prefill timing
             t_prefill = time.monotonic() - t0
 
             toks = []
@@ -194,7 +194,7 @@ class ServeEngine:
                     done = done | (tok == gen.eos_id)
                     tok = jnp.where(done, gen.eos_id, tok)
                 toks.append(tok)
-            jax.block_until_ready(tok)
+            jax.block_until_ready(tok)  # sync: static-engine decode timing
             t_decode = time.monotonic() - t0
         out = jnp.stack(toks, axis=1)
         n_dec = max(gen.max_new_tokens - 1, 1)
@@ -242,7 +242,8 @@ class EngineCore:
                  table_slicing: bool = True, prefix_cache: bool = False,
                  prefill_chunk: int = 0, prefill_budget: int = 0,
                  spec: Optional[SpecConfig] = None,
-                 qos: Optional[QosConfig] = None, chaos=None):
+                 qos: Optional[QosConfig] = None, chaos=None,
+                 runahead: int = 0):
         if model.decode_paged is None:
             raise ValueError(
                 f"family {model.cfg.family!r} has no paged decode path")
@@ -306,6 +307,24 @@ class EngineCore:
         # donate the paged state: page pools update in place each step
         self._decode = jax.jit(model.decode_paged, donate_argnums=(1,))
         self._sample = jax.jit(_sample, static_argnames=("gen",))
+        # run-ahead decode (DESIGN.md §18): when the horizon planner
+        # predicts no scheduling event for the next `runahead` steps, one
+        # lax.scan dispatch covers all of them — on-device sampling +
+        # EOS/budget masking, a single host sync per (H, slots) token
+        # block, and the next horizon chained off device-resident carries
+        # while the previous block is still in flight. 0/1 disables it.
+        self.runahead = int(runahead)
+        if self.runahead < 0:
+            raise ValueError(f"runahead must be >= 0, got {runahead}")
+        if self.runahead > 1:
+            if model.decode_runahead is None:
+                raise ValueError(
+                    f"family {model.cfg.family!r} has no run-ahead decode "
+                    "path (decode_runahead)")
+            self._runahead_fn = jax.jit(
+                model.decode_runahead, donate_argnums=(1,),
+                static_argnames=("horizon", "temperature", "top_k",
+                                 "eos_id"))
         # speculative decode (DESIGN.md §15): a host-side proposer guesses
         # up to spec.k tokens per slot; one verify dispatch scores the
         # whole span and commits only accepted tokens through the vanilla
@@ -393,6 +412,16 @@ class EngineCore:
         self.spec_steps = 0         # decode steps that verified >=1 draft
         self.spec_drafted = 0       # draft tokens sent to verification
         self.spec_accepted = 0      # draft tokens accepted
+        # run-ahead pipeline state (DESIGN.md §18): the in-flight horizon
+        # record (which carries its own optimistic per-slot budgets) and
+        # the host-vs-device attribution metrics
+        self._inflight: Optional[dict] = None
+        self._land_t = 0.0          # wall time the last horizon landed
+        self.runahead_horizons = 0
+        self.runahead_tokens = 0
+        self._gap_ewma = None       # host overlap per horizon (EWMA, s)
+        self._sync_wait_s = 0.0     # host time blocked on landing blocks
+        self._overlap_s = 0.0       # host time overlapped w/ device work
 
     # --- request intake ---------------------------------------------------
 
@@ -453,21 +482,27 @@ class EngineCore:
 
         Returns the ``cancel`` event ([] when ``rid`` is unknown or
         already finished — a documented no-op, never an error).
-        Host-side only — no device dispatch."""
+        Host-side only — no new device dispatch; an in-flight run-ahead
+        horizon is landed first (its token events precede the cancel in
+        the returned list), so a cancelled rid never emits tokens after
+        its terminal event and its pages are only released once the
+        device is done writing them."""
+        pre = self._reconcile_horizon() if self._inflight is not None \
+            else []
         for i, r in enumerate(self._arrivals):
             if r.rid == rid:
                 del self._arrivals[i]
-                return self._cancelled(r)
+                return pre + self._cancelled(r)
         summary = self.sched.cancel(rid)
         if summary is None:
-            return []
+            return pre
         req, slot = summary.req, summary.slot
         if slot >= 0:
             self._prefilling.pop(slot, None)
             self._eff_max.pop(rid, None)
         if self.spec is not None:
             self._proposer.release(rid)
-        return self._cancelled(req, slot)
+        return pre + self._cancelled(req, slot)
 
     def _cancelled(self, req: Request, slot: int = -1) -> list[TokenEvent]:
         req.state = CANCELLED
@@ -477,7 +512,8 @@ class EngineCore:
 
     @property
     def has_work(self) -> bool:
-        return bool(self._arrivals) or self.sched.has_work
+        return bool(self._arrivals) or self.sched.has_work or \
+            self._inflight is not None
 
     # --- compile helpers --------------------------------------------------
 
@@ -587,19 +623,29 @@ class EngineCore:
                         jnp.zeros((), jnp.int32),
                         sched.alloc.table()[0][:w],
                         jnp.zeros((), jnp.int32), jnp.asarray(c, jnp.int32))
-                    jax.block_until_ready(self._sample(logits, key, gen))
+                    jax.block_until_ready(self._sample(logits, key, gen))  # sync: warmup compile barrier
             else:
                 for tp in sorted({self._bucket(t) for t in prompt_lens}):
                     logits, state = self._prefill(
                         self.params, jnp.zeros((1, tp), jnp.int32), state,
                         jnp.zeros((), jnp.int32), sched.alloc.table()[0],
                         jnp.asarray(tp, jnp.int32))
-                    jax.block_until_ready(self._sample(logits, key, gen))
+                    jax.block_until_ready(self._sample(logits, key, gen))  # sync: warmup compile barrier
             for w in self._decode_widths():
                 logits, state = self._decode(
                     self.params, state, jnp.zeros((s,), jnp.int32),
                     sched.alloc.table()[:, :w], jnp.zeros((s,), bool))
-                jax.block_until_ready(self._sample(logits, key, gen))
+                jax.block_until_ready(self._sample(logits, key, gen))  # sync: warmup compile barrier
+                if self.runahead > 1:
+                    rtoks, state, _t, _k, _d, _r = self._runahead_fn(
+                        self.params, state, jnp.zeros((s,), jnp.int32),
+                        sched.alloc.table()[:, :w],
+                        jnp.zeros((s,), bool), key,
+                        jnp.zeros((s,), jnp.int32), jnp.zeros((s,), bool),
+                        horizon=self.runahead,
+                        temperature=gen.temperature, top_k=gen.top_k,
+                        eos_id=gen.eos_id)
+                    jax.block_until_ready(rtoks)  # sync: warmup compile barrier
                 if self.spec is not None:
                     for q in self._spec_q_buckets():
                         preds, _, state = self._verify(
@@ -608,7 +654,7 @@ class EngineCore:
                             jnp.zeros((s,), jnp.int32),
                             sched.alloc.table()[:, :w],
                             jnp.zeros((s,), bool))
-                        jax.block_until_ready(preds)
+                        jax.block_until_ready(preds)  # sync: warmup compile barrier
 
     # --- the step loop ----------------------------------------------------
 
@@ -631,6 +677,12 @@ class EngineCore:
             return intake + self._step() if intake else self._step()
 
     def _step(self) -> list[TokenEvent]:
+        if self._inflight is not None:
+            # a run-ahead horizon is in flight: chain the next horizon
+            # off its device-resident carries while it computes, then
+            # land it and reconcile its events (DESIGN.md §18). The
+            # phase machine only runs once the pipeline drains.
+            return self._advance_runahead()
         if self._phase == "begin":
             self._pump_arrivals()
             if not self.sched.has_work:
@@ -794,7 +846,9 @@ class EngineCore:
             jnp.asarray(tl, jnp.int32))
         self._key, sub = jax.random.split(self._key)
         tok = self._sample(logits, sub, self.gen)
-        tok0 = int(jax.block_until_ready(tok)[0])
+        # one numpy fetch for the whole dispatch (np.asarray blocks until
+        # the device is done), not a ready-barrier plus a scalar D2H
+        tok0 = int(np.asarray(tok)[0])  # sync: classic prefill first token
         dt = time.monotonic() - t0
         self.clock += dt
         if self._prefill_rate is not None:
@@ -835,7 +889,8 @@ class EngineCore:
             # final chunk: its last-token logits seed decode
             self._key, sub = jax.random.split(self._key)
             tok = self._sample(logits, sub, self.gen)
-            tok0 = int(jax.block_until_ready(tok)[0])
+            # single numpy fetch per dispatch (see _admit)
+            tok0 = int(np.asarray(tok)[0])  # sync: final-chunk first token
             dt = time.monotonic() - t0
             self.clock += dt
             if self._prefill_rate is not None:
@@ -843,7 +898,7 @@ class EngineCore:
             del self._prefilling[slot]
             self.sched.register_prefix(slot)
             return self._take_first_token(slot, tok0, tl)
-        jax.block_until_ready(logits)
+        jax.block_until_ready(logits)  # sync: chunk completion barrier (honest clock)
         dt = time.monotonic() - t0
         self.clock += dt
         if self._prefill_rate is not None:
@@ -891,6 +946,12 @@ class EngineCore:
             return []   # cancellation emptied the cycle mid-flight
         drafts: dict[int, list[int]] = {}
         spans = None
+        want_runahead = self._runahead_want()
+        if want_runahead:
+            # reserve the whole horizon's pages up front; a shortfall
+            # (pool pressure) drops this step back to the H=1 dispatch,
+            # which knows how to shed and preempt
+            spans = {sl: self.runahead for sl in sched.active}
         if self.spec is not None:
             # proposer work bills to the session clock: for ngram it is
             # microseconds of suffix matching, but a draft-model proposer
@@ -978,6 +1039,8 @@ class EngineCore:
         if self.spec is not None and any(drafts.get(sl) for sl in
                                          step_slots):
             return self._spec_dispatch(step_slots, drafts)
+        if want_runahead and self._runahead_ready(step_slots):
+            return self._runahead_dispatch(step_slots)
         return self._decode_dispatch(step_slots)
 
     def _decode_dispatch(self, step_slots: list[int]) -> list[TokenEvent]:
@@ -998,7 +1061,7 @@ class EngineCore:
             sched.alloc.table()[:, :w], jnp.asarray(mask))
         self._key, sub = jax.random.split(self._key)
         toks = np.asarray(
-            jax.block_until_ready(self._sample(logits, sub, self.gen)))
+            self._sample(logits, sub, self.gen))  # sync: H=1 decode token fetch
         step_s = time.monotonic() - t0
         self.clock += step_s
         self.decode_steps += 1
@@ -1021,6 +1084,204 @@ class EngineCore:
             if (self.gen.eos_id >= 0 and t == self.gen.eos_id) or \
                     req.done_tokens >= self._eff_max[req.rid]:
                 events += self._finish(sl)
+        return events
+
+    # --- run-ahead fused decode (DESIGN.md §18) ---------------------------
+
+    def _runahead_want(self) -> bool:
+        """Horizon-planner gate: run-ahead engages only when the next H
+        step boundaries are provably event-free — nothing queued to
+        admit, no prefill chunk due, and none of the subsystems that
+        make per-step scheduling decisions (spec, QoS, chaos, prefix
+        sharing, mesh placement) in play. Every other configuration
+        takes the H=1 dispatch unchanged, which is why all prior
+        bit-identity gates (spec, QoS, mesh, prefix A/Bs) are preserved
+        by construction."""
+        return (self.runahead > 1 and self.spec is None
+                and self.qos is None and self.chaos is None
+                and self.mesh is None and not self.prefix_cache
+                and not self._prefilling and not self._arrivals
+                and not self.sched.pending)
+
+    def _runahead_ready(self, step_slots: list[int]) -> bool:
+        """Per-slot hazard check after page reservation: every active
+        slot decodes this step and holds pages covering the tokens its
+        horizon can append (EOS and budget hazards are masked on
+        device; a page shortfall means pool pressure, so fall back to
+        the H=1 path, which can shed and preempt)."""
+        sched, g = self.sched, self.layout.page_size
+        if len(step_slots) != len(sched.active):
+            return False
+        for sl in step_slots:
+            req = sched.active[sl]
+            need = int(self._lengths[sl]) + min(
+                self.runahead, self._eff_max[req.rid] - req.done_tokens)
+            if sched.alloc.slot_pages(sl) * g < need:
+                return False
+        return True
+
+    def _runahead_dispatch(self, step_slots: list[int]) -> list[TokenEvent]:
+        """Dispatch one fresh run-ahead horizon from host-known carries
+        (next tokens, session key, per-slot budgets). Returns no events:
+        the host does not block on the block — tokens reconcile when it
+        lands (the next step, or a cancel arriving mid-flight)."""
+        s = self.layout.slots
+        mask = np.zeros((s,), bool)
+        mask[step_slots] = True
+        rem = np.zeros((s,), np.int32)
+        for sl in step_slots:
+            req = self.sched.active[sl]
+            rem[sl] = self._eff_max[req.rid] - req.done_tokens
+        self._dispatch_scan(
+            step_slots, jnp.asarray(self._next_tok), self._key,
+            jnp.zeros((s,), bool), jnp.asarray(rem), jnp.asarray(mask),
+            {sl: int(rem[sl]) for sl in step_slots},
+            {sl: int(self._lengths[sl]) for sl in step_slots})
+        return []
+
+    def _chain_dispatch(self, live: list[int]) -> None:
+        """Dispatch the next horizon directly off the in-flight one's
+        device-resident carries (final token, key, done mask, budgets)
+        — no host sync in between, so the device stays busy while the
+        host reconciles the previous block's events."""
+        blk = self._inflight
+        tok, key, done, rem = blk["carry"]
+        self._dispatch_scan(live, tok, key, done, rem, blk["mask"],
+                            {sl: blk["ahead_rem"][sl] for sl in live},
+                            {sl: blk["opt_len"][sl] for sl in live})
+
+    def _dispatch_scan(self, slots, tok, key, done, rem, mask,
+                       host_rem: dict, host_len: dict) -> None:
+        g, h = self.layout.page_size, self.runahead
+        cap = self.layout.tokens_per_slot
+        # width covers every page the horizon can touch (appends and
+        # attention reads up to len + H, clamped to slot capacity)
+        w = self._step_width(max(
+            (min(host_len[sl] + h, cap) - 1) // g + 1 for sl in slots))
+        t0 = time.monotonic()
+        toks, self.state, tok, key, done, rem = self._runahead_fn(
+            self.params, self.state, tok,
+            self.sched.alloc.table()[:, :w], mask, key, rem, done,
+            horizon=h, temperature=self.gen.temperature,
+            top_k=self.gen.top_k, eos_id=self.gen.eos_id)
+        # adopt the post-scan key without a sync: the scan split it
+        # exactly as H sequential host steps would have, so any later
+        # H=1 dispatch continues the same key stream
+        self._key = key
+        self._inflight = {
+            "toks": toks, "slots": list(slots),
+            "rem": host_rem, "len": host_len,
+            # optimistic carries for chaining: a slot that survives its
+            # horizon advanced exactly min(h, rem) tokens; one that
+            # finished is excluded from the next chain (budget) or
+            # skipped at reconcile (EOS — its device lane froze)
+            "ahead_rem": {sl: max(host_rem[sl] - h, 0) for sl in slots},
+            "opt_len": {sl: host_len[sl] + min(h, host_rem[sl])
+                        for sl in slots},
+            "carry": (tok, key, done, rem), "mask": mask,
+            "t0": t0, "t_disp": time.monotonic(),
+        }
+
+    def _advance_runahead(self) -> list[TokenEvent]:
+        """The async pipeline's per-step beat: optionally chain the next
+        horizon off the in-flight one's device carries, then land the
+        in-flight block and reconcile its TokenEvents. Chaining happens
+        *before* the landing sync, so host reconciliation overlaps the
+        next horizon's device compute."""
+        old = self._inflight
+        chained = False
+        if self._runahead_want():
+            live = [sl for sl in old["slots"]
+                    if old["ahead_rem"][sl] > 0
+                    and sl in self.sched.active]
+            if live:
+                g = self.layout.page_size
+                opt = self._lengths.copy()
+                for sl in live:
+                    opt[sl] = old["opt_len"][sl]
+                dead = [sl for sl in self.sched.active if sl not in live]
+                stalled = set(self.sched.ensure_pages(
+                    opt, skip=dead,
+                    spans={sl: self.runahead for sl in live}))
+                ok = not stalled and all(
+                    self.sched.alloc.slot_pages(sl) * g >=
+                    old["opt_len"][sl] + min(self.runahead,
+                                             old["ahead_rem"][sl])
+                    for sl in live)
+                if ok:
+                    self._chain_dispatch(live)
+                    chained = True
+        if not chained:
+            self._inflight = None
+        return self._reconcile_block(old)
+
+    def _reconcile_horizon(self) -> list[TokenEvent]:
+        """Forcibly land the in-flight horizon (cancel or any other
+        host-side mutation arriving mid-flight): sync, emit its events,
+        drain the pipeline."""
+        blk, self._inflight = self._inflight, None
+        return self._reconcile_block(blk)
+
+    def _reconcile_block(self, blk: dict) -> list[TokenEvent]:
+        """Land one horizon's (H, S) token block — the single host sync
+        for its H micro-steps — and replay the host-side bookkeeping the
+        H=1 loop does per step: per-token ordinals, horizon-shared clock
+        stamps with (span, span_ix) metadata, post-hoc truncation at EOS
+        or budget, finish + page reclamation on the first host step
+        after the block lands."""
+        sched, h = self.sched, self.runahead
+        t_sync = time.monotonic()
+        gap = t_sync - blk["t_disp"]   # host work overlapped with device
+        self._overlap_s += gap
+        self._gap_ewma = gap if self._gap_ewma is None else \
+            0.8 * self._gap_ewma + 0.2 * gap
+        toks = np.asarray(blk["toks"])  # sync: horizon block lands — one fetch per H tokens
+        now = time.monotonic()
+        self._sync_wait_s += now - t_sync
+        # wall time is partitioned across pipelined horizons: each bills
+        # from the later of its dispatch and the previous landing
+        step_s = now - max(blk["t0"], self._land_t)
+        self._land_t = now
+        self.clock += step_s
+        events: list[TokenEvent] = []
+        live = 0
+        for sl in blk["slots"]:
+            req = sched.active.get(sl)
+            if req is None or req.state != DECODING:
+                continue   # finished/cancelled before this block landed
+            live += 1
+            rem = blk["rem"][sl]
+            emit: list[int] = []
+            finished = False
+            for j in range(min(h, rem)):
+                t = int(toks[j, sl])
+                emit.append(t)
+                if self.gen.eos_id >= 0 and t == self.gen.eos_id:
+                    finished = True
+                    break
+            if len(emit) >= rem:
+                finished = True   # budget bound inside the horizon
+            span = len(emit)
+            # device lengths advanced once per live micro-step (the fed
+            # token's append) — EOS froze the lane right after its
+            # sample — so host and device lengths agree for every
+            # surviving slot; a finishing slot's pages are reclaimed
+            # here, the first host step after the block lands
+            self._lengths[sl] += span
+            for j, t in enumerate(emit):
+                req.out_tokens.append(t)
+                events.append(TokenEvent(
+                    "token", req.rid, self.clock, token=t, slot=sl,
+                    ordinal=req.done_tokens - 1, span=span, span_ix=j))
+            self._next_tok[sl] = emit[-1]
+            self.runahead_tokens += span
+            if finished:
+                events += self._finish(sl)
+        self.runahead_horizons += 1
+        self.decode_steps += h
+        self._step_times.append(step_s / h)
+        self._util.append(sched.utilization())
+        self._active_hist.append(live)
         return events
 
     # --- speculative decode (DESIGN.md §15) -------------------------------
@@ -1101,8 +1362,8 @@ class EngineCore:
         preds, n_acc, self.state = self._verify(
             self.params, self.state, jnp.asarray(toks), jnp.asarray(dlen),
             sched.alloc.table()[:, :w], jnp.asarray(mask))
-        preds = np.asarray(jax.block_until_ready(preds))
-        n_acc = np.asarray(n_acc)
+        preds = np.asarray(preds)   # sync: verify-span argmax block
+        n_acc = np.asarray(n_acc)   # sync: verify-span accept counts
         step_s = time.monotonic() - t0
         self.clock += step_s
         self.decode_steps += 1
@@ -1217,6 +1478,20 @@ class EngineCore:
             }
         if self.chaos is not None:
             res["chaos"] = self.chaos.stats()
+        if self.runahead > 1:
+            # host-vs-device attribution for the async pipeline: the
+            # dispatch-gap EWMA is host time per horizon overlapped with
+            # device compute; sync_wait is what the host still spends
+            # blocked on landing blocks (the residual per-token sync
+            # cost the run-ahead path exists to amortize)
+            res["runahead"] = {
+                "h": self.runahead,
+                "horizons": self.runahead_horizons,
+                "tokens": self.runahead_tokens,
+                "dispatch_gap_ewma_s": self._gap_ewma or 0.0,
+                "host_overlap_s": self._overlap_s,
+                "sync_wait_s": self._sync_wait_s,
+            }
         if self.spec is not None:
             res["spec"] = {
                 "mode": self.spec.mode,

@@ -63,6 +63,16 @@ class ContinuousBatchingEngine:
     injection. Both default to ``None`` — the engine is then
     bit-identical to the pre-QoS FCFS engine.
 
+    **Run-ahead fused decode** (``runahead=H > 1``, DESIGN.md §18): in
+    decode-bound stretches where the horizon planner predicts no
+    scheduling event, the core dispatches H fused micro-steps —
+    on-device sampling and EOS/budget masking — per device call,
+    pipelines the next horizon while a block is in flight, and
+    reconciles TokenEvents when each (H, slots) block lands. Greedy
+    outputs stay bit-identical to ``runahead=0`` by construction; spec,
+    QoS, chaos, mesh, and prefix-cache configurations fall back to the
+    H=1 dispatch untouched.
+
     Scheduling, paging, preemption, and the decode-step mechanics
     (width-sliced page tables, donated state, COW guard) all live in
     :class:`~repro.serve.core.EngineCore`; this class only adapts the
@@ -74,13 +84,13 @@ class ContinuousBatchingEngine:
                  mesh=None, rules: Optional[dict] = None,
                  table_slicing: bool = True, prefix_cache: bool = False,
                  prefill_chunk: int = 0, prefill_budget: int = 0,
-                 spec=None, qos=None, chaos=None):
+                 spec=None, qos=None, chaos=None, runahead: int = 0):
         self.core = EngineCore(
             model, params, max_slots=max_slots, max_len=max_len,
             num_pages=num_pages, mesh=mesh, rules=rules,
             table_slicing=table_slicing, prefix_cache=prefix_cache,
             prefill_chunk=prefill_chunk, prefill_budget=prefill_budget,
-            spec=spec, qos=qos, chaos=chaos)
+            spec=spec, qos=qos, chaos=chaos, runahead=runahead)
 
     # the knobs tests/benchmarks introspect, forwarded from the core
     @property
@@ -110,6 +120,10 @@ class ContinuousBatchingEngine:
     @property
     def table_slicing(self) -> bool:
         return self.core.table_slicing
+
+    @property
+    def runahead(self) -> int:
+        return self.core.runahead
 
     def warmup(self, prompt_lens: list[int],
                gen: Optional[GenerationConfig] = None) -> None:

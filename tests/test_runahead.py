@@ -1,0 +1,238 @@
+"""Run-ahead fused decode (DESIGN.md §18).
+
+The load-bearing property mirrors speculative decode's: **bit-identity
+by construction**. A run-ahead horizon is one ``lax.scan`` whose body
+replays exactly one vanilla decode step — same paged append, same LUT
+attention, same sampling op, and the *same RNG split points* (the key
+splits once per micro-step in which any slot is live, never after all
+finish) — so greedy AND temperature-sampled outputs must equal the H=1
+per-token dispatch engine token-for-token. Everything else here guards
+the horizon machinery around that: EOS mid-horizon truncation with page
+reclamation, cancel racing an in-flight block, quant-group-boundary
+commits inside the scan, the event-stream invariants on horizon-shared
+timestamps, and the fallback gates that keep spec/QoS/prefix-cache
+configurations on the per-token path.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.models import get_model
+from repro.serve import (
+    ContinuousBatchingEngine, EngineCore, GenerationConfig, Request,
+    StreamingEngine, check_event_stream, stream_latency_stats,
+)
+
+
+@pytest.fixture(scope="module")
+def smoke_model():
+    cfg = reduce_for_smoke(get_config("tinyllama-1.1b"))
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    return cfg, m, params
+
+
+def _requests(cfg, n=2, seed=5, prompt_len=12, max_new=24):
+    """All-arrive-at-once decode-bound workload: with ``n`` <= slots the
+    queue drains immediately and the horizon planner engages."""
+    rng = np.random.RandomState(seed)
+    return [Request(rid=i,
+                    prompt=rng.randint(0, cfg.vocab_size,
+                                       (prompt_len,)).astype(np.int32),
+                    max_new_tokens=max_new, arrival_time=i * 1e-3)
+            for i in range(n)]
+
+
+def _clone(reqs):
+    return [Request(rid=r.rid, prompt=r.prompt,
+                    max_new_tokens=r.max_new_tokens,
+                    arrival_time=r.arrival_time) for r in reqs]
+
+
+def _run(m, params, reqs, *, runahead=0, gen=None, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_len", 128)
+    eng = ContinuousBatchingEngine(m, params, runahead=runahead, **kw)
+    out = eng.run(_clone(reqs), gen or GenerationConfig())
+    return eng, out, {r.rid: list(r.out_tokens) for r in out["requests"]}
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity across horizons: greedy and sampled
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("h", [2, 4, 8])
+def test_greedy_bit_identical_across_horizons(smoke_model, h):
+    cfg, m, params = smoke_model
+    reqs = _requests(cfg)
+    _, base_out, base = _run(m, params, reqs)
+    _, out, toks = _run(m, params, reqs, runahead=h)
+    assert toks == base, f"runahead h={h} diverged from per-token decode"
+    ra = out["runahead"]
+    assert ra["horizons"] > 0, "horizon planner never engaged"
+    assert ra["tokens"] > 0
+    # every token is emitted exactly once whichever path produced it
+    assert out["total_tokens"] == base_out["total_tokens"]
+
+
+def test_sampled_bit_identical(smoke_model):
+    """temperature>0 + top_k: the scan must replay the host loop's RNG
+    split points exactly — one split per step in which any slot is live,
+    none after all slots finish — or sampled streams diverge."""
+    cfg, m, params = smoke_model
+    # staggered budgets so slots finish at different micro-steps
+    reqs = _requests(cfg, n=2, max_new=17)
+    reqs[1].max_new_tokens = 23
+    gen = GenerationConfig(temperature=0.8, top_k=8, seed=7)
+    _, _, base = _run(m, params, reqs, gen=gen)
+    _, out, toks = _run(m, params, reqs, runahead=4, gen=gen)
+    assert toks == base, "sampled outputs diverged: RNG split points moved"
+    assert out["runahead"]["horizons"] > 0
+
+
+def test_group_boundary_commit_inside_scan(smoke_model):
+    """Lengths crossing a quant-group (page) boundary mid-horizon: the
+    scan's paged appends must flush residual groups at the same commit
+    points as the per-token loop (paged_append is a pure carry)."""
+    cfg, m, params = smoke_model
+    g = cfg.quant.group_size
+    # appends cross into a fresh group after 3 decode tokens — inside
+    # the first H=8 horizon — and again every g tokens after that
+    reqs = _requests(cfg, prompt_len=2 * g - 3, max_new=2 * g + 4)
+    _, _, base = _run(m, params, reqs)
+    _, out, toks = _run(m, params, reqs, runahead=8)
+    assert toks == base, "group-boundary commits inside the scan diverged"
+    assert out["runahead"]["horizons"] > 0
+
+
+# ---------------------------------------------------------------------------
+# EOS mid-horizon: truncation + page reclamation
+# ---------------------------------------------------------------------------
+
+
+def test_eos_mid_horizon_truncates_and_reclaims(smoke_model):
+    cfg, m, params = smoke_model
+    reqs = _requests(cfg)
+    # pick an eos off the greedy stream so it fires mid-run, mid-horizon
+    _, _, base = _run(m, params, reqs)
+    eos = base[0][len(base[0]) // 2]
+    gen = GenerationConfig(eos_id=int(eos))
+    _, base_out, base_toks = _run(m, params, reqs, gen=gen)
+    eng, out, toks = _run(m, params, reqs, runahead=8, gen=gen)
+    assert toks == base_toks, "EOS truncation diverged from per-token loop"
+    assert any(len(t) < r.max_new_tokens
+               for t, r in zip(toks.values(), reqs)), \
+        "workload never hit EOS — test is vacuous"
+    # the horizon ran ahead past EOS on device; the over-run tokens must
+    # be dropped at reconcile and the slot's pages reclaimed on drain
+    alloc = eng.core.sched.alloc
+    assert alloc.free_pages == eng.core.layout.num_pages, \
+        "pages leaked after EOS mid-horizon"
+    term = check_event_stream(out["events"])
+    assert all(k == "finish" for k in term.values())
+
+
+# ---------------------------------------------------------------------------
+# Cancel racing an in-flight horizon
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_while_horizon_in_flight(smoke_model):
+    cfg, m, params = smoke_model
+    core = EngineCore(m, params, max_slots=2, max_len=128, runahead=4)
+    stream = StreamingEngine(core)
+    reqs = _requests(cfg, max_new=32)
+    for r in reqs:
+        stream.submit(r)
+    events = []
+    for _ in range(200):
+        events.extend(stream.step())
+        if core._inflight is not None:
+            break
+    assert core._inflight is not None, "no horizon ever went in flight"
+    # cancel must land the in-flight block first: rid 0's horizon tokens
+    # surface *before* its cancel event, never after (check_event_stream
+    # rejects any post-terminal event)
+    assert stream.cancel(reqs[0].rid)
+    assert core._inflight is None, "cancel left a horizon in flight"
+    while stream.has_work:
+        events.extend(stream.step())
+    term = check_event_stream(events)
+    assert term[reqs[0].rid] == "cancel"
+    assert term[reqs[1].rid] == "finish"
+    alloc = core.sched.alloc
+    assert alloc.free_pages == core.layout.num_pages, \
+        "pages leaked after cancel mid-horizon"
+
+
+# ---------------------------------------------------------------------------
+# Event-stream semantics of horizon blocks
+# ---------------------------------------------------------------------------
+
+
+def test_horizon_events_share_timestamps(smoke_model):
+    """A landed block emits its kept tokens as one span: shared clock
+    stamp, (span, span_ix) metadata, dense ordinals — the same shape
+    speculative spans use, so the stream checkers apply unchanged."""
+    cfg, m, params = smoke_model
+    reqs = _requests(cfg)
+    _, out, _ = _run(m, params, reqs, runahead=4)
+    check_event_stream(out["events"])
+    spans = [ev for ev in out["events"]
+             if ev.kind in ("first_token", "token") and ev.span > 1]
+    assert spans, "no multi-token horizon spans in the stream"
+    by_key = {}
+    for ev in spans:
+        by_key.setdefault((ev.rid, ev.t), []).append(ev)
+    multi = [evs for evs in by_key.values() if len(evs) > 1]
+    assert multi, "horizon tokens never shared a timestamp"
+    for evs in multi:
+        assert [e.span_ix for e in evs] == list(range(len(evs)))
+        assert len({e.span for e in evs}) == 1
+    lat = stream_latency_stats(out["events"], reqs)
+    assert lat["itl_s"]["n"] > 0
+    assert lat["itl_s"]["p50"] >= 0.0   # intra-span gaps clamp to ~0
+
+
+# ---------------------------------------------------------------------------
+# Fallback gates: incompatible configs stay on the per-token path
+# ---------------------------------------------------------------------------
+
+
+def test_fallback_configs_never_engage(smoke_model):
+    cfg, m, params = smoke_model
+    reqs = _requests(cfg, n=3, max_new=12)
+    _, _, base = _run(m, params, reqs, max_slots=3)
+
+    from repro.serve import QosConfig
+    from repro.spec import SpecConfig
+    for kw in (dict(spec=SpecConfig(mode="ngram", k=4)),
+               dict(qos=QosConfig(ttft_slo=10.0)),
+               dict(prefix_cache=True, prefill_chunk=32)):
+        _, out, toks = _run(m, params, reqs, runahead=4, max_slots=3, **kw)
+        assert out["runahead"]["horizons"] == 0, \
+            f"runahead engaged under incompatible config {kw}"
+        assert toks == base, f"fallback path diverged under {kw}"
+
+
+def test_oversubscribed_pool_falls_back(smoke_model):
+    """When the pool can't pre-reserve a full horizon the planner falls
+    back to H=1 (which can shed/preempt) instead of stalling — outputs
+    still match the per-token engine on the same undersized pool."""
+    cfg, m, params = smoke_model
+    g = cfg.quant.group_size
+    reqs = _requests(cfg, n=2, max_new=16)
+    pages = 2 * ((12 + 16) // g + 1)   # just enough to finish, no slack
+    kw = dict(max_slots=2, max_len=64, num_pages=pages)
+    _, _, base = _run(m, params, reqs, **kw)
+    _, out, toks = _run(m, params, reqs, runahead=8, **kw)
+    assert toks == base
+
+
+def test_invalid_runahead_rejected(smoke_model):
+    _, m, params = smoke_model
+    with pytest.raises(ValueError):
+        EngineCore(m, params, max_slots=2, max_len=64, runahead=-1)
